@@ -1,0 +1,60 @@
+"""Shared helpers for the Level-1 (paper-figure) benchmark modules."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+from repro.core import (HETERO_SYSTEMS, HOMO_SYSTEMS, SYSTEMS, SimResult,
+                        build_scenario, dream_full, run_planaria, run_sim)
+from repro.core.baselines import FCFSScheduler, VeltairLikeScheduler
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+DURATION_S = 6.0
+ALL_SCENARIOS = ("VR_Gaming", "AR_Call", "Drone_Outdoor", "Drone_Indoor",
+                 "AR_Social")
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    xs = np.maximum(xs, 1e-9)
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def run_cell(scenario: str, system: str, scheduler: str,
+             cascade_prob: float = 0.5, duration_s: float = DURATION_S,
+             seed: int = 0, **sched_kw) -> SimResult:
+    """One (scenario, system, scheduler) simulation."""
+    scn = build_scenario(scenario, cascade_prob)
+    if scheduler == "Planaria":
+        return run_planaria(scn, system, duration_s=duration_s, seed=seed)
+    factories: dict[str, Callable] = {
+        "FCFS": lambda: FCFSScheduler(),
+        "Veltair": lambda: VeltairLikeScheduler(),
+        "DREAM": lambda: dream_full(seed=seed, **sched_kw),
+    }
+    if scheduler in factories:
+        return run_sim(scn, system, factories[scheduler],
+                       duration_s=duration_s, seed=seed)
+    raise KeyError(scheduler)
+
+
+def save_artifact(name: str, payload) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0
+        return False

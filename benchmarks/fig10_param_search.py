@@ -1,0 +1,84 @@
+"""Figures 10 + 11: (alpha, beta) search trajectories and convergence.
+
+The offline radius-shrinking search (Section 3.6) on four workload-change
+cases vs a 9x9 grid-search global optimum over [0,2]^2. Paper claims:
+converges within ~2% of the global optimum; >=25% UXCost improvement in
+two steps; within 2% by five steps.
+"""
+from __future__ import annotations
+
+from repro.core import build_scenario, grid_search, optimize_params, run_sim
+from repro.core.scheduler import DreamScheduler
+
+from .common import save_artifact
+
+SYSTEM = "4K_1OS2WS"
+CASES = (
+    ("IDLE->VR_Gaming", "VR_Gaming", None),
+    ("IDLE->AR_Call", "AR_Call", None),
+    ("IDLE->AR_Social", "AR_Social", None),
+    ("VR_Gaming->AR_Social", "AR_Social", "VR_Gaming"),
+)
+EVAL_DURATION = 2.0   # short window per evaluation (the paper's T_exec)
+
+
+def _eval_fn(scenario: str, seed: int = 0):
+    scn = build_scenario(scenario, 0.5)
+
+    def ev(alpha: float, beta: float) -> float:
+        r = run_sim(
+            scn, SYSTEM,
+            lambda: DreamScheduler(alpha=alpha, beta=beta, adaptivity=False,
+                                   frame_drop=False, supernet=False),
+            duration_s=EVAL_DURATION, seed=seed)
+        return r.uxcost
+
+    return ev
+
+
+def run(seed: int = 0) -> dict:
+    cases_out = []
+    locked: dict[str, tuple[float, float]] = {}
+    for name, scenario, warm_from in CASES:
+        ev = _eval_fn(scenario, seed)
+        best_p, best_c, grid = grid_search(ev, n=7)
+        init = locked.get(warm_from) if warm_from else None
+        trace = optimize_params(ev, init=init, seed=seed)
+        found_p, found_c = trace.best
+        locked[scenario] = found_p
+        # convergence profile: best-so-far after each step
+        best_so_far = []
+        cur = float("inf")
+        for c in trace.costs:
+            cur = min(cur, c)
+            best_so_far.append(cur)
+        cases_out.append({
+            "case": name,
+            "global_opt": {"params": best_p, "uxcost": best_c},
+            "found": {"params": found_p, "uxcost": found_c},
+            "gap": (found_c - best_c) / best_c if best_c > 0 else 0.0,
+            "steps": len(trace.costs),
+            "evals": trace.evals,
+            "best_so_far": best_so_far,
+            "grid_min": float(grid.min()),
+            "grid_max": float(grid.max()),
+        })
+    out = {"cases": cases_out,
+           "mean_gap": sum(c["gap"] for c in cases_out) / len(cases_out)}
+    save_artifact("fig10_param_search", out)
+    return out
+
+
+def main() -> None:
+    out = run()
+    print("fig10/11: (alpha, beta) search vs grid-search global optimum")
+    for c in out["cases"]:
+        print(f"  {c['case']:>22s} found={c['found']['uxcost']:8.4f} "
+              f"opt={c['global_opt']['uxcost']:8.4f} "
+              f"gap={c['gap']*100:5.1f}% steps={c['steps']}")
+    print(f"  mean gap to global optimum: {out['mean_gap']*100:.1f}% "
+          f"(paper: ~2%)")
+
+
+if __name__ == "__main__":
+    main()

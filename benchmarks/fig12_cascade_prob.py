@@ -1,0 +1,49 @@
+"""Figure 12: UXCost vs ML-cascade trigger probability (load sweep).
+
+VR_Gaming / AR_Social on 4K heterogeneous systems with cascade probability
+50% -> 99%. Paper: DREAM's advantage grows with system load; smart frame
+drop and Supernet switching contribute most under the heaviest load.
+"""
+from __future__ import annotations
+
+from repro.core import build_scenario, dream_full, dream_mapscore, run_sim
+
+from .common import DURATION_S, run_cell, save_artifact
+
+SCENARIOS = ("VR_Gaming", "AR_Social")
+SYSTEMS_FIG12 = ("4K_1WS2OS", "4K_1OS2WS")
+PROBS = (0.5, 0.7, 0.9, 0.99)
+
+
+def run(duration_s: float = DURATION_S, seed: int = 0) -> dict:
+    cells = []
+    for scenario in SCENARIOS:
+        for system in SYSTEMS_FIG12:
+            for p in PROBS:
+                row = {"scenario": scenario, "system": system, "prob": p}
+                for sched in ("Veltair", "Planaria", "DREAM"):
+                    r = run_cell(scenario, system, sched, cascade_prob=p,
+                                 duration_s=duration_s, seed=seed)
+                    row[sched] = r.uxcost
+                scn = build_scenario(scenario, p)
+                r_map = run_sim(scn, system, lambda: dream_mapscore(seed),
+                                duration_s=duration_s, seed=seed)
+                row["DREAM-MapScore"] = r_map.uxcost
+                cells.append(row)
+    out = {"cells": cells}
+    save_artifact("fig12_cascade_prob", out)
+    return out
+
+
+def main() -> None:
+    out = run()
+    print("fig12: UXCost vs cascade probability")
+    for c in out["cells"]:
+        print(f"  {c['scenario']:>10s} {c['system']:>10s} p={c['prob']:.2f} "
+              f"Veltair={c['Veltair']:8.3f} Planaria={c['Planaria']:8.3f} "
+              f"DREAM-Map={c['DREAM-MapScore']:8.3f} "
+              f"DREAM-Full={c['DREAM']:8.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Figure 13: optimizing DLV-only or energy-only vs UXCost.
+
+The (alpha, beta) search is repeated with three objectives on VR_Gaming and
+AR_Social; optimizing either single metric degrades the other (paper: up to
++41.9% DLV when optimizing energy; UXCost balances both).
+"""
+from __future__ import annotations
+
+from repro.core import build_scenario, optimize_params, run_sim
+from repro.core.scheduler import DreamScheduler
+
+from .common import save_artifact
+
+SYSTEM = "4K_1WS2OS"
+SCENARIOS = ("VR_Gaming", "AR_Social")
+EVAL_DURATION = 2.0
+
+
+def _measure(scenario: str, alpha: float, beta: float, seed: int = 0):
+    scn = build_scenario(scenario, 0.5)
+    r = run_sim(
+        scn, SYSTEM,
+        lambda: DreamScheduler(alpha=alpha, beta=beta, adaptivity=False,
+                               frame_drop=False, supernet=False),
+        duration_s=EVAL_DURATION, seed=seed)
+    return r
+
+
+def run(seed: int = 0) -> dict:
+    rows = []
+    for scenario in SCENARIOS:
+        per_obj = {}
+        for objective in ("uxcost", "dlv", "energy"):
+            def ev(a: float, b: float) -> float:
+                r = _measure(scenario, a, b, seed)
+                if objective == "dlv":
+                    return r.dlv_rate + 1e-6
+                if objective == "energy":
+                    return r.norm_energy + 1e-6
+                return r.uxcost
+            trace = optimize_params(ev, seed=seed)
+            (a, b), _ = trace.best
+            r = _measure(scenario, a, b, seed)
+            per_obj[objective] = {"alpha": a, "beta": b,
+                                  "uxcost": r.uxcost, "dlv": r.dlv_rate,
+                                  "energy": r.norm_energy}
+        base = per_obj["uxcost"]
+        rows.append({
+            "scenario": scenario,
+            "objectives": per_obj,
+            "dlv_opt_energy_increase":
+                per_obj["dlv"]["energy"] / max(base["energy"], 1e-9) - 1,
+            "energy_opt_dlv_increase":
+                per_obj["energy"]["dlv"] / max(base["dlv"], 1e-9) - 1,
+        })
+    out = {"rows": rows}
+    save_artifact("fig13_metric_ablation", out)
+    return out
+
+
+def main() -> None:
+    out = run()
+    print("fig13: single-metric optimization vs UXCost optimization")
+    for r in out["rows"]:
+        print(f"  {r['scenario']}:")
+        for obj, v in r["objectives"].items():
+            print(f"    opt={obj:>7s} (a={v['alpha']:.2f}, b={v['beta']:.2f})"
+                  f" uxcost={v['uxcost']:8.4f} dlv={v['dlv']:.3f} "
+                  f"energy={v['energy']:.3f}")
+        print(f"    dlv-only optimization raises energy by "
+              f"{r['dlv_opt_energy_increase']*100:+.1f}%; energy-only "
+              f"raises DLV by {r['energy_opt_dlv_increase']*100:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Figure 7: UXCost / DLV / energy on heterogeneous hardware, all scenarios.
+
+Paper claims (geomean over scenarios and hardware): DREAM cuts UXCost by
+32.2% vs Planaria and 50.0% vs Veltair (up to 80.8% / 97.6%).
+"""
+from __future__ import annotations
+
+from repro.core import HETERO_SYSTEMS
+
+from .common import ALL_SCENARIOS, DURATION_S, geomean, run_cell, save_artifact
+
+SCHEDULERS = ("FCFS", "Veltair", "Planaria", "DREAM")
+
+
+def run(systems=HETERO_SYSTEMS, duration_s: float = DURATION_S,
+        seed: int = 0, tag: str = "fig7_heterogeneous") -> dict:
+    cells = []
+    for scenario in ALL_SCENARIOS:
+        for system in systems:
+            row = {"scenario": scenario, "system": system}
+            for sched in SCHEDULERS:
+                r = run_cell(scenario, system, sched, duration_s=duration_s,
+                             seed=seed)
+                row[sched] = {"uxcost": r.uxcost, "dlv": r.dlv_rate,
+                              "energy": r.norm_energy, "frames": r.frames}
+            cells.append(row)
+    summary = {}
+    for sched in SCHEDULERS:
+        summary[sched] = geomean(c[sched]["uxcost"] for c in cells)
+    vs = {
+        "vs_planaria": 1 - summary["DREAM"] / summary["Planaria"],
+        "vs_veltair": 1 - summary["DREAM"] / summary["Veltair"],
+        "vs_fcfs": 1 - summary["DREAM"] / summary["FCFS"],
+    }
+    out = {"cells": cells, "geomean_uxcost": summary, "dream_reduction": vs,
+           "paper_claims": {"vs_planaria": 0.322, "vs_veltair": 0.500}}
+    save_artifact(tag, out)
+    return out
+
+
+def main() -> None:
+    out = run()
+    print("fig7: UXCost on heterogeneous hardware")
+    for c in out["cells"]:
+        vals = " ".join(f"{s}={c[s]['uxcost']:8.3f}" for s in SCHEDULERS)
+        print(f"  {c['scenario']:>14s} {c['system']:>10s} {vals}")
+    gm = out["geomean_uxcost"]
+    print("  geomean:", {k: round(v, 4) for k, v in gm.items()})
+    red = out["dream_reduction"]
+    print(f"  DREAM vs Planaria: {red['vs_planaria']*100:.1f}% "
+          f"(paper 32.2%) | vs Veltair: {red['vs_veltair']*100:.1f}% "
+          f"(paper 50.0%)")
+
+
+if __name__ == "__main__":
+    main()

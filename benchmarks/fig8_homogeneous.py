@@ -1,0 +1,36 @@
+"""Figure 8: UXCost on homogeneous hardware.
+
+Paper observation: the DREAM advantage shrinks when compute is abundant
+(8K homogeneous) — scheduling matters most under constrained resources —
+and the heterogeneous-hardware gap (fig7) exceeds the homogeneous one.
+"""
+from __future__ import annotations
+
+from repro.core import HOMO_SYSTEMS
+
+from . import fig7_heterogeneous as f7
+from .common import DURATION_S, save_artifact
+
+
+def run(duration_s: float = DURATION_S, seed: int = 0) -> dict:
+    out = f7.run(systems=HOMO_SYSTEMS, duration_s=duration_s, seed=seed,
+                 tag="fig8_homogeneous")
+    return out
+
+
+def main() -> None:
+    out = run()
+    print("fig8: UXCost on homogeneous hardware")
+    for c in out["cells"]:
+        vals = " ".join(f"{s}={c[s]['uxcost']:8.3f}"
+                        for s in f7.SCHEDULERS)
+        print(f"  {c['scenario']:>14s} {c['system']:>10s} {vals}")
+    gm = out["geomean_uxcost"]
+    print("  geomean:", {k: round(v, 4) for k, v in gm.items()})
+    red = out["dream_reduction"]
+    print(f"  DREAM vs Planaria: {red['vs_planaria']*100:.1f}% | "
+          f"vs Veltair: {red['vs_veltair']*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Figure 9: per-optimization UXCost improvement breakdown.
+
+VR_Gaming + AR_Social (the Supernet scenarios) on 4K and 8K heterogeneous
+systems. Variants: fixed (alpha=beta=1, no adaptivity) -> DREAM-MapScore
+(online param optimization) -> DREAM-SmartDrop (+frame drop) -> DREAM-Full
+(+Supernet switching). Paper: param opt alone -49.2% (4K) / -21.0% (8K);
+smart drop ~-16.5%/-13.8%; Supernet switch a further 6-9%.
+"""
+from __future__ import annotations
+
+from repro.core import (DreamScheduler, build_scenario, dream_full,
+                        dream_mapscore, dream_smartdrop, run_sim)
+
+from .common import DURATION_S, geomean, save_artifact
+
+SCENARIOS = ("VR_Gaming", "AR_Social")
+SYSTEMS_FIG9 = ("4K_1WS2OS", "4K_1OS2WS", "8K_1WS2OS", "8K_1OS2WS")
+
+VARIANTS = {
+    "fixed": lambda seed: DreamScheduler(adaptivity=False, frame_drop=False,
+                                         supernet=False, seed=seed),
+    "DREAM-MapScore": lambda seed: dream_mapscore(seed=seed),
+    "DREAM-SmartDrop": lambda seed: dream_smartdrop(seed=seed),
+    "DREAM-Full": lambda seed: dream_full(seed=seed),
+}
+
+
+def run(duration_s: float = DURATION_S, seed: int = 0) -> dict:
+    cells = []
+    for scenario in SCENARIOS:
+        for system in SYSTEMS_FIG9:
+            scn = build_scenario(scenario, 0.5)
+            row = {"scenario": scenario, "system": system}
+            for name, mk in VARIANTS.items():
+                r = run_sim(scn, system, lambda mk=mk: mk(seed),
+                            duration_s=duration_s, seed=seed)
+                row[name] = {"uxcost": r.uxcost, "dlv": r.dlv_rate,
+                             "drops": r.drops,
+                             "variants": sum(
+                                 v for k, v in r.variant_counts.items()
+                                 if "@" in k)}
+            cells.append(row)
+    gm = {name: geomean(c[name]["uxcost"] for c in cells)
+          for name in VARIANTS}
+    out = {
+        "cells": cells,
+        "geomean_uxcost": gm,
+        "improvement_vs_fixed": {
+            name: 1 - gm[name] / gm["fixed"] for name in VARIANTS},
+    }
+    save_artifact("fig9_breakdown", out)
+    return out
+
+
+def main() -> None:
+    out = run()
+    print("fig9: optimization breakdown (geomean UXCost)")
+    for name, v in out["geomean_uxcost"].items():
+        imp = out["improvement_vs_fixed"][name]
+        print(f"  {name:>16s} uxcost={v:8.4f} vs-fixed={imp*100:+6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md section source).
+
+Reads benchmarks/artifacts/dryrun/single__*.json (the single-pod mesh; the
+multi-pod pass only proves the pod axis shards) and prints, per
+(arch x shape): the three roofline terms in seconds, the dominant term,
+MODEL_FLOPS / HLO_FLOPs (useful-compute ratio), and bytes/device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import ARTIFACT_DIR, save_artifact
+
+DRYRUN_DIR = os.path.join(ARTIFACT_DIR, "dryrun")
+
+
+def load(mesh: str = "single") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"{mesh}__*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run() -> dict:
+    rows = load("single")
+    table = []
+    for r in rows:
+        if r.get("status") != "ok":
+            table.append({"arch": r["arch"], "shape": r["shape"],
+                          "status": r.get("status", "?"),
+                          "error": r.get("error", "")[:100]})
+            continue
+        t = r["terms_s"]
+        total = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        table.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "dominant": r["dominant"],
+            "roofline_fraction": t["compute_s"] / total if total else 0.0,
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "bytes_per_dev_gb": r["memory"]["temp_bytes"] / 1e9,
+        })
+    multi = load("multipod")
+    out = {
+        "single_pod": table,
+        "multipod_ok": sum(1 for r in multi if r.get("status") == "ok"),
+        "multipod_total": len(multi),
+    }
+    save_artifact("roofline", out)
+    return out
+
+
+def main() -> None:
+    out = run()
+    print("roofline (single-pod 16x16 mesh; terms in ms/step):")
+    hdr = (f"  {'arch':>24s} {'shape':<12s} {'compute':>9s} {'memory':>9s} "
+           f"{'coll':>9s} {'dom':<10s} {'RL-frac':>7s} {'useful':>7s}")
+    print(hdr)
+    for r in out["single_pod"]:
+        if r["status"] != "ok":
+            print(f"  {r['arch']:>24s} {r['shape']:<12s} {r['status']}: "
+                  f"{r.get('error', '')}")
+            continue
+        print(f"  {r['arch']:>24s} {r['shape']:<12s} "
+              f"{r['compute_s']*1e3:9.2f} {r['memory_s']*1e3:9.2f} "
+              f"{r['collective_s']*1e3:9.2f} {r['dominant']:<10s} "
+              f"{r['roofline_fraction']*100:6.1f}% "
+              f"{r['useful_flops_ratio']*100:6.1f}%")
+    print(f"  multipod: {out['multipod_ok']}/{out['multipod_total']} "
+          f"cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark aggregator: one module per paper figure + roofline + kernels.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig7 roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = (
+    ("fig2", "benchmarks.fig2_static_vs_dynamic"),
+    ("fig7", "benchmarks.fig7_heterogeneous"),
+    ("fig8", "benchmarks.fig8_homogeneous"),
+    ("fig9", "benchmarks.fig9_breakdown"),
+    ("fig10", "benchmarks.fig10_param_search"),
+    ("fig12", "benchmarks.fig12_cascade_prob"),
+    ("fig13", "benchmarks.fig13_metric_ablation"),
+    ("fig14", "benchmarks.fig14_supernet"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline", "benchmarks.roofline"),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of benchmark tags to run")
+    args = ap.parse_args()
+    import importlib
+    failures = []
+    for tag, modname in MODULES:
+        if args.only and tag not in args.only:
+            continue
+        print(f"\n===== {tag} ({modname}) =====", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures.append((tag, repr(e)))
+            print(f"  FAILED: {e!r}")
+        print(f"  [{tag}] {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print("\nFAILED benchmarks:", failures)
+        sys.exit(1)
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

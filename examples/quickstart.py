@@ -1,0 +1,37 @@
+"""Quickstart: schedule an RTMM workload scenario with DREAM in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (build_scenario, dream_full, run_planaria, run_sim)
+from repro.core.baselines import FCFSScheduler, VeltairLikeScheduler
+
+SCENARIO = "AR_Call"            # keyword spotting -> translation + SkipNet
+SYSTEM = "4K_1WS2OS"            # 1 big WS + 2 small OS sub-accelerators
+
+
+def main() -> None:
+    scn = build_scenario(SCENARIO, cascade_prob=0.5)
+    print(f"scenario {SCENARIO}: "
+          + ", ".join(f"{m.model.name}@{m.fps:.0f}fps" for m in scn.models))
+
+    results = [
+        run_sim(scn, SYSTEM, FCFSScheduler, duration_s=4.0),
+        run_sim(scn, SYSTEM, VeltairLikeScheduler, duration_s=4.0),
+        run_planaria(scn, SYSTEM, duration_s=4.0),
+        run_sim(scn, SYSTEM, dream_full, duration_s=4.0),
+    ]
+    print(f"\n{'scheduler':>12s} {'UXCost':>9s} {'DLV':>7s} "
+          f"{'energy':>7s} {'frames':>7s} {'drops':>6s}")
+    for r in results:
+        print(f"{r.scheduler:>12s} {r.uxcost:9.4f} {r.dlv_rate:7.3f} "
+              f"{r.norm_energy:7.3f} {r.frames:7d} {r.drops:6d}")
+    best = min(results, key=lambda r: r.uxcost)
+    print(f"\nlowest UXCost: {best.scheduler}")
+
+
+if __name__ == "__main__":
+    main()

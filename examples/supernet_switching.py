@@ -1,0 +1,44 @@
+"""Supernet switching under load (Section 4.5.1 / Figure 14, live demo).
+
+Runs the same scenario twice in the Level-1 simulator — light load (50%
+cascade) and heavy load (99% cascade) — and prints which Once-for-All
+subnet the DREAM dispatcher selected for the context-understanding model,
+plus the UXCost with and without switching.
+
+    PYTHONPATH=src python examples/supernet_switching.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import build_scenario, dream_full, dream_smartdrop, run_sim
+
+SYSTEM = "4K_1WS2OS"
+
+
+def subnet_breakdown(r):
+    counts = {k: v for k, v in r.variant_counts.items()
+              if k.startswith("ctx_ofa")}
+    total = sum(counts.values())
+    return {k: v / total for k, v in sorted(counts.items())} if total else {}
+
+
+def main() -> None:
+    for prob, label in ((0.5, "light load (50% cascade)"),
+                        (0.99, "heavy load (99% cascade)")):
+        scn = build_scenario("AR_Social", prob)
+        with_sw = run_sim(scn, SYSTEM, dream_full, duration_s=6.0)
+        without = run_sim(scn, SYSTEM, dream_smartdrop, duration_s=6.0)
+        print(f"\n{label}:")
+        print(f"  UXCost with switching    = {with_sw.uxcost:8.4f} "
+              f"(DLV {with_sw.dlv_rate:.3f})")
+        print(f"  UXCost without switching = {without.uxcost:8.4f} "
+              f"(DLV {without.dlv_rate:.3f})")
+        print("  subnet selection:")
+        for name, frac in subnet_breakdown(with_sw).items():
+            tag = "original" if "@" not in name else name.split("@")[1]
+            print(f"    {tag:>9s}: {frac*100:5.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Train a language model end-to-end on the synthetic pipeline.
+
+Default: a ~1M-param GPT-style model for 300 steps on CPU (~2 min), with
+checkpointing and resume. ``--preset 100m`` selects a ~124M-parameter
+config (the deliverable-scale run — use on a real machine with time).
+
+    PYTHONPATH=src python examples/train_lm.py
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --fail-at 150
+    PYTHONPATH=src python examples/train_lm.py --resume auto   # continue
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import ArchConfig
+from repro.data import SyntheticLMData
+from repro.distributed import FaultInjector, SimulatedPreemption
+from repro.training import OptimConfig, TrainConfig, Trainer
+
+PRESETS = {
+    # ~1M params: CPU-friendly demo
+    "tiny": ArchConfig(
+        name="lm-tiny", family="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=4, d_ff=512, vocab_size=512,
+        dtype="float32", scan_layers=False),
+    # ~124M params: GPT-2-small-class (the "train ~100M" deliverable)
+    "100m": ArchConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=12, d_ff=3072, vocab_size=32768,
+        dtype="float32", scan_layers=True, remat="dots"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", default="never",
+                    choices=["auto", "never", "must"])
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    n_params = None
+    data = SyntheticLMData(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                           global_batch=args.batch, seed=0)
+    trainer = Trainer(
+        cfg=cfg,
+        tcfg=TrainConfig(optim=OptimConfig(
+            learning_rate=args.lr, warmup_steps=max(args.steps // 10, 1),
+            total_steps=args.steps)),
+        data=iter(data),
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=25,
+        fault_injector=(FaultInjector((args.fail_at,))
+                        if args.fail_at is not None else None),
+    )
+    trainer.init_or_resume(resume=args.resume)
+    import jax
+    n_params = sum(x.size for x in jax.tree.leaves(
+        trainer.state["params"]))
+    print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+    try:
+        hist = trainer.run(args.steps)
+    except SimulatedPreemption as e:
+        print(f"[train_lm] {e} — rerun with --resume auto to recover "
+              f"from {args.ckpt_dir}")
+        return
+    print(f"[train_lm] loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"(acc {hist[-1]['accuracy']:.3f}) over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: DREAM RTMM scheduler (Level 1) + multi-pod JAX framework (Level 2)."""
+__version__ = "1.0.0"

@@ -1,0 +1,28 @@
+"""DREAM core: the paper's scheduler, metrics, workloads and simulator."""
+from .types import (Accelerator, Dataflow, Layer, ModelGraph, ModelSpec, OpType,
+                    Scenario, SYSTEMS, HETERO_SYSTEMS, HOMO_SYSTEMS)
+from .costmodel import (CostTable, build_cost_table, build_tables,
+                        layer_energy_j, layer_latency_s)
+from .mapscore import MapScoreParams, mapscore, togo_seconds, min_togo_seconds
+from .uxcost import WindowStats, uxcost, rate_dlv, norm_energy
+from .simulator import Dispatch, Job, SchedulerBase, SimResult, Simulator, run_sim
+from .scheduler import (DreamScheduler, dream_mapscore, dream_smartdrop,
+                        dream_full, AdaptivityState)
+from .baselines import (FCFSScheduler, StaticFCFSScheduler, VeltairLikeScheduler,
+                        PlanariaSimulator, run_planaria)
+from .adaptivity import optimize_params, grid_search, SearchTrace
+from .workloads import SCENARIOS, build_scenario
+
+__all__ = [
+    "Accelerator", "Dataflow", "Layer", "ModelGraph", "ModelSpec", "OpType",
+    "Scenario", "SYSTEMS", "HETERO_SYSTEMS", "HOMO_SYSTEMS",
+    "CostTable", "build_cost_table", "build_tables", "layer_energy_j",
+    "layer_latency_s", "MapScoreParams", "mapscore", "togo_seconds",
+    "min_togo_seconds", "WindowStats", "uxcost", "rate_dlv", "norm_energy",
+    "Dispatch", "Job", "SchedulerBase", "SimResult", "Simulator", "run_sim",
+    "DreamScheduler", "dream_mapscore", "dream_smartdrop", "dream_full",
+    "AdaptivityState", "FCFSScheduler", "StaticFCFSScheduler",
+    "VeltairLikeScheduler", "PlanariaSimulator", "run_planaria",
+    "optimize_params", "grid_search", "SearchTrace", "SCENARIOS",
+    "build_scenario",
+]

@@ -1,0 +1,97 @@
+"""Offline (alpha, beta) optimization — the search of Figures 3/10/11.
+
+The online engine (scheduler.AdaptivityState) uses the same radius-shrinking
+method on live UXCost windows; this module exposes the *offline* variant used
+to study convergence: each candidate is evaluated by a full (short) simulation
+and the trajectory is recorded, then compared against a grid-search global
+optimum over the constrained space [0, 2]^2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+PARAM_LO, PARAM_HI = 0.0, 2.0
+
+
+@dataclass
+class SearchTrace:
+    points: list[tuple[float, float]] = field(default_factory=list)
+    costs: list[float] = field(default_factory=list)
+    evals: int = 0
+
+    @property
+    def best(self) -> tuple[tuple[float, float], float]:
+        k = int(np.argmin(self.costs))
+        return self.points[k], self.costs[k]
+
+
+def optimize_params(
+    eval_fn: Callable[[float, float], float],
+    init: tuple[float, float] | None = None,
+    radius: float = 1.0,
+    shrink: float = 0.6,
+    r_min: float = 0.05,
+    seed: int = 0,
+) -> SearchTrace:
+    """Radius-shrinking interpolation search (Section 3.6).
+
+    Per step: evaluate the center, eight neighbors at the current radius
+    (axis + diagonal — the paper samples "neighboring pairs") and one
+    distant random sample; move to the inverse-cost-weighted interpolation
+    of the two best; shrink the radius; stop below `r_min`. The initial
+    radius spans half the [0, 2]^2 space so a cold (IDLE) start can reach
+    any basin; warm starts (workload switches) converge in the first steps.
+    """
+    rng = np.random.default_rng(seed)
+    center = np.asarray(init if init is not None else
+                        rng.uniform(PARAM_LO, PARAM_HI, 2), dtype=np.float64)
+    trace = SearchTrace()
+    cache: dict[tuple[float, float], float] = {}
+
+    def ev(p: np.ndarray) -> float:
+        key = (round(float(p[0]), 6), round(float(p[1]), 6))
+        if key not in cache:
+            cache[key] = float(eval_fn(*key))
+            trace.evals += 1
+        return cache[key]
+
+    trace.points.append((float(center[0]), float(center[1])))
+    trace.costs.append(ev(center))
+    r = radius
+    d = 0.7071
+    dirs = np.array([(1, 0), (-1, 0), (0, 1), (0, -1),
+                     (d, d), (d, -d), (-d, d), (-d, -d)], dtype=np.float64)
+    while r >= r_min:
+        cands = [center] + [np.clip(center + r * dd, PARAM_LO, PARAM_HI)
+                            for dd in dirs]
+        cands.append(rng.uniform(PARAM_LO, PARAM_HI, 2))
+        scored = sorted(((ev(c), tuple(c)) for c in cands), key=lambda x: x[0])
+        (u1, p1), (u2, p2) = scored[0], scored[1]
+        w1, w2 = 1.0 / (u1 + 1e-9), 1.0 / (u2 + 1e-9)
+        center = np.clip(
+            (w1 * np.asarray(p1) + w2 * np.asarray(p2)) / (w1 + w2),
+            PARAM_LO, PARAM_HI,
+        )
+        trace.points.append((float(center[0]), float(center[1])))
+        trace.costs.append(ev(center))
+        r *= shrink
+    return trace
+
+
+def grid_search(
+    eval_fn: Callable[[float, float], float], n: int = 9
+) -> tuple[tuple[float, float], float, np.ndarray]:
+    """Brute-force global optimum over [0,2]^2 (the Figure-3 heat map)."""
+    xs = np.linspace(PARAM_LO, PARAM_HI, n)
+    grid = np.empty((n, n))
+    best, best_p = np.inf, (0.0, 0.0)
+    for i, a in enumerate(xs):
+        for j, b in enumerate(xs):
+            c = float(eval_fn(float(a), float(b)))
+            grid[i, j] = c
+            if c < best:
+                best, best_p = c, (float(a), float(b))
+    return best_p, best, grid

@@ -1,0 +1,258 @@
+"""Analytical per-(layer, accelerator) latency & energy model.
+
+Plays the role MAESTRO/Timeloop play in the paper (Section 3.2: "DREAM uses
+energy and latency estimations generated offline using a cost model or a
+simulator"). The model is a dataflow-aware roofline:
+
+  latency = max(compute_time, memory_time) + dispatch overhead
+  energy  = MACs * E_MAC + DRAM traffic * E_DRAM + SRAM traffic * E_SRAM
+
+Dataflow-dependent terms (this is what creates the hardware heterogeneity the
+paper's preference score exploits):
+
+  * WS (NVDLA-like): PEs parallelize K x C (output x input channels).
+    Great for pointwise/FC/GEMM layers; poor for depthwise convolutions
+    (K==1 per group => parallel work == C only). Weights are resident:
+    inputs are re-streamed once per weight tile that exceeds SRAM.
+  * OS (ShiDianNao-like): PEs parallelize the output feature map (Y x X,
+    falling back to K when the spatial map is tiny). Great for large
+    feature maps and depthwise layers; poor for FC layers with one token.
+    Outputs are resident: weights are re-streamed once per activation tile
+    that exceeds SRAM.
+
+All estimates are deterministic — the predictability of accelerator latency
+(paper Section 4.3) is precisely what makes offline tables usable online.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from .types import Accelerator, Dataflow, Layer, ModelGraph, OpType
+
+# Energy constants (8-bit edge-accelerator ballpark, pJ):
+E_MAC = 0.4e-12          # J per MAC (int8 MAC + local regfile traffic)
+E_DRAM = 160e-12         # J per DRAM byte (LPDDR-class)
+E_SRAM = 1.2e-12         # J per SRAM byte
+P_PE_STATIC = 0.8e-3    # W per PE: leakage + clock tree while the layer
+#                          occupies the array (couples energy to *occupancy*:
+#                          a big array is fast but burns static power, a small
+#                          one is slow but frugal — the Figure-13 tension)
+DISPATCH_OVERHEAD_S = 2e-6  # fixed per-layer launch overhead
+
+# Calibration derates vs the idealized analytical model (MAESTRO-class cost
+# models report mapping efficiencies well below peak for edge arrays: partial
+# tiles, pipeline fill/drain, NoC congestion and DRAM row misses):
+MAPPING_EFF = 0.35  # achievable fraction of peak MACs for a tuned mapping
+DRAM_EFF = 0.6      # achievable fraction of peak off-chip bandwidth
+
+
+def _quantized_util(parallel_work: int, pes: int) -> float:
+    """PE utilization with edge-quantization: waves of `parallel_work` lanes
+    mapped onto `pes` PEs. util = work / (ceil(work/pes) * pes)."""
+    if parallel_work <= 0:
+        return 1.0 / pes
+    waves = math.ceil(parallel_work / pes)
+    return parallel_work / (waves * pes)
+
+
+def _parallel_work(layer: Layer, df: Dataflow) -> int:
+    """How many MAC lanes the dataflow can fill for this layer.
+
+    WS (NVDLA): the PE array spatially maps K x C (output x input channels);
+    depthwise layers collapse to C lanes (one input channel per group) and
+    early layers with tiny C starve the array.
+    OS (ShiDianNao-class): the PE array spatially maps *output elements*
+    (K x Y x X), so it shines on wide feature maps / depthwise layers but
+    gains nothing from input-channel depth.
+    """
+    if df is Dataflow.WS:
+        if layer.op in (OpType.DWCONV, OpType.POOL):
+            return layer.C                      # one input channel per group
+        return layer.K * layer.C
+    else:  # OS
+        spatial = max(layer.Y * layer.X, 1)
+        if layer.op in (OpType.DWCONV, OpType.POOL):
+            return layer.C * spatial
+        return layer.K * spatial
+
+
+#: Dataflow <-> operator affinity (Herald-style): the fraction of peak a
+#: well-tiled mapping of this op family reaches on each dataflow. WS arrays
+#: excel at channel-deep ops (dense conv, GEMM, FC); OS arrays excel at
+#: spatially wide / shallow-accumulation ops (depthwise, pooling, stems).
+_MATCH: dict[Dataflow, dict[OpType, float]] = {
+    Dataflow.WS: {
+        OpType.CONV2D: 1.00, OpType.DWCONV: 0.45, OpType.FC: 0.90,
+        OpType.RNN: 0.90, OpType.GEMM: 1.00, OpType.POOL: 0.50,
+    },
+    Dataflow.OS: {
+        OpType.CONV2D: 0.88, OpType.DWCONV: 1.00, OpType.FC: 0.45,
+        OpType.RNN: 0.45, OpType.GEMM: 0.80, OpType.POOL: 1.00,
+    },
+}
+
+
+def _temporal_eff(layer: Layer, df: Dataflow) -> float:
+    return _MATCH[df][layer.op]
+
+
+def _dram_traffic_bytes(layer: Layer, acc: Accelerator) -> float:
+    """Dataflow-dependent off-chip traffic (bytes)."""
+    w, i, o = layer.weight_bytes, layer.in_bytes, layer.out_bytes
+    usable = 0.5 * acc.sram_bytes  # double-buffering halves usable capacity
+    if acc.dataflow is Dataflow.WS:
+        # weights resident; inputs re-streamed per weight tile spill
+        w_tiles = max(1, math.ceil(w / usable))
+        return w + o + i * w_tiles
+    else:
+        # outputs resident; weights re-streamed per activation tile spill
+        a_tiles = max(1, math.ceil((i + o) / usable))
+        return i + o + w * a_tiles
+
+
+def _sram_traffic_bytes(layer: Layer, acc: Accelerator) -> float:
+    """Dataflow-dependent on-chip buffer traffic (bytes). This is where WS and
+    OS genuinely differ energetically (MAESTRO's buffer-access counts):
+
+      WS holds weights in PE registers; *input activations* are re-read from
+      SRAM once per K-tile of the weight array, and partial sums are spilled
+      once per C-tile.
+      OS holds output psums in PE registers; *weights* are re-read once per
+      spatial tile of the output map, inputs re-read per R*S window overlap.
+    """
+    w, i, o = layer.weight_bytes, layer.in_bytes, layer.out_bytes
+    if acc.dataflow is Dataflow.WS:
+        c_par = min(max(layer.C, 1), acc.pes)
+        k_tile = max(1, acc.pes // c_par)
+        k_reads = math.ceil(max(layer.K, 1) / k_tile)
+        c_tile = min(max(layer.C, 1), acc.pes)
+        psum_spills = math.ceil(max(layer.C, 1) / c_tile)
+        return w + i * k_reads + o * (1 + psum_spills)
+    else:
+        spatial = max(layer.Y * layer.X, 1)
+        sp_tiles = math.ceil(spatial / min(spatial, acc.pes))
+        return w * sp_tiles + i * layer.R + o
+
+
+def layer_latency_s(layer: Layer, acc: Accelerator) -> float:
+    macs = layer.macs
+    pw = _parallel_work(layer, acc.dataflow)
+    util = (_quantized_util(pw, acc.pes) * _temporal_eff(layer, acc.dataflow)
+            * MAPPING_EFF)
+    compute_s = macs / (acc.pes * util * acc.clock_hz)
+    memory_s = _dram_traffic_bytes(layer, acc) / (acc.dram_bw * DRAM_EFF)
+    return max(compute_s, memory_s) + DISPATCH_OVERHEAD_S
+
+
+def layer_energy_j(layer: Layer, acc: Accelerator) -> float:
+    macs = layer.macs
+    dram = _dram_traffic_bytes(layer, acc)
+    sram = _sram_traffic_bytes(layer, acc) + dram
+    static = layer_latency_s(layer, acc) * acc.pes * P_PE_STATIC
+    return macs * E_MAC + dram * E_DRAM + sram * E_SRAM + static
+
+
+def context_switch_energy_j(new_layer: Layer, prev_out_bytes: int) -> float:
+    """Paper Section 3.4: energy to fetch the new model's activation from
+    DRAM and flush the switched-out model's activation to DRAM."""
+    return (new_layer.in_bytes + prev_out_bytes) * E_DRAM
+
+
+@dataclass(frozen=True)
+class CostTable:
+    """Precomputed per-(accelerator, layer) cost arrays for one model.
+
+    lat[a, l] / en[a, l] : latency (s) / energy (J) of layer l on accel a.
+    Derived rows used by the scheduler's score computation:
+      lat_mean[l]  — mean latency across accelerators  (ToGo, Starvation)
+      lat_sum[l]   — summed latency across accelerators (LatPref numerator)
+      lat_min[l]   — best-case latency                  (smart frame drop)
+      en_sum[l]    — summed energy across accelerators  (Pref_Energy)
+      en_max[l]    — worst-case energy                  (UXCost normalizer)
+    """
+
+    model_name: str
+    lat: np.ndarray
+    en: np.ndarray
+    in_bytes: np.ndarray
+    out_bytes: np.ndarray
+    lat_mean: np.ndarray
+    lat_sum: np.ndarray
+    lat_min: np.ndarray
+    en_sum: np.ndarray
+    en_max: np.ndarray
+
+    @property
+    def n_accs(self) -> int:
+        return self.lat.shape[0]
+
+
+def build_cost_table(model: ModelGraph, accs: tuple[Accelerator, ...],
+                     shared_bw: bool = True) -> CostTable:
+    """Cost table for one model on a multi-accelerator system.
+
+    ``shared_bw``: Table 2 of the paper specifies 90 GB/s of *shared* off-chip
+    bandwidth for the whole chip. The offline tables therefore charge each
+    sub-accelerator its proportional share (bw / n_accs) — a deterministic,
+    conservative model of shared-bus contention on an edge SoC.
+    """
+    n_a, n_l = len(accs), len(model.layers)
+    if shared_bw and n_a > 1:
+        from dataclasses import replace as _rep
+        accs = tuple(_rep(a, dram_bw=a.dram_bw / n_a) for a in accs)
+    lat = np.empty((n_a, n_l), dtype=np.float64)
+    en = np.empty((n_a, n_l), dtype=np.float64)
+    for a, acc in enumerate(accs):
+        for l, layer in enumerate(model.layers):
+            lat[a, l] = layer_latency_s(layer, acc)
+            en[a, l] = layer_energy_j(layer, acc)
+    in_b = np.array([l.in_bytes for l in model.layers], dtype=np.float64)
+    out_b = np.array([l.out_bytes for l in model.layers], dtype=np.float64)
+    return CostTable(
+        model_name=model.name,
+        lat=lat,
+        en=en,
+        in_bytes=in_b,
+        out_bytes=out_b,
+        lat_mean=lat.mean(axis=0),
+        lat_sum=lat.sum(axis=0),
+        lat_min=lat.min(axis=0),
+        en_sum=en.sum(axis=0),
+        en_max=en.max(axis=0),
+    )
+
+
+# Deadline convention (Planaria §evaluation: deadlines are set as a multiple
+# of each model's isolated latency on the target hardware, clipped to the
+# frame period; a floor keeps very light models from getting sub-queueing-
+# granularity deadlines). The multiple applies to the *worst* accelerator's
+# isolated latency so that any single placement is feasible in isolation —
+# violations then come from contention/queueing, which is what a scheduler
+# can actually influence.
+DEADLINE_SLACK_MULT = 1.15  # k x isolated worst-accelerator latency
+DEADLINE_MIN_FRAC = 0.05    # floor: fraction of the frame period
+
+
+def effective_deadline(period_s: float, table: CostTable,
+                       explicit: float | None = None) -> float:
+    """Per-frame deadline for a model on a given system (seconds)."""
+    if explicit is not None:
+        return explicit
+    iso_worst = float(table.lat.sum(axis=1).max())
+    return min(period_s, max(DEADLINE_SLACK_MULT * iso_worst,
+                             DEADLINE_MIN_FRAC * period_s))
+
+
+def build_tables(
+    models: dict[str, ModelGraph], accs: tuple[Accelerator, ...]
+) -> dict[str, CostTable]:
+    """Cost tables for every model *and* every Supernet variant."""
+    out: dict[str, CostTable] = {}
+    for name, m in models.items():
+        out[name] = build_cost_table(m, accs)
+        for v in m.variants:
+            out[v.name] = build_cost_table(v, accs)
+    return out

@@ -1,0 +1,267 @@
+"""The DREAM scheduler (Section 4): MapScore-driven job assignment with the
+smart frame drop engine, Supernet switching, and the online (alpha, beta)
+adaptivity engine.
+
+Configurations mirror the paper's Table 4:
+  DREAM-MapScore  : score-driven dispatch + online parameter optimization
+  DREAM-SmartDrop : + smart frame drop
+  DREAM-Full      : + Supernet switching
+(and `adaptivity=False` gives the fixed alpha=beta=1 ablation of Figure 9).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .mapscore import MapScoreParams, mapscore
+from .simulator import Dispatch, Job, SchedulerBase, Simulator
+from .uxcost import WindowStats, overall_dlv_rate
+
+PARAM_LO, PARAM_HI = 0.0, 2.0  # the paper's constrained search range (§5.2)
+
+
+@dataclass
+class AdaptivityState:
+    """Radius-shrinking online search over (alpha, beta) — Section 3.6.
+
+    Continuously tests a small number of candidate pairs around the current
+    center, one per UXCost window, then moves to the point interpolated
+    between the two best candidates and shrinks the radius. Non-blocking:
+    scheduling always proceeds with whatever candidate is under test.
+    """
+
+    center: np.ndarray
+    radius: float = 0.5
+    r_min: float = 0.05
+    shrink: float = 0.6
+    probing: bool = True
+    candidates: list[np.ndarray] = field(default_factory=list)
+    results: list[tuple[float, np.ndarray]] = field(default_factory=list)
+    cand_idx: int = 0
+    dlv_ema: Optional[float] = None
+
+    def _make_candidates(self, rng: np.random.Generator) -> None:
+        dirs = np.array([(1, 0), (-1, 0), (0, 1), (0, -1)], dtype=np.float64)
+        cands = [self.center.copy()]
+        cands += [np.clip(self.center + self.radius * d, PARAM_LO, PARAM_HI)
+                  for d in dirs]
+        # one distant sample (the paper samples neighboring *and* distant pairs)
+        cands.append(rng.uniform(PARAM_LO, PARAM_HI, size=2))
+        self.candidates = cands
+        self.results = []
+        self.cand_idx = 0
+
+    def current(self) -> np.ndarray:
+        if self.probing and self.candidates:
+            return self.candidates[self.cand_idx]
+        return self.center
+
+    def step(self, window_uxcost: float, window_dlv: float,
+             rng: np.random.Generator) -> np.ndarray:
+        """Advance one UXCost window; returns the params for the next window."""
+        if not self.probing:
+            # workload-change detection: DLV-rate shift re-triggers the search
+            if self.dlv_ema is None:
+                self.dlv_ema = window_dlv
+            drift = abs(window_dlv - self.dlv_ema)
+            self.dlv_ema = 0.8 * self.dlv_ema + 0.2 * window_dlv
+            if drift > 0.2:
+                self.radius = 0.4
+                self.probing = True
+                self._make_candidates(rng)
+            return self.center
+        if not self.candidates:
+            self._make_candidates(rng)
+            return self.candidates[0]
+        self.results.append((window_uxcost, self.candidates[self.cand_idx].copy()))
+        self.cand_idx += 1
+        if self.cand_idx < len(self.candidates):
+            return self.candidates[self.cand_idx]
+        # all candidates measured: interpolate between the two best
+        self.results.sort(key=lambda r: r[0])
+        (u1, p1), (u2, p2) = self.results[0], self.results[1]
+        w1, w2 = 1.0 / (u1 + 1e-9), 1.0 / (u2 + 1e-9)
+        self.center = np.clip((w1 * p1 + w2 * p2) / (w1 + w2), PARAM_LO, PARAM_HI)
+        self.radius *= self.shrink
+        if self.radius < self.r_min:
+            self.probing = False
+            self.dlv_ema = None
+            self.candidates = []
+            return self.center
+        self._make_candidates(rng)
+        return self.candidates[0]
+
+
+#: Dispatch-block cap (seconds): consecutive layers that keep preferring
+#: the chosen accelerator are dispatched together up to this much latency.
+#: Bounded so urgent arrivals still preempt at block boundaries; on
+#: homogeneous systems (every accelerator "preferred") this makes jobs run
+#: to completion in period-scale chunks instead of thrashing layer-by-layer
+#: across frames — without it, urgency ordering (ToGo/Slack favors jobs
+#: with MORE remaining work) starves almost-finished frames under load.
+BLOCK_LATENCY_S = 1.5e-3
+#: A layer "prefers" the chosen accelerator if its latency there is within
+#: this factor of the best accelerator's (ties on homogeneous systems).
+PREF_TOL = 1.10
+
+
+class DreamScheduler(SchedulerBase):
+    def __init__(
+        self,
+        alpha: float = 1.0,
+        beta: float = 1.0,
+        adaptivity: bool = True,
+        frame_drop: bool = False,
+        supernet: bool = False,
+        seed: int = 0,
+        name: Optional[str] = None,
+    ):
+        self.params = MapScoreParams(alpha=alpha, beta=beta)
+        self.adaptivity = adaptivity
+        self.frame_drop = frame_drop
+        self.supernet = supernet
+        self.rng = np.random.default_rng(seed + 101)
+        self.adapt = AdaptivityState(center=np.array([alpha, beta])) if adaptivity else None
+        if name is not None:
+            self.name = name
+        elif supernet:
+            self.name = "DREAM-Full"
+        elif frame_drop:
+            self.name = "DREAM-SmartDrop"
+        elif adaptivity:
+            self.name = "DREAM-MapScore"
+        else:
+            self.name = "MapScore-fixed"
+
+    # ----------------------------------------------------------- adaptivity
+    def on_window(self, sim: Simulator, stats: WindowStats, uxc: float) -> None:
+        if self.adapt is None:
+            return
+        frames = sum(st.frames for st in stats.per_model.values())
+        if frames == 0:
+            return
+        nxt = self.adapt.step(uxc, overall_dlv_rate(stats), self.rng)
+        self.params = MapScoreParams(alpha=float(nxt[0]), beta=float(nxt[1]))
+
+    # ------------------------------------------------------ smart frame drop
+    def _smart_frame_drop(self, sim: Simulator, t: float) -> None:
+        """Section 4.2.1: drop the worst (min_to_go/slack) frame meeting all
+        four conditions. Triggered at every scheduling decision."""
+        active = sim.active_jobs()
+        # condition 2: more than one active job expected to violate
+        expected_violations = sum(
+            1 for j in active if j.min_togo() > max(j.slack(t), 0.0)
+        )
+        if expected_violations < 2:
+            return
+        best: tuple[float, Job] | None = None
+        for j in sim.ready_jobs():
+            slack = j.slack(t)
+            mtg = j.min_togo()
+            if mtg <= max(slack, 0.0):          # condition 1
+                continue
+            if not j.is_tail:                    # condition 3
+                continue
+            if not sim.can_drop(j.base_name):    # condition 4
+                continue
+            ratio = mtg / max(slack, 1e-6)
+            if best is None or ratio > best[0]:
+                best = (ratio, j)
+        if best is not None:
+            sim.drop_job(best[1], t)
+
+    # ------------------------------------------------------ Supernet switch
+    def _maybe_switch_variant(self, sim: Simulator, job: Job, t: float) -> None:
+        """Section 4.5.1: at the switch point — when the job's first layer is
+        actually dispatched — deploy the heaviest weight-sharing variant whose
+        estimated completion meets the deadline."""
+        if job.variant_locked or job.pos != 0:
+            return
+        job.variant_locked = True
+        graph = sim.graphs[job.graph_name]
+        sim.variant_counts.setdefault(job.graph_name, 0)
+        if not graph.variants:
+            sim.variant_counts[job.graph_name] += 1
+            return
+        slack = job.slack(t)
+        if job.togo() <= slack:                 # original meets the deadline
+            sim.variant_counts[job.graph_name] += 1
+            return
+        chosen = None
+        for v in graph.variants:                # ordered heavy -> light
+            vt = sim.tables[v.name]
+            if float(vt.lat_mean.sum()) <= slack:
+                chosen = v
+                break
+        if chosen is None:
+            chosen = graph.variants[-1]          # lightest as a last resort
+        sim.switch_variant(job, chosen)
+        sim.variant_counts[chosen.name] = sim.variant_counts.get(chosen.name, 0) + 1
+
+    # -------------------------------------------------------------- dispatch
+    def schedule(self, sim: Simulator, t: float) -> Optional[Dispatch]:
+        if self.frame_drop:
+            self._smart_frame_drop(sim, t)
+        ready = sim.ready_jobs()
+        if not ready:
+            return None
+        idle = sim.idle_accs()
+        if not idle:
+            return None
+        idle_idx = np.array([a.idx for a in idle])
+        prev_out = np.array([a.prev_out_bytes for a in sim.accs])
+        prev_base = [a.prev_base for a in sim.accs]
+        best_score = -np.inf
+        best: Optional[tuple[Job, int]] = None
+        for job in ready:
+            nxt = int(job.path[job.pos])
+            same = np.array([pb == job.base_name for pb in prev_base])
+            scores = mapscore(
+                job.table, nxt, job.path[job.pos:], t, job.t_cmpl,
+                job.deadline, prev_out, same, self.params,
+            )[idle_idx]
+            k = int(np.argmax(scores))
+            if scores[k] > best_score:
+                best_score = float(scores[k])
+                best = (job, int(idle_idx[k]))
+        if best is None:
+            return None
+        # Supernet switch point: decide the variant for the job that is about
+        # to start, with the system load it actually faces at dispatch time.
+        if self.supernet and not best[0].variant_locked:
+            self._maybe_switch_variant(sim, best[0], t)
+        job, acc_idx = best
+        return Dispatch(job=job, acc_idx=acc_idx,
+                        n_layers=self._block_len(job, acc_idx))
+
+    @staticmethod
+    def _block_len(job: Job, acc_idx: int) -> int:
+        """Affinity-run blocking: dispatch the run of consecutive layers
+        that keep preferring this accelerator, capped at BLOCK_LATENCY_S."""
+        path = job.path[job.pos:]
+        lat = job.table.lat[:, path]              # (A, remaining)
+        pref = lat[acc_idx] <= PREF_TOL * lat.min(axis=0)
+        n, cum = 1, float(lat[acc_idx, 0])
+        for i in range(1, len(path)):
+            if not pref[i] or cum >= BLOCK_LATENCY_S:
+                break
+            cum += float(lat[acc_idx, i])
+            n = i + 1
+        return n
+
+
+def dream_mapscore(seed: int = 0, **kw) -> DreamScheduler:
+    return DreamScheduler(adaptivity=True, frame_drop=False, supernet=False,
+                          seed=seed, **kw)
+
+
+def dream_smartdrop(seed: int = 0, **kw) -> DreamScheduler:
+    return DreamScheduler(adaptivity=True, frame_drop=True, supernet=False,
+                          seed=seed, **kw)
+
+
+def dream_full(seed: int = 0, **kw) -> DreamScheduler:
+    return DreamScheduler(adaptivity=True, frame_drop=True, supernet=True,
+                          seed=seed, **kw)

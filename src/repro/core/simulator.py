@@ -1,0 +1,419 @@
+"""Discrete-event simulator for RTMM workloads on multi-accelerator systems.
+
+The engine owns: periodic frame arrivals (per Table-3 FPS), control-dependency
+triggering (cascaded pipelines), dynamic-path sampling (SkipNet skips /
+RAPID-RL early exits), per-layer dispatch onto accelerators, deadline & energy
+accounting (UXCost windows), and stale-job hygiene. Schedulers (DREAM and the
+baselines) plug in through the `SchedulerBase` interface and only make
+(job, accelerator, n_layers) decisions.
+
+Determinism: one `numpy.random.Generator` seeded at construction drives every
+stochastic draw; the event heap is tie-broken with a monotone sequence number.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from .costmodel import CostTable, E_DRAM, build_tables, effective_deadline
+from .types import Accelerator, ModelGraph, Scenario, SYSTEMS
+from .uxcost import WindowStats, uxcost, overall_dlv_rate, overall_norm_energy
+
+ARRIVAL, DONE, WINDOW = 0, 1, 2
+
+
+@dataclass
+class Job:
+    """One inference request (a frame of one model) — the paper's 'task'."""
+
+    jid: int
+    model_idx: int              # index into scenario.models
+    base_name: str              # stats key (Supernet variants share it)
+    graph_name: str             # concrete graph (may be a variant)
+    table: CostTable
+    path: np.ndarray            # sampled layer indices
+    cum_mean: np.ndarray        # suffix sums of lat_mean over path (ToGo)
+    cum_min: np.ndarray         # suffix sums of lat_min over path (min_to_go)
+    arrival: float
+    deadline: float
+    pos: int = 0
+    t_cmpl: float = 0.0         # last layer completion (Alg.1 T_cmpl)
+    running: bool = False
+    done: bool = False
+    dropped: bool = False
+    energy_used: float = 0.0
+    worst_energy: float = 0.0
+    is_tail: bool = True        # no dependents (frame-drop condition 3)
+    variant_locked: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.path)
+
+    @property
+    def finished_exec(self) -> bool:
+        return self.pos >= len(self.path)
+
+    def togo(self) -> float:
+        return float(self.cum_mean[self.pos]) if self.pos < self.n_layers else 0.0
+
+    def min_togo(self) -> float:
+        return float(self.cum_min[self.pos]) if self.pos < self.n_layers else 0.0
+
+    def slack(self, t: float) -> float:
+        return self.deadline - t
+
+
+@dataclass
+class AccState:
+    idx: int
+    acc: Accelerator
+    busy: bool = False
+    busy_until: float = 0.0
+    cur_job: Optional[Job] = None
+    prev_base: Optional[str] = None   # base model name of last executed job
+    prev_out_bytes: float = 0.0       # its last layer's activation bytes
+    busy_time: float = 0.0            # cumulative, for utilization reporting
+
+
+@dataclass
+class Dispatch:
+    job: Job
+    acc_idx: int
+    n_layers: int = 1
+    reserve_worst: bool = False  # static scheduling: hold the slot for the
+    # worst-case duration even if the sampled path finishes earlier
+
+
+class SchedulerBase:
+    """Scheduler plug-in interface."""
+
+    name = "base"
+
+    def on_job_created(self, sim: "Simulator", job: Job) -> None:  # noqa: D401
+        pass
+
+    def on_window(self, sim: "Simulator", stats: WindowStats, uxc: float) -> None:
+        pass
+
+    def schedule(self, sim: "Simulator", t: float) -> Optional[Dispatch]:
+        raise NotImplementedError
+
+
+@dataclass
+class SimResult:
+    scenario: str
+    system: str
+    scheduler: str
+    duration_s: float
+    stats: WindowStats
+    uxcost: float
+    dlv_rate: float
+    norm_energy: float
+    frames: int
+    drops: int
+    aborts: int
+    variant_counts: dict[str, int]
+    windows: list[tuple[float, float, float, float]]  # (t, uxcost, alpha, beta)
+    acc_utilization: list[float]
+
+    def summary(self) -> str:
+        return (f"{self.scenario:>14s} {self.system:>10s} {self.scheduler:>16s} "
+                f"UXCost={self.uxcost:8.4f} DLV={self.dlv_rate:6.3f} "
+                f"E={self.norm_energy:6.3f} frames={self.frames} drops={self.drops}")
+
+
+class Simulator:
+    def __init__(
+        self,
+        scenario: Scenario,
+        system: str | tuple[Accelerator, ...],
+        scheduler: SchedulerBase,
+        duration_s: float = 8.0,
+        seed: int = 0,
+        window_s: float = 0.5,
+        stale_periods: float = 2.0,
+        cs_latency_s: float = 0.0,
+    ):
+        self.scenario = scenario
+        self.system_name = system if isinstance(system, str) else "custom"
+        self.accs_spec = SYSTEMS[system] if isinstance(system, str) else system
+        self.scheduler = scheduler
+        self.duration_s = duration_s
+        self.window_s = window_s
+        self.stale_periods = stale_periods
+        self.cs_latency_s = cs_latency_s
+        self.rng = np.random.default_rng(seed)
+
+        self.models: dict[str, ModelGraph] = {
+            s.model.name: s.model for s in scenario.models
+        }
+        self.tables: dict[str, CostTable] = build_tables(self.models, self.accs_spec)
+        self.graphs: dict[str, ModelGraph] = dict(self.models)
+        for m in self.models.values():
+            for v in m.variants:
+                self.graphs[v.name] = v
+
+        #: system-dependent per-model deadlines (Planaria convention)
+        self.deadlines: dict[str, float] = {
+            s.model.name: effective_deadline(s.period_s,
+                                             self.tables[s.model.name],
+                                             s.deadline_s)
+            for s in scenario.models
+        }
+        self.accs = [AccState(i, a) for i, a in enumerate(self.accs_spec)]
+        self.events: list[tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+        self.t = 0.0
+        self.jobs: dict[int, Job] = {}
+        self.ready: dict[int, Job] = {}
+        self._jid = itertools.count()
+
+        self.global_stats = WindowStats()
+        self.window_stats = WindowStats()
+        self.windows: list[tuple[float, float, float, float]] = []
+        self.variant_counts: dict[str, int] = {}
+        self.drops = 0
+        self.aborts = 0
+        self.frames = 0
+        # frame-drop condition 4: outcome history (True == dropped) per model
+        self.drop_history: dict[str, list[bool]] = {
+            s.model.name: [] for s in scenario.models
+        }
+        self.drop_window = 10
+        self.max_drops_per_window = 2
+
+    # ------------------------------------------------------------- events
+    def _push(self, t: float, kind: int, arg: object) -> None:
+        heapq.heappush(self.events, (t, next(self._seq), kind, arg))
+
+    def _schedule_head_arrivals(self) -> None:
+        for i, spec in enumerate(self.scenario.models):
+            if spec.depends_on is None:
+                phase = spec.period_s * ((i * 7919) % 97) / 97.0
+                self._push(phase, ARRIVAL, i)
+
+    # --------------------------------------------------------------- jobs
+    def _create_job(self, model_idx: int, t: float) -> Job:
+        spec = self.scenario.models[model_idx]
+        graph = spec.model
+        table = self.tables[graph.name]
+        path = np.asarray(graph.sample_path(self.rng), dtype=np.int64)
+        lat_mean = table.lat_mean[path]
+        lat_min = table.lat_min[path]
+        cum_mean = np.concatenate([np.cumsum(lat_mean[::-1])[::-1], [0.0]])
+        cum_min = np.concatenate([np.cumsum(lat_min[::-1])[::-1], [0.0]])
+        job = Job(
+            jid=next(self._jid),
+            model_idx=model_idx,
+            base_name=graph.name,
+            graph_name=graph.name,
+            table=table,
+            path=path,
+            cum_mean=cum_mean,
+            cum_min=cum_min,
+            arrival=t,
+            deadline=t + self.deadlines[graph.name],
+            t_cmpl=t,
+            worst_energy=float(table.en_max[path].sum()),
+            is_tail=self.scenario.is_chain_tail(model_idx),
+        )
+        self.jobs[job.jid] = job
+        self.ready[job.jid] = job
+        self.scheduler.on_job_created(self, job)
+        return job
+
+    def switch_variant(self, job: Job, variant: ModelGraph) -> None:
+        """Supernet switching: swap the (not-yet-started) job to a lighter
+        weight-sharing variant. worst_energy keeps the original's normalizer."""
+        assert job.pos == 0 and not job.running
+        table = self.tables[variant.name]
+        path = np.asarray(variant.worst_path(), dtype=np.int64)
+        lat_mean = table.lat_mean[path]
+        lat_min = table.lat_min[path]
+        job.graph_name = variant.name
+        job.table = table
+        job.path = path
+        job.cum_mean = np.concatenate([np.cumsum(lat_mean[::-1])[::-1], [0.0]])
+        job.cum_min = np.concatenate([np.cumsum(lat_min[::-1])[::-1], [0.0]])
+
+    def _finish_job(self, job: Job, t: float, dropped: bool) -> None:
+        job.done = True
+        job.dropped = dropped
+        self.ready.pop(job.jid, None)
+        self.jobs.pop(job.jid, None)
+        violated = dropped or (t > self.deadline_of(job))
+        st = self.window_stats.model(job.base_name)
+        st.frames += 1
+        st.violated += int(violated)
+        st.energy_j += job.energy_used
+        st.worst_energy_j += job.worst_energy
+        self.frames += 1
+        hist = self.drop_history[job.base_name]
+        hist.append(dropped)
+        if len(hist) > self.drop_window:
+            hist.pop(0)
+        if not dropped:
+            # trigger control-dependent models (cascade) on completion
+            for dep_idx in self.scenario.dependents_of(job.base_name):
+                spec = self.scenario.models[dep_idx]
+                if self.rng.random() < spec.trigger_prob:
+                    self._create_job(dep_idx, t)
+
+    def deadline_of(self, job: Job) -> float:
+        return job.deadline
+
+    def drop_job(self, job: Job, t: float) -> None:
+        assert not job.running
+        self.drops += 1
+        self._finish_job(job, t, dropped=True)
+
+    def can_drop(self, base_name: str) -> bool:
+        """Frame-drop condition 4: bounded drop rate per model."""
+        hist = self.drop_history[base_name]
+        return sum(hist[-self.drop_window:]) < self.max_drops_per_window
+
+    def _abort_stale(self, t: float) -> None:
+        """Simulator hygiene: a frame that has not *started* by
+        deadline + stale_periods * period is abandoned (counts violated)."""
+        stale = [
+            j for j in self.ready.values()
+            if j.pos == 0 and t > j.deadline
+            + self.stale_periods * self.scenario.models[j.model_idx].period_s
+        ]
+        for j in stale:
+            self.aborts += 1
+            self._finish_job(j, t, dropped=True)
+
+    # ----------------------------------------------------------- dispatch
+    def _dispatch(self, d: Dispatch, t: float) -> None:
+        job, acc = d.job, self.accs[d.acc_idx]
+        assert not acc.busy and not job.running and not job.finished_exec
+        n = min(d.n_layers, job.n_layers - job.pos)
+        layers = job.path[job.pos: job.pos + n]
+        dur = float(job.table.lat[acc.idx, layers].sum())
+        energy = float(job.table.en[acc.idx, layers].sum())
+        if acc.prev_base is not None and acc.prev_base != job.base_name:
+            energy += (float(job.table.in_bytes[layers[0]]) + acc.prev_out_bytes) * E_DRAM
+            dur += self.cs_latency_s
+        reserve = dur
+        if d.reserve_worst:
+            # static scheduling reserves the worst-case (full) path duration
+            full = self.graphs[job.graph_name].worst_path()
+            reserve = float(job.table.lat[acc.idx, np.asarray(full[job.pos:])].sum())
+            reserve = max(reserve, dur)
+        job.energy_used += energy
+        job.running = True
+        job._pending_n = n  # type: ignore[attr-defined]
+        job._pending_done_at = t + dur  # type: ignore[attr-defined]
+        self.ready.pop(job.jid, None)
+        acc.busy = True
+        acc.cur_job = job
+        acc.busy_until = t + reserve
+        acc.busy_time += reserve
+        self._push(t + reserve, DONE, acc.idx)
+
+    def _complete(self, acc_idx: int, t: float) -> None:
+        acc = self.accs[acc_idx]
+        job = acc.cur_job
+        assert job is not None
+        n = job._pending_n  # type: ignore[attr-defined]
+        done_at = min(job._pending_done_at, t)  # type: ignore[attr-defined]
+        last_layer = int(job.path[job.pos + n - 1])
+        job.pos += n
+        job.t_cmpl = done_at
+        job.running = False
+        acc.busy = False
+        acc.cur_job = None
+        acc.prev_base = job.base_name
+        acc.prev_out_bytes = float(job.table.out_bytes[last_layer])
+        if job.finished_exec:
+            self._finish_job(job, done_at, dropped=False)
+        else:
+            self.ready[job.jid] = job
+
+    # --------------------------------------------------------------- run
+    def idle_accs(self) -> list[AccState]:
+        return [a for a in self.accs if not a.busy]
+
+    def ready_jobs(self) -> list[Job]:
+        return list(self.ready.values())
+
+    def active_jobs(self) -> list[Job]:
+        """Ready or currently-executing jobs (frame-drop condition 2 scope)."""
+        return [j for j in self.jobs.values() if not j.done]
+
+    def _drain_schedule(self, t: float) -> None:
+        self._abort_stale(t)
+        while True:
+            if not self.ready or all(a.busy for a in self.accs):
+                return
+            d = self.scheduler.schedule(self, t)
+            if d is None:
+                return
+            self._dispatch(d, t)
+
+    def run(self) -> SimResult:
+        self._schedule_head_arrivals()
+        self._push(self.window_s, WINDOW, None)
+        while self.events:
+            t, _, kind, arg = heapq.heappop(self.events)
+            if t > self.duration_s:
+                break
+            self.t = t
+            if kind == ARRIVAL:
+                idx = int(arg)  # type: ignore[arg-type]
+                self._create_job(idx, t)
+                self._push(t + self.scenario.models[idx].period_s, ARRIVAL, idx)
+            elif kind == DONE:
+                self._complete(int(arg), t)  # type: ignore[arg-type]
+            elif kind == WINDOW:
+                uxc = uxcost(self.window_stats)
+                a, b = self._current_params()
+                self.windows.append((t, uxc, a, b))
+                self.scheduler.on_window(self, self.window_stats, uxc)
+                self.global_stats.merge(self.window_stats)
+                self.window_stats = WindowStats()
+                self._push(t + self.window_s, WINDOW, None)
+            self._drain_schedule(t)
+        self.global_stats.merge(self.window_stats)
+        util = [a.busy_time / max(self.t, 1e-9) for a in self.accs]
+        return SimResult(
+            scenario=self.scenario.name,
+            system=self.system_name,
+            scheduler=self.scheduler.name,
+            duration_s=self.duration_s,
+            stats=self.global_stats,
+            uxcost=uxcost(self.global_stats),
+            dlv_rate=overall_dlv_rate(self.global_stats),
+            norm_energy=overall_norm_energy(self.global_stats),
+            frames=self.frames,
+            drops=self.drops,
+            aborts=self.aborts,
+            variant_counts=dict(self.variant_counts),
+            windows=self.windows,
+            acc_utilization=util,
+        )
+
+    def _current_params(self) -> tuple[float, float]:
+        p = getattr(self.scheduler, "params", None)
+        if p is None:
+            return (0.0, 0.0)
+        return (p.alpha, p.beta)
+
+
+def run_sim(
+    scenario: Scenario,
+    system: str,
+    scheduler_factory: Callable[[], SchedulerBase],
+    duration_s: float = 8.0,
+    seed: int = 0,
+    **kw,
+) -> SimResult:
+    sim = Simulator(scenario, system, scheduler_factory(), duration_s=duration_s,
+                    seed=seed, **kw)
+    return sim.run()

@@ -1,0 +1,2 @@
+"""Data pipeline substrate."""
+from .pipeline import SyntheticLMData, batch_spec  # noqa: F401

@@ -1,0 +1,9 @@
+"""Distributed substrate: sharding rules, checkpointing, compression,
+elastic re-mesh + straggler detection."""
+from .sharding import (DEFAULT_RULES, adapt_rules_for, constrain,  # noqa
+                       sharding_for, spec_for, tree_shardings, tree_specs)
+from .checkpoint import CheckpointManager  # noqa: F401
+from .compression import (CompressionConfig, compress_with_feedback,  # noqa
+                          init_error_state)
+from .elastic import (FaultInjector, SimulatedPreemption,  # noqa: F401
+                      StragglerDetector, best_mesh_shape, remesh)

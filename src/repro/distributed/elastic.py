@@ -1,0 +1,98 @@
+"""Elastic scaling + straggler mitigation for 1000+ node deployments.
+
+Elastic re-mesh: when nodes join/leave, the runner rebuilds the mesh from
+the surviving device set (largest (data, model) factorization that keeps
+the model axis intact), then restores the latest checkpoint against the new
+shardings — CheckpointManager arrays carry global shapes, so restore IS the
+reshard. Nothing about the model or train-step code changes.
+
+Straggler mitigation: per-step watermark timing. The trainer records step
+wall times in a rolling window; a step slower than ``threshold`` x the
+rolling median flags a straggler event. On TPU pods the usual response is
+preemptive re-slice (swap the slow host out and elastic-restart), which is
+exactly the re-mesh + restore path above; the detector provides the signal
+and the hook.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+from jax.sharding import Mesh
+
+Array = jax.Array
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """Largest (data, model) grid for a possibly-degraded device count.
+
+    Keeps the model axis at the requested size (weights are sharded over it;
+    changing it mid-run would re-tile every matmul) and gives the rest to
+    data parallelism. Falls back to shrinking model parallelism only when
+    the device count no longer divides.
+    """
+    mp = model_parallel
+    while mp > 1 and n_devices % mp:
+        mp //= 2
+    return max(n_devices // mp, 1), mp
+
+
+def remesh(devices=None, model_parallel: int = 1,
+           axis_names: tuple[str, str] = ("data", "model")) -> Mesh:
+    devices = jax.devices() if devices is None else devices
+    dp, mp = best_mesh_shape(len(devices), model_parallel)
+    import numpy as np
+    grid = np.asarray(devices[: dp * mp]).reshape(dp, mp)
+    return Mesh(grid, axis_names)
+
+
+@dataclass
+class StragglerDetector:
+    """Rolling-median step-time watermark."""
+
+    window: int = 32
+    threshold: float = 2.0
+    min_samples: int = 8
+    times: deque = field(default_factory=lambda: deque(maxlen=64))
+    events: list = field(default_factory=list)
+    _t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> Optional[float]:
+        """Record a step; returns the slowdown factor if it straggled."""
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        if len(self.times) >= self.min_samples:
+            med = sorted(self.times)[len(self.times) // 2]
+            if med > 0 and dt > self.threshold * med:
+                factor = dt / med
+                self.events.append((step, factor))
+                self.times.append(dt)
+                return factor
+        self.times.append(dt)
+        return None
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic fault-injection hook for integration tests: raises a
+    simulated preemption at configured steps. The trainer's recovery path
+    (checkpoint -> restart -> resume) is exercised by tests through this."""
+
+    fail_at_steps: tuple[int, ...] = ()
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at_steps:
+            raise SimulatedPreemption(step)
+
+
+class SimulatedPreemption(RuntimeError):
+    def __init__(self, step: int):
+        super().__init__(f"simulated preemption at step {step}")
+        self.step = step

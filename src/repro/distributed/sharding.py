@@ -1,0 +1,121 @@
+"""Logical-axis sharding: the single place where parallelism policy lives.
+
+Every parameter and activation in the model stack is annotated with *logical*
+axis names ("batch", "embed", "heads", "experts", ...). A rule table maps the
+logical names onto physical mesh axes — swapping the table re-shards the whole
+model (DP / FSDP / TP / EP / SP) without touching model code.
+
+The production mesh axes (launch/mesh.py):
+  pod    — across pods (slow inter-pod links)
+  data   — data parallel / FSDP within a pod
+  model  — tensor / expert / sequence parallel
+
+Rules are (logical_axis -> mesh axis | tuple | None). ``None`` = replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Optional[Any]  # str | tuple[str, ...] | None
+
+#: Default rule table: FSDP over (pod, data), TP/EP/SP over model.
+DEFAULT_RULES: dict[str, MeshAxes] = {
+    # activations
+    "batch": ("pod", "data"),
+    "act_seq": None,            # sequence-parallel activations (long ctx)
+    "act_seq_q": None,          # attention-logits q rows (context parallel)
+    "kv_seq": None,             # KV-cache sequence axis (decode SP fallback)
+    "embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_ffn": "model",
+    "act_experts": "model",
+    "vocab_out": "model",
+    # parameters
+    "fsdp": ("pod", "data"),    # the FSDP-sharded param axis (usually embed)
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "ssm_inproj": "model",      # fused mamba in_proj output columns
+    "ffn_noshard": None,        # per-expert hidden (EP shards experts instead)
+    "experts": "model",
+    "vocab": "model",
+    "layers": None,             # stacked (scanned) layer axis
+    "ssm_state": None,
+    "conv_kernel": None,
+    "head_dim": None,
+}
+
+
+def spec_for(logical: Sequence[Optional[str]],
+             rules: Mapping[str, MeshAxes] | None = None) -> P:
+    """PartitionSpec for a tuple of logical axis names (None = replicated)."""
+    rules = DEFAULT_RULES if rules is None else rules
+    return P(*(rules.get(ax) if ax is not None else None for ax in logical))
+
+
+def sharding_for(mesh: Mesh, logical: Sequence[Optional[str]],
+                 rules: Mapping[str, MeshAxes] | None = None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical, rules))
+
+
+def constrain(x, logical: Sequence[Optional[str]],
+              rules: Mapping[str, MeshAxes] | None = None):
+    """with_sharding_constraint by logical names; no-op outside a mesh.
+
+    jax resolves a bare PartitionSpec against the context mesh (``with
+    mesh:``) and raises RuntimeError when there is none — which is exactly
+    the single-device test/smoke path, where the constraint is meaningless.
+    """
+    spec = spec_for(logical, rules)
+    if all(s is None for s in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (RuntimeError, ValueError, TypeError):
+        return x
+
+
+def tree_specs(logical_tree: Any, rules: Mapping[str, MeshAxes] | None = None):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda lg: spec_for(lg, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def tree_shardings(mesh: Mesh, logical_tree: Any,
+                   rules: Mapping[str, MeshAxes] | None = None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(logical_tree, rules))
+
+
+# -- divisibility-aware rule adaptation --------------------------------------
+
+def adapt_rules_for(rules: Mapping[str, MeshAxes], mesh: Mesh,
+                    dim_of: Mapping[str, int]) -> dict[str, MeshAxes]:
+    """Drop mesh axes a tensor dimension cannot be divided over.
+
+    ``dim_of`` maps logical axis name -> concrete dimension size for this
+    model (e.g. {"kv_heads": 1} for an MQA model). Any rule whose dimension
+    is not divisible by the product of its mesh-axis sizes is degraded to
+    replication, so the same rule table serves every architecture.
+    """
+    out = dict(rules)
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name, dim in dim_of.items():
+        axes = out.get(name)
+        if axes is None:
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        prod = 1
+        for a in ax_tuple:
+            prod *= axis_size.get(a, 1)
+        if dim % prod != 0:
+            out[name] = None
+    return out

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots of the serving/training path.
+
+Layout (per kernel): <name>.py holds the pl.pallas_call + BlockSpec tiling,
+ops.py the jit'd public wrapper, ref.py the pure-jnp oracle the tests sweep
+against. All kernels validate on CPU via interpret=True; TPU is the target.
+
+Import the wrappers via ``from repro.kernels import ops`` — the wrapper
+functions are deliberately NOT re-exported here because their names would
+shadow the kernel submodules of the same name.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,113 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper handles shape hygiene (padding to tile boundaries), chooses
+interpret mode per backend (TPU executes the compiled kernel; CPU runs the
+kernel body in interpret mode for validation), and exposes the same
+signature as the ``ref`` oracle it must match.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import gmm as _gmm
+from . import ssd as _ssd
+
+Array = jax.Array
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_seq(x: Array, axis: int, mult: int) -> Array:
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(
+    q: Array, k: Array, v: Array, *,
+    scale: Optional[float] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = _fa.DEFAULT_BLOCK_Q,
+    block_k: int = _fa.DEFAULT_BLOCK_K,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """[B, Sq, N, H] x [B, Sk, K, H]^2 -> [B, Sq, N, H]."""
+    interpret = _interpret_default() if interpret is None else interpret
+    sq, sk = q.shape[1], k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    qp = _pad_seq(q, 1, bq)
+    kp = _pad_seq(k, 1, bk)
+    vp = _pad_seq(v, 1, bk)
+    # padded keys are masked for real queries by causality (ki >= sk > qi)
+    assert causal or (qp.shape[1] == sq and kp.shape[1] == sk), \
+        "non-causal attention requires block-aligned sequence lengths"
+    out = _fa.flash_attention(
+        qp, kp, vp, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :sq]
+
+
+def decode_attention(
+    q: Array, k_cache: Array, v_cache: Array, pos: Array, *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_k: int = _dec.DEFAULT_BLOCK_K,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """[B, N, H] x cache [B, S, K, H]^2 -> [B, N, H]."""
+    interpret = _interpret_default() if interpret is None else interpret
+    s = k_cache.shape[1]
+    bk = min(block_k, s)
+    kp = _pad_seq(k_cache, 1, bk)
+    vp = _pad_seq(v_cache, 1, bk)
+    return _dec.decode_attention(
+        q, kp, vp, pos, scale=scale, window=window, softcap=softcap,
+        block_k=bk, interpret=interpret)
+
+
+def ssd(
+    x: Array, dt: Array, A: Array, B: Array, C: Array, D: Array, *,
+    chunk: int = 64,
+    interpret: Optional[bool] = None,
+) -> tuple[Array, Array]:
+    """Chunked SSD scan: ([B,S,H,P], ...) -> (y, final_state).
+
+    Padding tokens get dt=0: decay exp(A*0)=1 and zero input weight, so they
+    are exact no-ops for both outputs and the carried state.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    s = x.shape[1]
+    ch = min(chunk, s)
+    pad = (-s) % ch
+    if pad:
+        x = _pad_seq(x, 1, ch)
+        dt = _pad_seq(dt, 1, ch)
+        B = _pad_seq(B, 1, ch)
+        C = _pad_seq(C, 1, ch)
+    y, fin = _ssd.ssd(x, dt, A, B, C, D, chunk=ch, interpret=interpret)
+    return y[:, :s], fin
+
+
+def gmm(x_sorted: Array, w: Array, group_sizes: Array, *,
+        block_t: int = _gmm.DEFAULT_BLOCK_T,
+        block_f: int = _gmm.DEFAULT_BLOCK_F,
+        interpret: Optional[bool] = None) -> Array:
+    """Ragged grouped matmul [T, D] x [E, D, F] -> [T, F]."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _gmm.gmm(x_sorted, w, group_sizes, block_t=block_t,
+                    block_f=block_f, interpret=interpret)

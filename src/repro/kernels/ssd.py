@@ -1,0 +1,142 @@
+"""Mamba2 SSD (state-space duality) chunked-scan kernel (Pallas / TPU).
+
+The SSD insight: the selective-state recurrence
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t^T        y_t = C_t h_t + D x_t
+
+decomposes into (i) an intra-chunk part that is a masked, decay-weighted
+attention-like matmul (MXU-friendly: [L, L] x [L, P]) and (ii) an
+inter-chunk state carry at chunk granularity (a [N, P] state per head).
+This trades the sequential length-S scan for S/L sequential steps of dense
+[L,·] matmuls — exactly the restructuring TPU wants (long vector scans are
+VPU-serial; chunk matmuls hit the MXU).
+
+Kernel layout: grid (batch, head, chunk), chunk innermost/sequential; the
+running [N, P] state lives in VMEM scratch across chunk steps. B/C are
+shared across heads (G=1), so their tiles are indexed by (batch, chunk)
+only; the compiler keeps them resident across the head loop... heads are
+the second grid axis, so B/C tiles revisit — acceptable: N is small (64-128)
+and the x/y tiles dominate VMEM.
+
+All math in fp32 (the recurrence is exp-weighted; bf16 decays drift).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+    y_ref, fin_ref,
+    state_scr,
+    *,
+    chunk: int,
+):
+    cb = pl.program_id(2)
+    ncb = pl.num_programs(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [L]
+    a = a_ref[0].astype(jnp.float32)                 # scalar (this head)
+    bmat = b_ref[0, :, :].astype(jnp.float32)        # [L, N]
+    cmat = c_ref[0, :, :].astype(jnp.float32)        # [L, N]
+    dd = d_ref[0].astype(jnp.float32)                # scalar
+
+    la = a * dt                                      # [L] log-decays (<= 0)
+    cum = jnp.cumsum(la)                             # inclusive
+
+    # intra-chunk: y_i = sum_{j<=i} exp(cum_i - cum_j) (C_i . B_j) dt_j x_j
+    seg = jnp.exp(cum[:, None] - cum[None, :])       # [L, L]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where(ii >= jj, seg, 0.0)
+    m = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [L, L]
+    m = m * seg * dt[None, :]
+    y = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [L, P]
+
+    # inter-chunk: y_i += exp(cum_i) * C_i @ state_in
+    state = state_scr[...]                           # [N, P]
+    y_in = jax.lax.dot_general(cmat, state, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    y = y + jnp.exp(cum)[:, None] * y_in + dd * x
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: state' = exp(cum_L) state + sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+    w = jnp.exp(cum[-1] - cum) * dt                  # [L]
+    upd = jax.lax.dot_general(bmat * w[:, None], x,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [N, P]
+    state_scr[...] = jnp.exp(cum[-1]) * state + upd
+
+    @pl.when(cb == ncb - 1)
+    def _emit_final():
+        fin_ref[0, 0, :, :] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: Array,                    # [B, S, H, P]
+    dt: Array,                   # [B, S, H]  (softplus'd)
+    A: Array,                    # [H]        (negative)
+    B: Array,                    # [B, S, N]
+    C: Array,                    # [B, S, N]
+    D: Array,                    # [H]
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,N,P] fp32)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    grid = (b, h, s // chunk)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, hh, cc: (bb, cc, hh)),
+            pl.BlockSpec((1,), lambda bb, hh, cc: (hh,)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, cc: (bb, cc, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, cc: (bb, cc, 0)),
+            pl.BlockSpec((1,), lambda bb, hh, cc: (hh,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bb, hh, cc: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, B, C, D)
+    return y, fin
+
+
+def flops(b: int, s: int, h: int, p: int, n: int, chunk: int) -> int:
+    """Analytic MACs: CB^T [L,N,L] + M@x [L,L,P] + state in/out [L,N,P] each."""
+    nc = s // chunk
+    per_chunk = chunk * chunk * n + chunk * chunk * p + 2 * chunk * n * p
+    return b * h * nc * per_chunk

@@ -1,0 +1,1 @@
+"""Launcher: production meshes, dry-run lowering, train/serve entry points."""

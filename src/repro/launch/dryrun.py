@@ -1,0 +1,372 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**specs).compile()`` must succeed on the
+single-pod (16, 16) mesh and the (2, 16, 16) multi-pod mesh for every
+assigned architecture x input-shape cell, and the compiled artifact yields
+the roofline terms (memory_analysis / cost_analysis / collective bytes
+parsed from the optimized HLO).
+
+The two lines above MUST precede any other import: jax locks the device
+count at first init, and the production mesh needs 512 placeholder host
+devices. Nothing else in the repo sets this flag (tests and benches see
+the real single CPU device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+        --shape train_4k --mesh single                           # one cell
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, ArchConfig, SHAPES, ShapeCell,
+                           cell_applicable, get_config)
+from repro.data.pipeline import batch_spec
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models import model as M
+from repro.training import TrainConfig, OptimConfig, build_train_step
+from repro.training import optim as opt_mod
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "benchmarks", "artifacts",
+                            "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<rtype>\([^)]*\)|[a-z0-9\[\],{}\s]+?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        bpe = _DTYPE_BYTES.get(m.group("dt"))
+        if bpe is None:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * bpe
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device bytes moved by each collective family, from optimized HLO.
+
+    Approximation: one traversal of the result bytes per op (ring algorithms
+    move ~2x for all-reduce; -start ops' tuple types double-count the input
+    alias, so tuples take the max element instead of the sum).
+    """
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        rtype = m.group("rtype").strip()
+        if rtype.startswith("("):
+            parts = [p for p in rtype.strip("()").split(",")]
+            b = max((_shape_bytes(p) for p in parts), default=0)
+        else:
+            b = _shape_bytes(rtype)
+        op = m.group("op")
+        out[op] = out.get(op, 0.0) + float(b)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions + input specs per cell kind
+# ---------------------------------------------------------------------------
+
+
+def serve_step(cfg: ArchConfig, rules: dict):
+    """One decode step: new token against a seq_len KV cache."""
+    constrain = lambda x, lg: shd.constrain(x, lg, rules)
+
+    def fn(params, tokens, cache, pos):
+        return M.decode_step(params, cfg, tokens, cache, pos, constrain)
+
+    return fn
+
+
+def prefill_step(cfg: ArchConfig, rules: dict):
+    constrain = lambda x, lg: shd.constrain(x, lg, rules)
+
+    def fn(params, tokens, cache, frontend=None):
+        return M.prefill(params, cfg, tokens, cache, frontend, constrain)
+
+    return fn
+
+
+def input_specs(arch: str, shape: str, cfg: Optional[ArchConfig] = None
+                ) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn
+    (weak-type-correct, shardable, no device allocation)."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    specs: dict[str, Any] = {}
+    if cell.kind == "train":
+        specs.update(batch_spec(b, s))
+        if cfg.frontend:
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    elif cell.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["cache"] = M.cache_spec(cfg, b, s)
+        if cfg.frontend:
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        specs["cache"] = M.cache_spec(cfg, b, s)
+        specs["pos"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return specs
+
+
+def params_spec(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def model_flops(cfg: ArchConfig, cell: ShapeCell, pspec: Any) -> float:
+    """6*N*D (train) / 2*N*D (serve) with N = active params, D = tokens.
+
+    N is counted exactly from the parameter spec tree; MoE expert weights
+    are scaled by top_k / num_experts (only routed experts are active).
+    """
+    total = active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(pspec)[0]:
+        keys = [getattr(p, "key", str(p)) for p in path]
+        size = float(leaf.size)
+        total += size
+        if cfg.num_experts and "moe" in keys and any(
+                k in ("wi", "wg", "wo") for k in keys):
+            size *= cfg.num_experts_per_tok / cfg.num_experts
+        active += size
+    if cell.kind == "train":
+        return 6.0 * active * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * active * cell.global_batch * cell.seq_len
+    return 2.0 * active * cell.global_batch     # decode: one token per seq
+
+
+# ---------------------------------------------------------------------------
+# lowering one cell
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape: str, mesh, *, remat: str = "dots",
+               rules_override: Optional[dict] = None,
+               verbose: bool = True, return_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    cfg = dataclasses.replace(
+        cfg, remat=remat if cell.kind == "train" else "none",
+        scan_layers=True)
+    rules = rules_override or rules_for(cfg, mesh, cell)
+    t0 = time.time()
+
+    pspec = params_spec(cfg)
+    paxes = M.param_axes(cfg)
+    p_shard = shd.tree_shardings(mesh, paxes, rules)
+
+    if cell.kind == "train":
+        tcfg = TrainConfig(optim=OptimConfig())
+        step = build_train_step(cfg, tcfg, rules)
+        state_spec = {
+            "params": pspec,
+            "opt": {
+                "m": jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                    pspec),
+                "v": jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                    pspec),
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            },
+        }
+        state_shard = {
+            "params": p_shard,
+            "opt": {"m": p_shard, "v": p_shard,
+                    "step": shd.sharding_for(mesh, (), rules)},
+        }
+        specs = input_specs(arch, shape, cfg)
+        batch_shard = {
+            "tokens": shd.sharding_for(mesh, ("batch", "act_seq"), rules),
+            "labels": shd.sharding_for(mesh, ("batch", "act_seq"), rules),
+        }
+        if "frontend" in specs:
+            batch_shard["frontend"] = shd.sharding_for(
+                mesh, ("batch", None, None), rules)
+        batch_spec_ = {k: specs[k] for k in batch_shard}
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_shard, batch_shard),
+                out_shardings=(state_shard, None),
+            ).lower(state_spec, batch_spec_)
+    else:
+        specs = input_specs(arch, shape, cfg)
+        caxes = M.cache_axes(cfg)
+        c_shard = shd.tree_shardings(mesh, caxes, rules)
+        tok_shard = shd.sharding_for(mesh, ("batch", None), rules)
+        if cell.kind == "prefill":
+            step = prefill_step(cfg, rules)
+            args = [specs["tokens"], specs["cache"]]
+            in_sh = [tok_shard, c_shard]
+            if "frontend" in specs:
+                args.append(specs["frontend"])
+                in_sh.append(shd.sharding_for(mesh, ("batch", None, None),
+                                              rules))
+            with mesh:
+                lowered = jax.jit(
+                    step, in_shardings=(p_shard, *in_sh),
+                    out_shardings=(None, c_shard),
+                ).lower(pspec, *args)
+        else:
+            step = serve_step(cfg, rules)
+            pos_shard = shd.sharding_for(mesh, ("batch",), rules)
+            with mesh:
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_shard, tok_shard, c_shard, pos_shard),
+                    out_shardings=(None, c_shard),
+                ).lower(pspec, specs["tokens"], specs["cache"],
+                        specs["pos"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    n_dev = mesh.devices.size
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll["total"] / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, cell, pspec)
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "mesh_axes": list(mesh.axis_names),
+        "n_devices": int(n_dev),
+        "kind": cell.kind,
+        "flops_per_dev": flops_dev,
+        "bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "terms_s": terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(flops_dev * n_dev, 1.0),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "remat": cfg.remat,
+    }
+    if return_hlo:
+        result["hlo_text"] = hlo_text
+    if verbose:
+        print(f"[dryrun] {arch:>24s} {shape:<12s} mesh={result['mesh']:<8s} "
+              f"compute={terms['compute_s']*1e3:9.3f}ms "
+              f"memory={terms['memory_s']*1e3:9.3f}ms "
+              f"coll={terms['collective_s']*1e3:9.3f}ms "
+              f"dom={dominant.split('_')[0]:<10s} "
+              f"lower+compile={t_lower + t_compile:6.1f}s")
+    return result
+
+
+def run_cells(archs, shapes, meshes, out_dir: str = ARTIFACT_DIR,
+              remat: str = "dots") -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape in shapes:
+                if not cell_applicable(cfg, shape):
+                    print(f"[dryrun] {arch:>24s} {shape:<12s} SKIP "
+                          f"(full-attention arch, see DESIGN.md)")
+                    continue
+                tag = f"{mesh_name}__{arch}__{shape}"
+                path = os.path.join(out_dir, tag + ".json")
+                try:
+                    res = lower_cell(arch, shape, mesh, remat=remat)
+                    res["status"] = "ok"
+                except Exception as e:  # noqa: BLE001 — record, keep going
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[dryrun] {arch:>24s} {shape:<12s} ERROR {e!r}")
+                results.append(res)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--remat", default="dots",
+                    choices=["none", "dots", "dots_nobatch", "full"])
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = (["single", "multipod"] if args.mesh == "both"
+              else [args.mesh])
+    results = run_cells(archs, shapes, meshes, out_dir=args.out,
+                        remat=args.remat)
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"[dryrun] {ok}/{len(results)} cells compiled OK")
+    if ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""HLO profiler for the dry-run: what dominates 'bytes accessed'?
+
+Groups the optimized HLO's buffer traffic by op kind and by shape, so a
+§Perf iteration can name the tensor it is about to shrink.
+
+    PYTHONPATH=src python -m repro.launch.inspect_hlo \
+        --arch qwen1.5-4b --shape train_4k --top 25
+"""
+import argparse
+import collections
+import re
+
+from repro.configs import ARCH_IDS, SHAPES
+from repro.launch.dryrun import lower_cell, _shape_bytes
+from repro.launch.mesh import make_production_mesh
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.-]+ = (?P<rtype>\([^)]*\)|\S+)\s+"
+    r"(?P<op>[\w-]+)\(")
+
+
+def analyze(hlo: str, top: int = 20):
+    by_op = collections.Counter()
+    by_shape = collections.Counter()
+    count_op = collections.Counter()
+    for line in hlo.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if op in ("parameter", "constant", "tuple", "get-tuple-element"):
+            continue
+        b = _shape_bytes(m.group("rtype"))
+        if b <= 0:
+            continue
+        by_op[op] += b
+        count_op[op] += 1
+        if b > (1 << 20):
+            by_shape[f"{m.group('rtype')[:60]} {op}"] += b
+    print("top ops by result bytes (per-device, summed over instrs):")
+    for op, b in by_op.most_common(top):
+        print(f"  {op:>28s} {b/1e9:10.2f} GB  x{count_op[op]}")
+    print("top individual shapes:")
+    for sh, b in by_shape.most_common(top):
+        print(f"  {b/1e9:10.2f} GB  {sh}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod"])
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    res = lower_cell(args.arch, args.shape, mesh, remat=args.remat,
+                     verbose=True, return_hlo=True)
+    print("terms:", {k: round(v, 4) for k, v in res["terms_s"].items()})
+    print("collectives:", {k: round(v / 1e9, 3)
+                           for k, v in res["collective_bytes_per_dev"].items()})
+    analyze(res["hlo_text"], top=args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""JAX model substrate: the 10 assigned LM-family architectures.
+
+Everything is functional (init/apply pairs over plain dict pytrees) with a
+parallel *logical-axis* pytree per module, consumed by
+``repro.distributed.sharding`` to derive PartitionSpecs for any mesh.
+"""
+from .model import LM, init_params, param_axes  # noqa: F401

@@ -1,0 +1,295 @@
+"""Multi-head attention: MHA / GQA / MQA with RoPE, QK-norm, logit softcap,
+sliding-window (local) masking, optional QKV bias, and a KV cache for decode.
+
+Three entry points:
+  * ``attend_full``  — training / prefill self-attention over [B, S, D].
+  * ``attend_decode``— one new token per sequence against a KV cache.
+  * ``init_cache``   — allocate (or spec) the per-layer cache.
+
+``constrain`` is a callback (x, logical_axes) -> x used for sharding
+annotations; the transformer layer passes the mesh-aware one.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import Array, dense_init, rmsnorm, rmsnorm_init, rmsnorm_axes
+
+Constrain = Callable[[Array, tuple], Array]
+_id_constrain: Constrain = lambda x, _: x
+
+NEG_INF = -2.3819763e38  # bf16-safe large negative
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: Optional[float] = 10000.0   # None = no RoPE (absolute pos)
+    logit_softcap: Optional[float] = None
+    window: Optional[int] = None            # sliding window (local layers)
+    scale: Optional[float] = None           # default head_dim ** -0.5
+    q_in_dim: Optional[int] = None          # != d_model for zamba2 concat in
+    out_dim: Optional[int] = None           # output projection width
+
+    @property
+    def resolved_scale(self) -> float:
+        return self.scale if self.scale is not None else self.head_dim ** -0.5
+
+    @property
+    def in_dim(self) -> int:
+        return self.q_in_dim or self.d_model
+
+    @property
+    def o_dim(self) -> int:
+        return self.out_dim or self.d_model
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key: Array, cfg: AttnConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h = cfg.in_dim, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.num_heads, h), d),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads, h), d),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads, h), d),
+        "wo": dense_init(ks[3], (cfg.num_heads, h, cfg.o_dim),
+                         cfg.num_heads * h),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, h), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, h), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, h), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(h)
+        p["k_norm"] = rmsnorm_init(h)
+    return p
+
+
+def attn_axes(cfg: AttnConfig) -> dict:
+    p = {
+        "wq": ("fsdp", "heads", "head_dim"),
+        "wk": ("fsdp", "kv_heads", "head_dim"),
+        "wv": ("fsdp", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("heads", "head_dim")
+        p["bk"] = ("kv_heads", "head_dim")
+        p["bv"] = ("kv_heads", "head_dim")
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_axes()
+        p["k_norm"] = rmsnorm_axes()
+    return p
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(params: dict, cfg: AttnConfig, x: Array,
+                 positions: Array) -> tuple[Array, Array, Array]:
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dkh->bskh", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dkh->bskh", x, params["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if cfg.rope_theta is not None:
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: Array, num_heads: int) -> Array:
+    """[B, S, K, H] -> [B, S, N, H] by repeating each kv head N/K times."""
+    kv = k.shape[2]
+    if kv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kv, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# full (train / prefill) attention
+# ---------------------------------------------------------------------------
+
+
+def _causal_mask(s_q: int, s_k: int, window: Optional[int],
+                 q_offset: Array | int = 0) -> Array:
+    """[s_q, s_k] boolean mask; True = attend. ``q_offset`` shifts query
+    positions (prefill continuation)."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m = m & (ki > qi - window)
+    return m
+
+
+def attend_full(params: dict, cfg: AttnConfig, x: Array, positions: Array,
+                constrain: Constrain = _id_constrain,
+                impl: str = "xla") -> Array:
+    """Causal self-attention over the whole sequence. x: [B, S, D_in]."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = constrain(q, ("batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("batch", "act_seq", "act_kv_heads", None))
+    v = constrain(v, ("batch", "act_seq", "act_kv_heads", None))
+    if impl == "flash":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, scale=cfg.resolved_scale,
+                                 window=cfg.window,
+                                 softcap=cfg.logit_softcap)
+    else:
+        k = _repeat_kv(k, cfg.num_heads)
+        v = _repeat_kv(v, cfg.num_heads)
+        logits = jnp.einsum("bqnh,bknh->bnqk", q, k) * cfg.resolved_scale
+        # the [S, S] logits are the big intermediate of the XLA path —
+        # pin their sharding (batch x heads, and q-seq context-parallel
+        # when heads don't divide the model axis) so SPMD never
+        # replicates them. The Pallas flash kernel never materializes
+        # this tensor at all on TPU.
+        lg_axes = ("batch", "act_heads", "act_seq_q", None)
+        logits = constrain(logits, lg_axes)
+        logits = layers.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        mask = _causal_mask(q.shape[1], k.shape[1], cfg.window)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        probs = constrain(probs, lg_axes)
+        o = jnp.einsum("bnqk,bknh->bqnh", probs, v)
+    o = constrain(o, ("batch", "act_seq", "act_heads", None))
+    return jnp.einsum("bqnh,nho->bqo", o, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode attention
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch: int, max_seq: int, cfg: AttnConfig,
+               dtype=jnp.bfloat16) -> dict:
+    shape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_spec(batch: int, max_seq: int, cfg: AttnConfig,
+               dtype=jnp.bfloat16) -> dict:
+    shape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def cache_axes() -> dict:
+    return {"k": ("batch", "kv_seq", "act_kv_heads", None),
+            "v": ("batch", "kv_seq", "act_kv_heads", None)}
+
+
+def update_cache(cache: dict, k_new: Array, v_new: Array,
+                 pos: Array) -> dict:
+    """Write one new token per sequence. k_new: [B, 1, K, H], pos: [B]."""
+    b = k_new.shape[0]
+    idx = jnp.arange(b)
+    k = cache["k"].at[idx, pos].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[idx, pos].set(v_new[:, 0].astype(cache["v"].dtype))
+    return {"k": k, "v": v}
+
+
+def fill_cache(cache: dict, k_new: Array, v_new: Array) -> dict:
+    """Prefill: write the first S positions wholesale. k_new: [B, S, K, H]."""
+    s = k_new.shape[1]
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), 0, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), 0, axis=1)
+    del s
+    return {"k": k, "v": v}
+
+
+def attend_decode(params: dict, cfg: AttnConfig, x: Array, cache: dict,
+                  pos: Array, constrain: Constrain = _id_constrain,
+                  ) -> tuple[Array, dict]:
+    """One-token decode. x: [B, 1, D_in], pos: [B] (current write index).
+
+    Returns (out [B, 1, D_out], updated cache). Attends over cache[0..pos].
+    The softmax statistics are computed in fp32; masking covers both the
+    causal bound and the sliding window if configured.
+    """
+    q, k_new, v_new = _project_qkv(params, cfg, x, pos[:, None])
+    cache = update_cache(cache, k_new, v_new, pos)
+    k, v = cache["k"], cache["v"]
+    k = constrain(k, ("batch", "kv_seq", "act_kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "kv_seq", "act_kv_heads", "head_dim"))
+    kh = _repeat_kv(k, cfg.num_heads)
+    vh = _repeat_kv(v, cfg.num_heads)
+    logits = jnp.einsum("bqnh,bknh->bnqk", q, kh) * cfg.resolved_scale
+    # decode logits follow the CACHE's sharding: its sequence axis when the
+    # cache is seq-sharded (flash-decode style — each shard owns a KV
+    # slice; softmax stats combine via tiny all-reduces), its head axis
+    # otherwise. Without this pin, SPMD pulls the logits toward a layout
+    # that replicates the whole cache per step.
+    lg_axes = ("batch", "act_kv_heads", None, "kv_seq")
+    logits = constrain(logits, lg_axes)
+    logits = layers.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    ki = jnp.arange(k.shape[1])[None, None, None, :]
+    mask = ki <= pos[:, None, None, None]
+    if cfg.window is not None:
+        mask = mask & (ki > pos[:, None, None, None] - cfg.window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    probs = constrain(probs, lg_axes)
+    o = jnp.einsum("bnqk,bknh->bqnh", probs, vh)
+    out = jnp.einsum("bqnh,nho->bqo", o, params["wo"].astype(x.dtype))
+    return out, cache
+
+
+def attend_prefill(params: dict, cfg: AttnConfig, x: Array, positions: Array,
+                   cache: dict, constrain: Constrain = _id_constrain,
+                   impl: str = "xla") -> tuple[Array, dict]:
+    """Prefill: full attention over the prompt AND fill the cache."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    cache = fill_cache(cache, k, v)
+    q = constrain(q, ("batch", "act_seq", "act_heads", None))
+    if impl == "flash":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, scale=cfg.resolved_scale,
+                                 window=cfg.window,
+                                 softcap=cfg.logit_softcap)
+    else:
+        kh = _repeat_kv(k, cfg.num_heads)
+        vh = _repeat_kv(v, cfg.num_heads)
+        logits = jnp.einsum("bqnh,bknh->bnqk", q, kh) * cfg.resolved_scale
+        logits = layers.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        mask = _causal_mask(q.shape[1], k.shape[1], cfg.window)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bnqk,bknh->bqnh", probs, vh)
+    out = jnp.einsum("bqnh,nho->bqo", o, params["wo"].astype(x.dtype))
+    return out, cache
+
+
+def flops_full(cfg: AttnConfig, batch: int, seq: int) -> int:
+    """Analytic MACs for one full-attention layer (projections + attention)."""
+    d, n, k_, h = cfg.in_dim, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    proj = batch * seq * d * h * (n + 2 * k_) + batch * seq * n * h * cfg.o_dim
+    ctx = seq if cfg.window is None else min(seq, cfg.window)
+    attn = 2 * batch * n * seq * ctx * h // 2  # causal halves the square
+    return proj + attn

@@ -1,0 +1,175 @@
+"""Shared building blocks: norms, MLPs, embeddings, rotary embeddings.
+
+Conventions
+-----------
+* Every module is an (init, apply) pair over plain dict pytrees.
+* ``*_axes`` functions return a pytree of logical-axis tuples with the same
+  structure as the params — the sharding layer maps these onto the mesh.
+* Params are stored in float32 ("master" precision); ``apply`` casts to the
+  compute dtype carried by the activations, so the same params serve the
+  bf16 forward pass and the fp32 optimizer update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: Array, shape: tuple[int, ...], in_dim: int,
+               dtype=jnp.float32) -> Array:
+    """Truncated-normal fan-in init (MaxText-style 1/sqrt(fan_in))."""
+    std = 1.0 / math.sqrt(in_dim)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key: Array, shape: tuple[int, ...], dtype=jnp.float32) -> Array:
+    return jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (all assigned archs are RMSNorm-family; gemma uses (1 + w) scale)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int) -> dict:
+    return {"scale": jnp.zeros((dim,), jnp.float32)}
+
+
+def rmsnorm_axes() -> dict:
+    return {"scale": (None,)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    """RMSNorm with gemma-style (1 + scale); scale==0 init is identity."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP: gated (SwiGLU / GeGLU) and non-gated (gelu / relu^2) variants
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def mlp_init(key: Array, d_model: int, d_ff: int, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d_model, d_ff), d_model),
+         "wo": dense_init(ks[2], (d_ff, d_model), d_ff)}
+    if gated:
+        p["wg"] = dense_init(ks[1], (d_model, d_ff), d_model)
+    return p
+
+
+def mlp_axes(gated: bool = True) -> dict:
+    p = {"wi": ("fsdp", "ffn"), "wo": ("ffn", "fsdp")}
+    if gated:
+        p["wg"] = ("fsdp", "ffn")
+    return p
+
+
+def mlp(params: dict, x: Array, act: str = "silu") -> Array:
+    """[B, S, D] -> [B, S, D]. Gated if params carry ``wg``."""
+    dtype = x.dtype
+    fn = _ACTS[act]
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(dtype))
+    if "wg" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dtype))
+        h = fn(g) * h
+    else:
+        h = fn(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Token embedding (tied or untied unembedding)
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key: Array, vocab: int, d_model: int, tied: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"table": embed_init(k1, (vocab, d_model))}
+    if not tied:
+        p["unembed"] = dense_init(k2, (d_model, vocab), d_model)
+    return p
+
+
+def embedding_axes(tied: bool) -> dict:
+    p = {"table": ("vocab", "fsdp")}
+    if not tied:
+        p["unembed"] = ("fsdp", "vocab")
+    return p
+
+
+def embed_tokens(params: dict, tokens: Array, scale: bool,
+                 dtype=jnp.bfloat16) -> Array:
+    """[B, S] int32 -> [B, S, D]."""
+    table = params["table"].astype(dtype)
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(table.shape[-1]), dtype)
+    return x
+
+
+def unembed(params: dict, x: Array, softcap: Optional[float]) -> Array:
+    """[B, S, D] -> [B, S, V] logits (fp32)."""
+    w = params.get("unembed")
+    if w is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["table"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Apply RoPE. x: [B, S, N, H], positions: [B, S] (int32)."""
+    h = x.shape[-1]
+    half = h // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_pos(positions: Array, d_model: int, dtype=jnp.bfloat16) -> Array:
+    """Sinusoidal absolute position embedding [B, S] -> [B, S, D]
+    (MusicGen-style transformer uses sinusoidal embeddings)."""
+    half = d_model // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

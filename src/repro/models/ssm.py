@@ -1,0 +1,220 @@
+"""Mamba2 (SSD) block: in_proj -> causal conv -> selective scan -> gated out.
+
+Follows the Mamba2 layout (arXiv:2405.21060) with n_groups=1:
+
+  u [B,S,D] --in_proj--> [z (d_in) | x (d_in) | B (N) | C (N) | dt (H)]
+  (x|B|C) -> causal depthwise conv1d (K=4) -> silu
+  dt -> softplus(dt + dt_bias);  A = -exp(A_log)  (scalar per head)
+  y = SSD(x, dt, A, B, C, D)                      (kernels/ssd or ref)
+  out = out_proj( RMSNorm(y * silu(z)) )
+
+Full-sequence apply uses the chunked SSD kernel (Pallas on TPU, oracle on
+CPU); decode-step carries (conv_state [B,K-1,C_conv], ssm_state [B,H,N,P])
+and is pure jnp (a single recurrence step is bandwidth-bound anyway).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Array, dense_init, rmsnorm, rmsnorm_init, rmsnorm_axes
+
+Constrain = Callable[[Array, tuple], Array]
+_id = lambda x, _: x
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    state: int                  # N
+    heads: int                  # H
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 256
+    impl: str = "ref"           # "ref" (XLA chunked) | "pallas"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_inner % self.heads == 0, (self.d_inner, self.heads)
+        return self.d_inner // self.heads
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.state
+
+    @property
+    def proj_out(self) -> int:
+        return 2 * self.d_inner + 2 * self.state + self.heads
+
+
+def ssm_init(key: Array, cfg: SSMConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d, di = cfg.d_model, cfg.d_inner
+    # A_log init in [log 1, log 16] (mamba2 default); dt_bias so that
+    # softplus(dt_bias) spans ~[1e-3, 1e-1]
+    a = jnp.log(jnp.linspace(1.0, 16.0, cfg.heads, dtype=jnp.float32))
+    u = jax.random.uniform(ks[2], (cfg.heads,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d, cfg.proj_out), d),
+        "conv_w": 0.1 * jax.random.normal(
+            ks[1], (cfg.conv_kernel, cfg.conv_channels), jnp.float32),
+        "conv_b": jnp.zeros((cfg.conv_channels,), jnp.float32),
+        "A_log": a,
+        "D": jnp.ones((cfg.heads,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": rmsnorm_init(di),
+        "out_proj": dense_init(ks[3], (di, d), di),
+    }
+
+
+def ssm_axes() -> dict:
+    return {
+        "in_proj": ("fsdp", "ssm_inproj"),
+        "conv_w": ("conv_kernel", None),
+        "conv_b": (None,),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": rmsnorm_axes(),
+        "out_proj": ("ffn", "fsdp"),
+    }
+
+
+def _split_proj(cfg: SSMConfig, zxbcdt: Array):
+    di, n, h = cfg.d_inner, cfg.state, cfg.heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + cfg.conv_channels]
+    dt = zxbcdt[..., di + cfg.conv_channels:]
+    assert dt.shape[-1] == h
+    del n
+    return z, xbc, dt
+
+
+def _causal_conv(params: dict, xbc: Array) -> Array:
+    """Depthwise causal conv1d over [B, S, C] with kernel K.
+
+    One fused lax.conv (feature_group_count=C) instead of K shifted
+    multiply-adds: the unrolled form materialized ~3K full [B, S, C]
+    intermediates per layer, which dominated the memory roofline term of
+    the mamba/hybrid archs (§Perf table-wide notes).
+    """
+    k, c = params["conv_w"].shape
+    w = params["conv_w"].astype(xbc.dtype).reshape(k, 1, c)   # [K, I=1, C]
+    out = jax.lax.conv_general_dilated(
+        xbc, w,
+        window_strides=(1,),
+        padding=[(k - 1, 0)],                                  # causal
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return out + params["conv_b"].astype(xbc.dtype)
+
+
+def _run_ssd(cfg: SSMConfig, xh: Array, dt: Array, a: Array, bmat: Array,
+             cmat: Array, d: Array) -> tuple[Array, Array]:
+    """Dispatch to the Pallas kernel or the XLA chunked oracle, padding the
+    sequence to a chunk multiple (padded tokens get dt=0: exact no-ops)."""
+    s = xh.shape[1]
+    ch = min(cfg.chunk, s)
+    pad = (-s) % ch
+    if pad:
+        widths4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        widths3 = ((0, 0), (0, pad), (0, 0))
+        xh = jnp.pad(xh, widths4)
+        dt = jnp.pad(dt, widths3)          # zero dt => decay 1, zero update
+        bmat = jnp.pad(bmat, widths3)
+        cmat = jnp.pad(cmat, widths3)
+    if cfg.impl == "pallas":
+        from repro.kernels import ops as kops
+        y, fin = kops.ssd(xh, dt, a, bmat, cmat, d, chunk=ch)
+    else:
+        from repro.kernels import ref as kref
+        y, fin = kref.ssd_chunked(xh, dt, a, bmat, cmat, d, chunk=ch)
+    return y[:, :s], fin
+
+
+def ssm_apply(params: dict, cfg: SSMConfig, u: Array,
+              constrain: Constrain = _id) -> Array:
+    """Full-sequence Mamba2 block. u: [B, S, D] -> [B, S, D]."""
+    b, s, _ = u.shape
+    dtype = u.dtype
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, params["in_proj"].astype(dtype))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(params, xbc))
+    x = xbc[..., : cfg.d_inner]
+    bmat = xbc[..., cfg.d_inner: cfg.d_inner + cfg.state].astype(jnp.float32)
+    cmat = xbc[..., cfg.d_inner + cfg.state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["A_log"])
+    xh = x.reshape(b, s, cfg.heads, cfg.head_dim)
+    xh = constrain(xh, ("batch", "act_seq", "act_heads", None))
+    y, _ = _run_ssd(cfg, xh, dt, a, bmat, cmat, params["D"])
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode step with carried state
+# ---------------------------------------------------------------------------
+
+
+def init_state(batch: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.conv_channels),
+                          dtype),
+        "ssm": jnp.zeros((batch, cfg.heads, cfg.state, cfg.head_dim),
+                         jnp.float32),
+    }
+
+
+def state_spec(batch: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        init_state(batch, cfg, dtype))
+
+
+def state_axes() -> dict:
+    return {"conv": ("batch", None, None),
+            "ssm": ("batch", "act_heads", None, None)}
+
+
+def ssm_decode(params: dict, cfg: SSMConfig, u: Array, state: dict,
+               constrain: Constrain = _id) -> tuple[Array, dict]:
+    """One-token step. u: [B, 1, D] -> ([B, 1, D], new state)."""
+    b = u.shape[0]
+    dtype = u.dtype
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, params["in_proj"].astype(dtype))
+    z, xbc_new, dt = _split_proj(cfg, zxbcdt)          # [B,1,*]
+    # conv over (state window + new input)
+    window = jnp.concatenate(
+        [state["conv"].astype(dtype), xbc_new], axis=1)  # [B, K, C]
+    w = params["conv_w"].astype(dtype)                   # [K, C]
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(dtype)
+    xbc = jax.nn.silu(conv_out)                          # [B, C]
+    x = xbc[:, : cfg.d_inner]
+    bmat = xbc[:, cfg.d_inner: cfg.d_inner + cfg.state].astype(jnp.float32)
+    cmat = xbc[:, cfg.d_inner + cfg.state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None, :])   # [B, H]
+    a = -jnp.exp(params["A_log"])                        # [H]
+    xh = x.reshape(b, cfg.heads, cfg.head_dim).astype(jnp.float32)
+    decay = jnp.exp(a[None, :] * dt)                     # [B, H]
+    upd = jnp.einsum("bn,bh,bhp->bhnp", bmat, dt, xh)
+    ssm = decay[:, :, None, None] * state["ssm"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat, ssm)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, cfg.d_inner).astype(dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dtype))
+    new_state = {"conv": window[:, 1:].astype(state["conv"].dtype), "ssm": ssm}
+    return out, new_state

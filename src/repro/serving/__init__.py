@@ -1,0 +1,3 @@
+"""Multi-model real-time serving: the DREAM scheduler driving JAX models."""
+from .engine import (EngineReport, ModelHandle, RequestQueue,  # noqa: F401
+                     ServeRequest, ServingEngine, VirtualAccelerator)

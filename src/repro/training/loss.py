@@ -1,0 +1,47 @@
+"""Loss functions: next-token cross entropy with z-loss and MoE aux loss."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+IGNORE = -1  # label value excluded from the loss
+
+
+def cross_entropy(logits: Array, labels: Array, *,
+                  z_loss: float = 1e-4) -> tuple[Array, dict[str, Array]]:
+    """Token-mean CE. logits: [B, S, V] (fp32), labels: [B, S] int32.
+
+    z-loss (log^2 Z regularizer) keeps the softmax normalizer bounded in
+    bf16 training — standard large-scale practice (PaLM / MaxText).
+    """
+    logits = logits.astype(jnp.float32)
+    mask = (labels != IGNORE).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lz = jax.nn.logsumexp(logits, axis=-1)                      # [B, S]
+    tgt = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lz - tgt) * mask
+    zl = z_loss * jnp.square(lz) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll + zl).sum() / denom
+    metrics = {
+        "nll": nll.sum() / denom,
+        "z_loss": zl.sum() / denom,
+        "tokens": mask.sum(),
+        "accuracy": ((jnp.argmax(logits, -1) == labels) * mask).sum() / denom,
+    }
+    return loss, metrics
+
+
+def lm_loss(logits: Array, labels: Array, aux: Optional[Array] = None,
+            aux_weight: float = 1e-2, z_loss: float = 1e-4
+            ) -> tuple[Array, dict[str, Array]]:
+    loss, metrics = cross_entropy(logits, labels, z_loss=z_loss)
+    if aux is not None:
+        loss = loss + aux_weight * aux
+        metrics["moe_aux"] = aux
+    metrics["loss"] = loss
+    return loss, metrics

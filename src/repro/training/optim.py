@@ -1,0 +1,107 @@
+"""Optimizer substrate: AdamW with decoupled weight decay, global-norm
+clipping, and warmup+cosine schedules. Self-contained (no optax) so the
+whole update is visible to XLA as one fused pytree computation.
+
+State layout mirrors the param pytree (m, v per leaf, fp32) plus a scalar
+step — so the checkpoint manager and the sharding rules treat optimizer
+state exactly like parameters (same logical axes).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+def lr_at(cfg: OptimConfig, step: Array) -> Array:
+    """Linear warmup then cosine decay to min_lr_frac * peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(math.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def init_state(params: Any) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_axes(param_axes_tree: Any) -> dict:
+    """Optimizer-state logical axes: m/v shard like their parameters."""
+    return {"m": param_axes_tree,
+            "v": jax.tree.map(lambda a: a, param_axes_tree),
+            "step": ()}
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def _is_matrix(p: Array) -> bool:
+    return p.ndim >= 2  # decay only matrices (norms/biases/scalars exempt)
+
+
+def apply_updates(params: Any, grads: Any, state: dict, cfg: OptimConfig,
+                  compress: Optional[Callable[[Any], Any]] = None,
+                  ) -> tuple[Any, dict, dict[str, Array]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if compress is not None:
+        grads = compress(grads)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         state["v"], grads)
+
+    def upd(p, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and _is_matrix(p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    metrics = {"lr": lr, "grad_norm": gnorm,
+               "param_norm": global_norm(new_params)}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

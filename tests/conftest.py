@@ -1,0 +1,21 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — tests run on the single
+real CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+from hypothesis import HealthCheck, settings
+
+# jit compiles inside property bodies blow the default 200ms deadline
+settings.register_profile(
+    "jax", deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("jax")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

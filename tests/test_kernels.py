@@ -1,0 +1,187 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (b, sq, n, kv, h, window, softcap)
+    (1, 32, 2, 2, 16, None, None),          # MHA baseline
+    (2, 40, 4, 2, 16, None, None),          # GQA, non-aligned seq
+    (1, 130, 8, 1, 32, None, None),         # MQA, ragged seq
+    (2, 64, 4, 4, 64, None, 50.0),          # softcap (gemma2 attn)
+    (1, 96, 4, 2, 32, 17, None),            # sliding window
+    (1, 128, 8, 2, 64, 64, 30.0),           # window + softcap
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(case, dtype):
+    b, sq, n, kv, h, win, cap = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, n, h), dtype)
+    k = jax.random.normal(ks[1], (b, sq, kv, h), dtype)
+    v = jax.random.normal(ks[2], (b, sq, kv, h), dtype)
+    out = ops.flash_attention(q, k, v, window=win, softcap=cap,
+                              block_q=32, block_k=32)
+    exp = ref.attention(q, k, v, window=win, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_size_invariance():
+    b, s, n, kv, h = 1, 128, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, n, h), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, h), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, h), jnp.float32)
+    outs = [ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(16, 16), (32, 64), (128, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 64, 4, 2, 16, None),
+    (3, 100, 8, 8, 32, None),
+    (1, 96, 8, 1, 64, 20),                  # MQA + window
+    (2, 256, 4, 4, 64, 128),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_oracle(case, dtype):
+    b, s, n, kv, h, win = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, n, h), dtype)
+    kc = jax.random.normal(ks[1], (b, s, kv, h), dtype)
+    vc = jax.random.normal(ks[2], (b, s, kv, h), dtype)
+    pos = jax.random.randint(ks[3], (b,), 0, s)
+    out = ops.decode_attention(q, kc, vc, pos, window=win, block_k=32)
+    exp = ref.decode_attention(q, kc, vc, pos, window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_ignores_stale_cache():
+    """Entries beyond pos must not affect the output."""
+    b, s, n, kv, h = 1, 64, 2, 2, 16
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, n, h), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, s, kv, h), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, s, kv, h), jnp.float32)
+    pos = jnp.array([20], jnp.int32)
+    out1 = ops.decode_attention(q, kc, vc, pos, block_k=16)
+    kc2 = kc.at[:, 21:].set(999.0)
+    vc2 = vc.at[:, 21:].set(-999.0)
+    out2 = ops.decode_attention(q, kc2, vc2, pos, block_k=16)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssd
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    (1, 32, 2, 8, 16, 8),
+    (2, 48, 3, 8, 16, 16),
+    (1, 100, 2, 16, 32, 32),                # ragged vs chunk
+    (2, 64, 4, 32, 64, 64),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_matches_sequential_oracle(case):
+    b, s, h, p, n, ch = case
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n), jnp.float32)
+    C = jax.random.normal(ks[4], (b, s, n), jnp.float32)
+    D = 0.5 * jnp.ones((h,), jnp.float32)
+    y_ref, fin_ref = ref.ssd(x, dt, A, B, C, D)
+    y_k, fin_k = ops.ssd(x, dt, A, B, C, D, chunk=ch)
+    np.testing.assert_allclose(y_k, y_ref, atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(fin_k, fin_ref, atol=3e-4, rtol=3e-4)
+
+
+def test_ssd_chunked_oracle_matches_sequential():
+    b, s, h, p, n = 1, 64, 2, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n), jnp.float32)
+    C = jax.random.normal(ks[4], (b, s, n), jnp.float32)
+    D = jnp.zeros((h,), jnp.float32)
+    y1, f1 = ref.ssd(x, dt, A, B, C, D)
+    for chunk in (4, 16, 64):
+        y2, f2 = ref.ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+        np.testing.assert_allclose(y2, y1, atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(f2, f1, atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_carries_state_across_chunks():
+    """A long-decay head must propagate influence beyond one chunk."""
+    b, s, h, p, n = 1, 32, 1, 4, 8
+    x = jnp.zeros((b, s, h, p)).at[0, 0].set(1.0)       # impulse at t=0
+    dt = 0.1 * jnp.ones((b, s, h))
+    A = jnp.array([-0.01])                               # slow decay
+    B = jnp.ones((b, s, n))
+    C = jnp.ones((b, s, n))
+    D = jnp.zeros((h,))
+    y, _ = ops.ssd(x, dt, A, B, C, D, chunk=8)
+    assert float(jnp.abs(y[0, -1]).max()) > 1e-3         # crossed 4 chunks
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+GMM_CASES = [
+    (16, 8, 16, 2), (37, 16, 24, 4), (100, 32, 64, 8), (64, 16, 48, 16),
+]
+
+
+@pytest.mark.parametrize("case", GMM_CASES)
+def test_gmm_matches_oracle(case):
+    t, d, f, e = case
+    ks = jax.random.split(KEY, 3)
+    sizes = jnp.bincount(jax.random.randint(ks[0], (t,), 0, e), length=e)
+    x = jax.random.normal(ks[1], (t, d), jnp.float32)
+    w = jax.random.normal(ks[2], (e, d, f), jnp.float32)
+    out = ops.gmm(x, w, sizes, block_t=16, block_f=16)
+    exp = ref.gmm(x, w, sizes)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=3e-5)
+
+
+def test_gmm_empty_groups():
+    """Experts that receive zero tokens must not corrupt neighbours."""
+    e, d, f = 4, 8, 8
+    sizes = jnp.array([5, 0, 0, 3])
+    x = jax.random.normal(KEY, (8, d), jnp.float32)
+    w = jax.random.normal(KEY, (e, d, f), jnp.float32)
+    out = ops.gmm(x, w, sizes, block_t=4, block_f=8)
+    exp = ref.gmm(x, w, sizes)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=3e-5)

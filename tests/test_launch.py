@@ -1,0 +1,82 @@
+"""Launch-layer units that don't need the 512-device dry-run environment."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from repro.launch.dryrun import _shape_bytes, collective_bytes, model_flops
+from repro.launch.mesh import rules_for_mesh
+
+
+def test_shape_bytes_parses_hlo_types():
+    assert _shape_bytes("bf16[256,4096]{1,0}") == 256 * 4096 * 2
+    assert _shape_bytes("f32[8]{0}") == 32
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("(bf16[4,4]{1,0}, f32[2]{0})") == 32 + 8
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[8,32768,8,128]{3,2,1,0} all-gather(bf16[8,2048,8,128]{3,2,1,0} %p), replica_groups={}
+  %ar = f32[16,16]{1,0} all-reduce(f32[16,16]{1,0} %q), to_apply=%add
+  %rs.1 = f32[4,16]{1,0} reduce-scatter(f32[16,16]{1,0} %r), dimensions={0}
+  %cp = u32[2]{0} collective-permute(u32[2]{0} %s), source_target_pairs={{0,1}}
+  %noise = f32[128,128]{1,0} fusion(f32[128,128]{1,0} %t), kind=kLoop
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 32768 * 8 * 128 * 2
+    assert out["all-reduce"] == 16 * 16 * 4
+    assert out["reduce-scatter"] == 4 * 16 * 4
+    assert out["collective-permute"] == 8
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_cell_applicability_matrix():
+    """7 long_500k skips (pure full-attention), 33 runnable cells."""
+    runnable = sum(
+        1 for a in ARCH_IDS for s in SHAPES
+        if cell_applicable(get_config(a), s))
+    assert runnable == 33
+    for a in ("mamba2-130m", "zamba2-2.7b", "gemma2-2b"):
+        assert cell_applicable(get_config(a), "long_500k")
+    for a in ("qwen1.5-4b", "minitron-8b", "phi-3-vision-4.2b"):
+        assert not cell_applicable(get_config(a), "long_500k")
+
+
+def test_model_flops_moe_counts_active_only():
+    import jax
+    from repro.launch.dryrun import params_spec
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    pspec = params_spec(cfg)
+    cell = SHAPES["decode_32k"]
+    mf = model_flops(cfg, cell, pspec)
+    total = sum(float(l.size) for l in jax.tree.leaves(pspec))
+    # active params must be well below total (top-2 of 16 experts)
+    assert mf < 2.0 * total * cell.global_batch * 0.5
+
+
+def test_rules_for_mesh_single_vs_multipod():
+    class Single:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    class Multi:
+        axis_names = ("pod", "data", "model")
+        devices = np.empty((2, 16, 16))
+
+    rs = rules_for_mesh(Single())
+    rm = rules_for_mesh(Multi())
+    assert rs["batch"] == "data" and rs["fsdp"] == "data"
+    assert rm["batch"] == ("pod", "data") and rm["fsdp"] == ("pod", "data")
+
+
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_shape_cells_match_assignment(shape):
+    cell = SHAPES[shape]
+    expected = {
+        "train_4k": (4096, 256, "train"),
+        "prefill_32k": (32768, 32, "prefill"),
+        "decode_32k": (32768, 128, "decode"),
+        "long_500k": (524288, 1, "decode"),
+    }[shape]
+    assert (cell.seq_len, cell.global_batch, cell.kind) == expected

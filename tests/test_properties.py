@@ -1,0 +1,157 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mapscore import (CSWITCH_MAX, MapScoreParams, STARV_MAX,
+                                 URGENCY_MAX, mapscore)
+from repro.core.uxcost import (ModelWindowStats, WindowStats, norm_energy,
+                               rate_dlv, uxcost)
+from repro.core.costmodel import build_cost_table
+from repro.core.types import Layer, ModelGraph, OpType, SYSTEMS
+from repro.distributed.elastic import best_mesh_shape
+from repro.training.optim import lr_at, OptimConfig
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# UXCost (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+stats_st = st.builds(
+    ModelWindowStats,
+    frames=st.integers(0, 1000),
+    violated=st.integers(0, 1000),
+    energy_j=st.floats(0, 1e3, allow_nan=False),
+    worst_energy_j=st.floats(0, 1e3, allow_nan=False),
+).filter(lambda s: s.violated <= s.frames and s.energy_j <= s.worst_energy_j)
+
+
+@given(st.lists(stats_st, min_size=1, max_size=6))
+def test_uxcost_nonnegative_and_bounded(models):
+    ws = WindowStats()
+    for i, m in enumerate(models):
+        ws.per_model[f"m{i}"] = m
+    u = uxcost(ws)
+    assert u >= 0.0
+    assert u <= len(models) ** 2 + 1e-9     # both factors <= n_models
+
+
+@given(stats_st)
+def test_rate_dlv_floor_when_zero_violations(s):
+    r = rate_dlv(s)
+    if s.frames == 0:
+        assert r == 0.0
+    elif s.violated == 0:
+        assert r == 1.0 / (2 * s.frames)    # Alg. 2 lines 7-8
+    else:
+        assert abs(r - s.violated / s.frames) < 1e-12
+
+
+@given(stats_st)
+def test_norm_energy_in_unit_interval(s):
+    assert 0.0 <= norm_energy(s) <= 1.0 + 1e-9
+
+
+@given(st.lists(stats_st, min_size=1, max_size=4),
+       st.integers(0, 3))
+def test_uxcost_monotone_in_violations(models, idx):
+    """Adding a violated frame (same energy) never decreases UXCost."""
+    ws1, ws2 = WindowStats(), WindowStats()
+    for i, m in enumerate(models):
+        ws1.per_model[f"m{i}"] = ModelWindowStats(
+            m.frames, m.violated, m.energy_j, m.worst_energy_j)
+        ws2.per_model[f"m{i}"] = ModelWindowStats(
+            m.frames, m.violated, m.energy_j, m.worst_energy_j)
+    k = f"m{idx % len(models)}"
+    m = ws2.per_model[k]
+    if m.frames == 0 or m.violated == 0:
+        return  # the 1/(2n) floor makes 0 -> 1 violations non-monotone by design
+    m.frames += 1
+    m.violated += 1
+    assert uxcost(ws2) >= uxcost(ws1) - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# MapScore (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def _mk_table():
+    g = ModelGraph("m", layers=(
+        Layer("a", OpType.FC, K=128, C=128),
+        Layer("b", OpType.CONV2D, K=32, C=32, R=3, S=3, Y=16, X=16),
+    ))
+    return build_cost_table(g, SYSTEMS["4K_1WS2OS"])
+
+
+TABLE = _mk_table()
+
+
+@given(
+    t_curr=st.floats(0, 10, allow_nan=False),
+    deadline=st.floats(0, 10, allow_nan=False),
+    t_cmpl=st.floats(0, 10, allow_nan=False),
+    alpha=st.floats(0, 2), beta=st.floats(0, 2),
+    nxt=st.integers(0, 1),
+    prev=st.floats(0, 1e7),
+    same=st.booleans(),
+)
+@settings(max_examples=200)
+def test_mapscore_finite_and_bounded(t_curr, deadline, t_cmpl, alpha, beta,
+                                     nxt, prev, same):
+    """MapScore never produces NaN/inf and every term honors its clamp."""
+    n = TABLE.n_accs
+    s = mapscore(TABLE, nxt, np.array([nxt]), t_curr, t_cmpl, deadline,
+                 np.full(n, prev), np.full(n, same),
+                 MapScoreParams(alpha, beta))
+    assert s.shape == (n,)
+    assert np.all(np.isfinite(s))
+    upper = URGENCY_MAX * n + alpha * STARV_MAX + beta * n
+    lower = -beta * CSWITCH_MAX
+    assert np.all(s <= upper + 1e-6) and np.all(s >= lower - 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# elastic mesh factorization
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 4096), mp=st.sampled_from([1, 2, 4, 8, 16]))
+def test_best_mesh_shape_valid(n, mp):
+    dp, m = best_mesh_shape(n, mp)
+    assert dp * m <= n
+    assert dp >= 1 and m >= 1
+    assert m <= mp
+
+
+# ---------------------------------------------------------------------------
+# optimizer schedule
+# ---------------------------------------------------------------------------
+
+@given(step=st.integers(0, 10_000))
+def test_lr_schedule_bounded(step):
+    cfg = OptimConfig(learning_rate=1e-3, warmup_steps=100, total_steps=1000)
+    lr = float(lr_at(cfg, jnp.asarray(step)))
+    assert 0.0 <= lr <= cfg.learning_rate * (1 + 1e-6)  # f32 rounding
+    if step >= cfg.total_steps:
+        assert lr >= cfg.min_lr_frac * cfg.learning_rate - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 100), step=st.integers(0, 20))
+@settings(max_examples=20, deadline=None)
+def test_data_host_count_invariance(seed, step):
+    """Global batch content is identical for 1 host vs 2 hosts."""
+    from repro.data import SyntheticLMData
+    one = SyntheticLMData(vocab_size=64, seq_len=16, global_batch=4,
+                          seed=seed)
+    h0 = SyntheticLMData(vocab_size=64, seq_len=16, global_batch=4,
+                         seed=seed, num_hosts=2, host_id=0)
+    h1 = SyntheticLMData(vocab_size=64, seq_len=16, global_batch=4,
+                         seed=seed, num_hosts=2, host_id=1)
+    full = one.batch(step)["tokens"]
+    top = h0.batch(step)["tokens"]
+    bot = h1.batch(step)["tokens"]
+    np.testing.assert_array_equal(full, np.concatenate([top, bot], 0))

@@ -1,0 +1,187 @@
+"""Level-1 scheduler behaviour: MapScore semantics, frame drop conditions,
+adaptivity convergence, baseline sanity, end-to-end simulator invariants."""
+import numpy as np
+import pytest
+
+from repro.core import (SYSTEMS, build_scenario, dream_full, dream_mapscore,
+                        optimize_params, run_planaria, run_sim)
+from repro.core.baselines import (FCFSScheduler, StaticFCFSScheduler,
+                                  VeltairLikeScheduler)
+from repro.core.costmodel import build_cost_table
+from repro.core.mapscore import MapScoreParams, mapscore
+from repro.core.scheduler import DreamScheduler
+from repro.core.types import Dataflow, Layer, ModelGraph, OpType
+from repro.core import zoo
+
+
+def _table(n_accs=2):
+    m = ModelGraph("m", layers=(
+        Layer("fc1", OpType.FC, K=256, C=256),
+        Layer("fc2", OpType.FC, K=64, C=256),
+    ))
+    accs = tuple(SYSTEMS["4K_1WS2OS"][:n_accs])
+    return build_cost_table(m, accs)
+
+
+def test_urgency_increases_as_deadline_nears():
+    t = _table()
+    kw = dict(table=t, next_layer=0, remaining=np.array([0, 1]),
+              t_cmpl=0.0, prev_out_bytes=np.zeros(2),
+              same_model=np.zeros(2, bool), params=MapScoreParams(0.0, 0.0))
+    early = mapscore(t_curr=0.0, deadline=1.0, **kw)
+    late = mapscore(t_curr=0.9, deadline=1.0, **kw)
+    assert np.all(late >= early)
+
+
+def test_latpref_prefers_faster_accelerator():
+    t = _table()
+    s = mapscore(table=t, next_layer=0, remaining=np.array([0]),
+                 t_curr=0.0, t_cmpl=0.0, deadline=0.5,
+                 prev_out_bytes=np.zeros(2), same_model=np.zeros(2, bool),
+                 params=MapScoreParams(0.0, 0.0))
+    lat = t.lat[:, 0]
+    assert np.argmax(s) == np.argmin(lat)
+
+
+def test_starvation_grows_with_queue_time():
+    t = _table()
+    kw = dict(table=t, next_layer=0, remaining=np.array([0]),
+              t_curr=1.0, deadline=10.0, prev_out_bytes=np.zeros(2),
+              same_model=np.zeros(2, bool), params=MapScoreParams(2.0, 0.0))
+    fresh = mapscore(t_cmpl=1.0, **kw)
+    starved = mapscore(t_cmpl=0.0, **kw)
+    assert np.all(starved >= fresh)
+
+
+def test_energy_score_penalizes_context_switch():
+    t = _table()
+    kw = dict(table=t, next_layer=0, remaining=np.array([0]),
+              t_curr=0.0, t_cmpl=0.0, deadline=0.5,
+              prev_out_bytes=np.full(2, 1e6),
+              params=MapScoreParams(0.0, 1.0))
+    same = mapscore(same_model=np.ones(2, bool), **kw)
+    switch = mapscore(same_model=np.zeros(2, bool), **kw)
+    assert np.all(same >= switch)
+
+
+# ---------------------------------------------------------------------------
+# simulator end-to-end invariants
+# ---------------------------------------------------------------------------
+
+SCHEDULERS = {
+    "FCFS": FCFSScheduler,
+    "Static": StaticFCFSScheduler,
+    "Veltair": VeltairLikeScheduler,
+    "DREAM": dream_full,
+}
+
+
+@pytest.mark.parametrize("sched", list(SCHEDULERS))
+def test_sim_runs_and_accounts_all_frames(sched):
+    scn = build_scenario("AR_Call", 0.5)
+    r = run_sim(scn, "4K_1WS2OS", SCHEDULERS[sched], duration_s=2.0)
+    assert r.frames > 0
+    assert 0.0 <= r.dlv_rate <= 1.0
+    assert 0.0 <= r.norm_energy <= 1.0 + 1e-9
+    assert r.uxcost >= 0.0
+
+
+def test_sim_deterministic_given_seed():
+    scn = build_scenario("VR_Gaming", 0.5)
+    r1 = run_sim(scn, "4K_1WS2OS", dream_full, duration_s=2.0, seed=3)
+    r2 = run_sim(scn, "4K_1WS2OS", dream_full, duration_s=2.0, seed=3)
+    assert r1.uxcost == r2.uxcost and r1.frames == r2.frames
+
+
+def test_planaria_runs():
+    scn = build_scenario("Drone_Outdoor", 0.5)
+    r = run_planaria(scn, "4K_1WS2OS", duration_s=2.0)
+    assert r.frames > 0 and r.uxcost >= 0
+
+
+def test_frame_drop_bounded_rate():
+    """Condition 4: drops per model bounded by 2 per 10-frame window."""
+    scn = build_scenario("AR_Social", 0.9)
+    r = run_sim(scn, "4K_2OS", dream_full, duration_s=4.0)
+    # global check: drops can never exceed the bound * frames
+    assert r.drops <= 0.25 * r.frames + 5
+
+
+def test_supernet_switch_mechanism():
+    """Section 4.5.1: at the switch point, a job that cannot meet its
+    deadline is swapped to the heaviest variant that can; a job with ample
+    slack keeps the original. (End-to-end switch *rates* are emergent and
+    load-dependent — see benchmarks.fig14 — so the mechanism is unit-tested
+    deterministically here.)"""
+    from repro.core.simulator import Simulator
+    scn = build_scenario("VR_Gaming", 0.5)
+    ctx_idx = scn.model_index("ctx_ofa")
+
+    def fresh_job(slack):
+        sim = Simulator(scn, "4K_1WS2OS", dream_full(), duration_s=1.0)
+        job = sim._create_job(ctx_idx, t=0.0)
+        job.deadline = slack
+        return sim, job
+
+    sched = dream_full()
+    sim, job = fresh_job(slack=1e-5)          # hopeless deadline
+    sched._maybe_switch_variant(sim, job, t=0.0)
+    assert "@" in job.graph_name              # switched to a lighter subnet
+
+    sim, job = fresh_job(slack=60.0)          # ample slack
+    sched._maybe_switch_variant(sim, job, t=0.0)
+    assert "@" not in job.graph_name          # kept the original
+
+
+def test_supernet_switching_engages_under_heavy_load():
+    r = run_sim(build_scenario("AR_Social", 0.99), "4K_1OS2WS", dream_full,
+                duration_s=4.0)
+    lite = sum(v for k, v in r.variant_counts.items() if "@" in k)
+    assert lite > 0
+
+
+def test_static_worse_than_dynamic_on_dynamic_workload():
+    """Figure 2's claim on at least the aggregate."""
+    scn = build_scenario("AR_Call", 0.5)
+    static = run_sim(scn, "4K_1WS2OS", StaticFCFSScheduler, duration_s=3.0)
+    dyn = run_sim(scn, "4K_1WS2OS", FCFSScheduler, duration_s=3.0)
+    assert dyn.dlv_rate <= static.dlv_rate + 0.05
+
+
+def test_adaptivity_search_converges():
+    """Offline (alpha,beta) search reaches a cost <= its starting point."""
+    calls = []
+
+    def ev(a, b):
+        c = (a - 0.7) ** 2 + (b - 1.3) ** 2 + 0.05
+        calls.append(c)
+        return c
+
+    # init within the search's travel budget (radius 0.5 shrinking by 0.5
+    # bounds total center travel; far corners are reached only via the
+    # random distant samples — matching the paper's near-restart usage)
+    trace = optimize_params(ev, init=(1.2, 1.0), seed=0)
+    (pa, pb), best = trace.best
+    assert best <= ev(1.2, 1.0)
+    assert best < 0.05 + 0.3 ** 2   # inside the optimum's basin
+
+
+def test_cost_model_dataflow_affinity():
+    """WS prefers channel-deep FC; OS prefers depthwise/spatial ops."""
+    from repro.core.costmodel import layer_latency_s
+    from repro.core.types import Accelerator
+    ws = Accelerator("ws", 2048, Dataflow.WS)
+    os_ = Accelerator("os", 2048, Dataflow.OS)
+    # compute-bound shapes (a 1-token FC is DRAM-bound on every dataflow,
+    # so the affinity only shows with enough arithmetic intensity)
+    gemm = Layer("gemm", OpType.GEMM, K=1024, C=1024, Y=256)
+    dw = Layer("dw", OpType.DWCONV, C=512, R=3, S=3, Y=64, X=64)
+    assert layer_latency_s(gemm, ws) < layer_latency_s(gemm, os_)
+    assert layer_latency_s(dw, os_) < layer_latency_s(dw, ws)
+
+
+def test_zoo_models_have_layers():
+    for name, builder in zoo.ZOO_BUILDERS.items():
+        g = builder()
+        assert len(g.layers) > 0, name
+        assert g.macs > 0, name

@@ -1,0 +1,71 @@
+"""Serving engine integration: dispatch, cascade, drop, adaptivity."""
+import numpy as np
+import pytest
+
+from repro.launch.serve import build_handle
+from repro.serving import (RequestQueue, ServeRequest, ServingEngine,
+                           VirtualAccelerator)
+
+
+@pytest.fixture(scope="module")
+def small_engine():
+    accs = [VirtualAccelerator("big", speed=1.0, power=1.0),
+            VirtualAccelerator("small", speed=0.5, power=0.4)]
+    eng = ServingEngine(accs, adaptivity=False, frame_drop=True,
+                        supernet_switch=True)
+    h = build_handle("gemma-2b", "det", layers=1)
+    hv = build_handle("gemma-2b", "det@v1", layers=1, d_model=32)
+    h.supernet = ("det@v1",)
+    eng.register(h, np.zeros((1, 16), np.int32))
+    eng.register(hv, np.zeros((1, 16), np.int32))
+    return eng
+
+
+def test_calibration_builds_latency_table(small_engine):
+    for acc in small_engine.accs:
+        assert ("det", acc.name) in small_engine.lat_table
+        assert small_engine.lat_table[("det", acc.name)] > 0
+    # slower slice => higher latency entry
+    assert (small_engine.lat_table[("det", "small")]
+            > small_engine.lat_table[("det", "big")])
+
+
+def test_mapscore_prefers_fast_slice_when_urgent(small_engine):
+    req = ServeRequest(rid=0, model="det",
+                       tokens=np.zeros((1, 16), np.int32),
+                       arrival=0.0, deadline=0.005)
+    scores = {a.name: small_engine._mapscore(req, a, now=0.004)
+              for a in small_engine.accs}
+    assert scores["big"] > scores["small"]
+
+
+def test_supernet_picks_lighter_variant_when_late(small_engine):
+    req = ServeRequest(rid=1, model="det",
+                       tokens=np.zeros((1, 16), np.int32),
+                       arrival=0.0, deadline=1e-6)     # hopeless deadline
+    assert small_engine._pick_variant(req, now=0.0) == "det@v1"
+    req2 = ServeRequest(rid=2, model="det",
+                        tokens=np.zeros((1, 16), np.int32),
+                        arrival=0.0, deadline=60.0)    # relaxed deadline
+    assert small_engine._pick_variant(req2, now=0.0) == "det"
+
+
+def test_end_to_end_run_with_cascade():
+    accs = [VirtualAccelerator("a0", speed=1.0, power=1.0),
+            VirtualAccelerator("a1", speed=0.5, power=0.5)]
+    eng = ServingEngine(accs, adaptivity=True, frame_drop=True,
+                        supernet_switch=False)
+    parent = build_handle("gemma-2b", "parent", layers=1)
+    child = build_handle("gemma-2b", "child", layers=1)
+    for h in (parent, child):
+        eng.register(h, np.zeros((1, 16), np.int32))
+    q = RequestQueue(clock=lambda: 0.0)
+    q.add_stream("parent", fps=6, batch=1, seq=16, vocab=64)
+    q.add_stream("child", fps=6, batch=1, seq=16, vocab=64,
+                 depends_on="parent", trigger_prob=1.0)
+    report = eng.run(q, duration_s=2.0)
+    assert report.frames > 0
+    assert report.per_model.get("parent", {}).get("frames", 0) > 0
+    # every completed parent triggers a child (prob 1.0)
+    assert report.per_model.get("child", {}).get("frames", 0) > 0
+    assert 0.0 <= report.dlv_rate <= 1.0

@@ -1,0 +1,106 @@
+"""Sharding-rule resolution + small-mesh SPMD lowering of real steps.
+
+The production 512-device lowering is exercised by launch/dryrun.py (which
+must set XLA_FLAGS before jax init); here we verify the same code paths on
+the single real CPU device (mesh (1,1)) and the rule-adaptation logic.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import SHAPES, get_config, smoke_config
+from repro.distributed.sharding import (DEFAULT_RULES, adapt_rules_for,
+                                        spec_for, tree_specs)
+from repro.launch.mesh import rules_for, rules_for_mesh
+from repro.models import model as M
+
+
+def _mesh11():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_rules_for_mesh_drops_missing_axes():
+    rules = rules_for_mesh(_mesh11())
+    assert rules["batch"] == "data"        # ('pod','data') -> 'data'
+    assert rules["fsdp"] == "data"
+
+
+def test_adapt_rules_degrades_indivisible_dims():
+    mesh = _mesh11()
+    rules = {"heads": "model", "kv_heads": "model"}
+    out = adapt_rules_for(rules, mesh, {"heads": 8, "kv_heads": 1})
+    # every axis size is 1 on this mesh, so nothing degrades
+    assert out["heads"] == "model"
+    # simulate a 16-wide model axis via a fake mesh shape
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((2, 16))
+    out = adapt_rules_for(rules, FakeMesh(), {"heads": 8, "kv_heads": 1})
+    assert out["heads"] is None and out["kv_heads"] is None
+
+
+def test_rules_for_arch_kv_seq_fallback():
+    """MQA archs on a model-parallel mesh shard the KV cache on kv_seq."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+    cfg = get_config("gemma-2b")           # kv=1
+    rules = rules_for(cfg, FakeMesh(), SHAPES["decode_32k"])
+    assert rules["act_kv_heads"] is None
+    assert rules["kv_seq"] == "model"
+
+
+def test_param_axes_cover_params():
+    """Every param leaf has a logical-axes tuple of matching rank."""
+    for arch in ("gemma2-2b", "qwen3-moe-235b-a22b", "zamba2-2.7b",
+                 "mamba2-130m"):
+        cfg = smoke_config(arch)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        axes = M.param_axes(cfg)
+        flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+        flat_a = dict(jax.tree_util.tree_flatten_with_path(
+            axes, is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))[0])
+        for path, leaf in flat_p:
+            assert path in flat_a, f"{arch}: missing axes for {path}"
+            assert len(flat_a[path]) == leaf.ndim, \
+                f"{arch}: rank mismatch at {path}"
+
+
+def test_spec_for_and_tree_specs():
+    s = spec_for(("batch", None, "heads"),
+                 {"batch": "data", "heads": "model"})
+    assert s == jax.sharding.PartitionSpec("data", None, "model")
+    tree = {"w": ("fsdp", "ffn"), "b": (None,)}
+    specs = tree_specs(tree, {"fsdp": "data", "ffn": "model"})
+    assert specs["w"] == jax.sharding.PartitionSpec("data", "model")
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "mamba2-130m"])
+def test_lower_train_step_on_real_device_mesh(arch):
+    """End-to-end jit lowering with shardings on the (1,1) CPU mesh."""
+    from repro.launch.dryrun import lower_cell  # safe: dryrun already
+    # imported? no — importing dryrun sets XLA_FLAGS, but devices are
+    # already initialized by conftest, so the flag is inert here.
+    cfg = dataclasses.replace(smoke_config(arch), scan_layers=True)
+    mesh = _mesh11()
+    from repro.distributed import sharding as shd
+    from repro.training import TrainConfig, build_train_step, \
+        init_train_state
+    rules = rules_for(cfg, mesh, SHAPES["train_4k"])
+    tcfg = TrainConfig()
+    step = build_train_step(cfg, tcfg, rules)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend:
+        batch["frontend"] = jnp.zeros(
+            (2, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+    with mesh:
+        new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
