@@ -1,11 +1,20 @@
-"""Benchmark aggregator: one module per paper figure + roofline + kernels.
+"""Benchmark aggregator: one module per paper figure + sweeps + kernels.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only fig7 roofline
+    PYTHONPATH=src python -m benchmarks.run --only scenario_sweep \
+        --seed 3 --duration 2.0 --json out.json
+
+``--json`` aggregates every module's ``run()`` payload into one
+machine-readable file (the BENCH_*.json perf-trajectory input); ``--seed``
+and ``--duration`` thread through to every simulator-backed figure that
+accepts them.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import sys
 import time
 
@@ -18,18 +27,41 @@ MODULES = (
     ("fig12", "benchmarks.fig12_cascade_prob"),
     ("fig13", "benchmarks.fig13_metric_ablation"),
     ("fig14", "benchmarks.fig14_supernet"),
+    ("scenario_sweep", "benchmarks.scenario_sweep"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline"),
 )
+
+
+def _filter_kwargs(fn, **kw) -> dict:
+    params = inspect.signature(fn).parameters
+    return {k: v for k, v in kw.items() if k in params and v is not None}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of benchmark tags to run")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write aggregated run() payloads to this JSON file")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="seed threaded to simulator-backed figures")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="per-cell simulation duration (seconds)")
     args = ap.parse_args()
+    tags = {t for t, _ in MODULES}
+    unknown = set(args.only or ()) - tags
+    if unknown:
+        ap.error(f"unknown benchmark tags: {sorted(unknown)}; "
+                 f"choose from {sorted(tags)}")
+    if args.json is not None:
+        try:  # fail on an unwritable path now, not after the full run
+            open(args.json, "a").close()
+        except OSError as e:
+            ap.error(f"--json path not writable: {e}")
     import importlib
     failures = []
+    payloads: dict[str, object] = {}
     for tag, modname in MODULES:
         if args.only and tag not in args.only:
             continue
@@ -37,11 +69,32 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = importlib.import_module(modname)
-            mod.main()
+            kw = _filter_kwargs(mod.run, seed=args.seed,
+                                duration_s=args.duration)
+            if args.json is not None:
+                payloads[tag] = mod.run(**kw)
+                print(f"  [{tag}] collected "
+                      f"{len(json.dumps(payloads[tag]))} bytes of results")
+            elif kw and len(_filter_kwargs(mod.main, **kw)) < len(kw):
+                # main() can't honor the requested flags (fig mains take no
+                # args) — run parametrized; results land in the artifact dir
+                mod.run(**kw)
+                print(f"  [{tag}] ran with {kw}; "
+                      "results in benchmarks/artifacts/")
+            elif kw:
+                mod.main(**kw)
+            else:
+                mod.main()
         except Exception as e:  # noqa: BLE001
             failures.append((tag, repr(e)))
             print(f"  FAILED: {e!r}")
         print(f"  [{tag}] {time.time() - t0:.1f}s", flush=True)
+    if args.json is not None:
+        out = {"seed": args.seed, "duration_s": args.duration,
+               "failures": failures, "results": payloads}
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=True)
+        print(f"\nwrote {args.json}")
     if failures:
         print("\nFAILED benchmarks:", failures)
         sys.exit(1)

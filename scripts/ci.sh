@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI smoke entrypoint: tier-1 tests + one fast scenario-sweep benchmark.
+# Exits nonzero on any failure; suitable for any CI runner.
+#
+#   scripts/ci.sh [artifact-dir]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ARTIFACTS="${1:-benchmarks/artifacts}"
+mkdir -p "$ARTIFACTS"
+
+# package import works either via `pip install -e .` or the PYTHONPATH hack;
+# CI uses the latter so it needs no install step
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1 tests ==="
+python -m pytest -x -q
+
+echo "=== scenario sweep (fast) ==="
+python -m benchmarks.run --only scenario_sweep \
+    --seed 0 --duration 1.5 --json "$ARTIFACTS/ci_scenario_sweep.json"
+
+python - "$ARTIFACTS/ci_scenario_sweep.json" <<'EOF'
+import json, sys
+d = json.load(open(sys.argv[1]))
+if d["failures"]:
+    sys.exit(f"benchmark failures: {d['failures']}")
+sweep = d["results"]["scenario_sweep"]
+if not sweep["all_replays_exact"]:
+    sys.exit("trace replay determinism broken")
+print("ci: ok —", len(sweep["rows"]), "fuzzed scenarios, replays exact")
+EOF

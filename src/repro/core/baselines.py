@@ -28,7 +28,8 @@ from typing import Optional
 import numpy as np
 
 from .costmodel import build_cost_table, build_tables, effective_deadline
-from .simulator import (Dispatch, Job, SchedulerBase, SimResult, Simulator)
+from .simulator import (_ARRIVAL_STREAM, Dispatch, Job, SchedulerBase,
+                        SimResult, Simulator)
 from .types import Accelerator, Scenario, SYSTEMS
 from .uxcost import WindowStats, uxcost, overall_dlv_rate, overall_norm_energy
 
@@ -174,6 +175,11 @@ class PlanariaSimulator:
         self.window_s = window_s
         self.stale_periods = stale_periods
         self.rng = np.random.default_rng(seed)
+        # same arrival-process protocol (and dedicated rng stream) as
+        # core.simulator.Simulator, so stochastic scenarios compare fairly
+        self.arrival_rng = np.random.default_rng([seed, _ARRIVAL_STREAM])
+        self._arrival_procs = [Simulator._materialize_arrival(s.arrival)
+                               for s in scenario.models]
         self.models = {s.model.name: s.model for s in scenario.models}
         self._full_tables = build_tables(self.models, tuple(self.accs))
         self.deadlines = {
@@ -304,8 +310,10 @@ class PlanariaSimulator:
     def run(self) -> SimResult:
         for i, spec in enumerate(self.scenario.models):
             if spec.depends_on is None:
-                phase = spec.period_s * ((i * 7919) % 97) / 97.0
-                self._push(phase, 0, i)
+                first = self._arrival_procs[i].start(i, spec.period_s,
+                                                     self.arrival_rng)
+                if first is not None:
+                    self._push(first, 0, i)
         self._push(self.window_s, 2, None)
         t = 0.0
         while self.events:
@@ -315,7 +323,11 @@ class PlanariaSimulator:
             if kind == 0:
                 idx = int(arg)
                 self._create_job(idx, t)
-                self._push(t + self.scenario.models[idx].period_s, 0, idx)
+                spec = self.scenario.models[idx]
+                nxt = self._arrival_procs[idx].next_after(
+                    t, spec.period_s, self.arrival_rng)
+                if nxt is not None:
+                    self._push(nxt, 0, idx)
             elif kind == 1:
                 self._on_layer_done(int(arg), t)
             else:

@@ -1,29 +1,49 @@
 """Discrete-event simulator for RTMM workloads on multi-accelerator systems.
 
-The engine owns: periodic frame arrivals (per Table-3 FPS), control-dependency
+The engine owns: frame arrivals (pluggable arrival processes — strict
+periodic per Table-3 FPS by default, or jittered / Poisson / bursty /
+diurnal streams from ``repro.scenarios.arrivals``), control-dependency
 triggering (cascaded pipelines), dynamic-path sampling (SkipNet skips /
 RAPID-RL early exits), per-layer dispatch onto accelerators, deadline & energy
 accounting (UXCost windows), and stale-job hygiene. Schedulers (DREAM and the
 baselines) plug in through the `SchedulerBase` interface and only make
 (job, accelerator, n_layers) decisions.
 
-Determinism: one `numpy.random.Generator` seeded at construction drives every
+Workload dynamicity beyond path sampling comes from two hooks:
+
+  * a ``phase_script`` (``repro.scenarios.phases.PhaseScript``) applies timed
+    scenario mutations — FPS retargeting, cascade-probability shifts, models
+    joining and leaving — as first-class PHASE events;
+  * ``record=True`` captures the run's external stochastic input (head
+    arrivals + phase actions) as a ``repro.scenarios.trace.Trace``, and
+    ``replay=<trace>`` feeds a recorded trace back in.  Arrival randomness
+    lives on a dedicated generator, so a replayed run with the same ``seed``
+    reproduces the live run exactly (same jobs, dispatches, UXCost).
+
+Determinism: `numpy.random.Generator`s seeded at construction drive every
 stochastic draw; the event heap is tie-broken with a monotone sequence number.
+Core imports nothing from ``repro.scenarios`` at module scope — arrival
+processes and phase actions are duck-typed, materialized lazily.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
 import numpy as np
 
 from .costmodel import CostTable, E_DRAM, build_tables, effective_deadline
-from .types import Accelerator, ModelGraph, Scenario, SYSTEMS
+from .types import Accelerator, ModelGraph, ModelSpec, Scenario, SYSTEMS
 from .uxcost import WindowStats, uxcost, overall_dlv_rate, overall_norm_energy
 
-ARRIVAL, DONE, WINDOW = 0, 1, 2
+ARRIVAL, DONE, WINDOW, PHASE = 0, 1, 2, 3
+
+#: arrival-process rng stream id, kept distinct from the path/cascade stream
+#: so trace replay (which consumes no arrival randomness) stays bit-exact.
+_ARRIVAL_STREAM = 0xA221
 
 
 @dataclass
@@ -120,6 +140,7 @@ class SimResult:
     variant_counts: dict[str, int]
     windows: list[tuple[float, float, float, float]]  # (t, uxcost, alpha, beta)
     acc_utilization: list[float]
+    trace: Optional[object] = None      # recorded Trace when record=True
 
     def summary(self) -> str:
         return (f"{self.scenario:>14s} {self.system:>10s} {self.scheduler:>16s} "
@@ -138,6 +159,9 @@ class Simulator:
         window_s: float = 0.5,
         stale_periods: float = 2.0,
         cs_latency_s: float = 0.0,
+        phase_script=None,
+        record: bool = False,
+        replay=None,
     ):
         self.scenario = scenario
         self.system_name = system if isinstance(system, str) else "custom"
@@ -148,9 +172,15 @@ class Simulator:
         self.stale_periods = stale_periods
         self.cs_latency_s = cs_latency_s
         self.rng = np.random.default_rng(seed)
+        self.arrival_rng = np.random.default_rng([seed, _ARRIVAL_STREAM])
+
+        #: live pipeline specs — phase scripts mutate these, not the
+        #: (immutable) scenario the simulator was constructed from
+        self.specs: list[ModelSpec] = list(scenario.models)
+        self.active: list[bool] = [True] * len(self.specs)
 
         self.models: dict[str, ModelGraph] = {
-            s.model.name: s.model for s in scenario.models
+            s.model.name: s.model for s in self.specs
         }
         self.tables: dict[str, CostTable] = build_tables(self.models, self.accs_spec)
         self.graphs: dict[str, ModelGraph] = dict(self.models)
@@ -163,7 +193,7 @@ class Simulator:
             s.model.name: effective_deadline(s.period_s,
                                              self.tables[s.model.name],
                                              s.deadline_s)
-            for s in scenario.models
+            for s in self.specs
         }
         self.accs = [AccState(i, a) for i, a in enumerate(self.accs_spec)]
         self.events: list[tuple[float, int, int, object]] = []
@@ -182,24 +212,175 @@ class Simulator:
         self.frames = 0
         # frame-drop condition 4: outcome history (True == dropped) per model
         self.drop_history: dict[str, list[bool]] = {
-            s.model.name: [] for s in scenario.models
+            s.model.name: [] for s in self.specs
         }
         self.drop_window = 10
         self.max_drops_per_window = 2
+
+        if replay is not None and phase_script is not None:
+            raise ValueError("replay traces carry their own phase events; "
+                             "pass either phase_script or replay, not both")
+        self.phase_script = phase_script
+        self.replay = replay
+        self._replay_queues: dict[str, deque] = {}
+        if replay is not None:
+            rs = replay.meta.get("scenario")
+            if rs is not None and rs != scenario.name:
+                raise ValueError(f"trace was recorded for scenario {rs!r}, "
+                                 f"not {scenario.name!r}")
+            self._replay_queues = {
+                name: deque(ts)
+                for name, ts in replay.arrivals_by_model().items()
+            }
+        self.recorder = None
+        self.trace = None
+        if record:
+            from repro.scenarios.trace import TraceRecorder
+            self.recorder = TraceRecorder({
+                "scenario": scenario.name, "system": self.system_name,
+                "seed": seed, "duration_s": duration_s,
+                "window_s": window_s,
+            })
+        self._arrival_procs = [self._materialize_arrival(s.arrival)
+                               for s in self.specs]
+        #: per-stream time origin: arrival processes run in stream-local
+        #: time (0 at stream start), so a mid-run join at t anchors its
+        #: process — including any internal MMPP/diurnal clock — at t
+        self._arrival_origin = [0.0] * len(self.specs)
+
+    @staticmethod
+    def _materialize_arrival(arrival):
+        """None -> legacy periodic; dict -> from_config; else duck-typed.
+        Instances are shallow-copied: a process carries per-stream state
+        (MMPP clocks), so streams must never share one."""
+        import copy
+        from repro.scenarios.arrivals import Periodic, arrival_from_config
+        if arrival is None:
+            return Periodic()
+        if isinstance(arrival, dict):
+            return arrival_from_config(arrival)
+        return copy.copy(arrival)
+
+    # --------------------------------------------------------- live specs
+    def _index_of(self, name: str) -> int:
+        for i, s in enumerate(self.specs):
+            if s.model.name == name:
+                return i
+        raise KeyError(name)
+
+    def _dependents_of(self, name: str) -> list[int]:
+        return [i for i, s in enumerate(self.specs)
+                if s.depends_on == name and self.active[i]]
+
+    def _is_chain_tail(self, idx: int) -> bool:
+        name = self.specs[idx].model.name
+        return not any(s.depends_on == name and self.active[i]
+                       for i, s in enumerate(self.specs))
 
     # ------------------------------------------------------------- events
     def _push(self, t: float, kind: int, arg: object) -> None:
         heapq.heappush(self.events, (t, next(self._seq), kind, arg))
 
     def _schedule_head_arrivals(self) -> None:
-        for i, spec in enumerate(self.scenario.models):
+        for i, spec in enumerate(self.specs):
             if spec.depends_on is None:
-                phase = spec.period_s * ((i * 7919) % 97) / 97.0
-                self._push(phase, ARRIVAL, i)
+                self._schedule_stream_arrival(i, after_t=None)
+
+    def _push_phase_events(self) -> None:
+        if self.replay is not None:
+            if self.replay.phases:
+                from repro.scenarios.phases import PhaseAction
+                for t, cfg in self.replay.phases:
+                    self._push(t, PHASE, PhaseAction.from_config(cfg))
+        elif self.phase_script is not None:
+            for t, action in self.phase_script:
+                self._push(t, PHASE, action)
+
+    def _schedule_stream_arrival(self, idx: int,
+                                 after_t: Optional[float]) -> None:
+        """Queue stream ``idx``'s next head arrival.  ``after_t`` is the
+        absolute time of the arrival just processed (None = stream start).
+        Replay pops recorded times; live runs ask the arrival process in
+        stream-local time and shift by the stream's origin."""
+        spec = self.specs[idx]
+        if self.replay is not None:
+            q = self._replay_queues.get(spec.model.name)
+            if q:
+                self._push(q.popleft(), ARRIVAL, idx)
+            return
+        proc = self._arrival_procs[idx]
+        origin = self._arrival_origin[idx]
+        if after_t is None:
+            nxt = proc.start(idx, spec.period_s, self.arrival_rng)
+        else:
+            nxt = proc.next_after(after_t - origin, spec.period_s,
+                                  self.arrival_rng)
+        if nxt is not None:
+            self._push(origin + nxt, ARRIVAL, idx)
+
+    # ------------------------------------------------------ phase actions
+    def _apply_phase(self, action, t: float) -> None:
+        kind, payload = action.kind, action.payload
+        if kind == "set_fps":
+            self._set_fps(self._index_of(payload["model"]), payload["fps"])
+        elif kind == "scale_fps":
+            targets = payload.get("models")
+            for i, s in enumerate(self.specs):
+                if targets is None or s.model.name in targets:
+                    self._set_fps(i, s.fps * payload["factor"])
+        elif kind == "set_trigger_prob":
+            prob = payload["prob"]
+            if not 0.0 <= prob <= 1.0:   # traces may be hand-edited
+                raise ValueError(f"set_trigger_prob: {prob} outside [0, 1]")
+            i = self._index_of(payload["model"])
+            self.specs[i] = replace(self.specs[i], trigger_prob=prob)
+        elif kind == "leave":
+            self.active[self._index_of(payload["model"])] = False
+        elif kind == "join":
+            from repro.scenarios.phases import join_entry
+            self._join_spec(join_entry(action).to_spec(), t)
+        else:
+            raise ValueError(f"unknown phase action kind {kind!r}")
+        if self.recorder is not None:
+            self.recorder.phase(t, action.to_config())
+
+    def _set_fps(self, idx: int, fps: float) -> None:
+        if not (np.isfinite(fps) and fps > 0):
+            # a non-positive period would schedule arrivals backwards and
+            # keep the event loop below duration_s forever
+            raise ValueError(f"set_fps: fps must be positive, got {fps}")
+        spec = replace(self.specs[idx], fps=float(fps))
+        self.specs[idx] = spec
+        name = spec.model.name
+        # the in-flight arrival event still uses the old period; the stream
+        # converges to the new rate from the next inter-arrival onward
+        self.deadlines[name] = effective_deadline(
+            spec.period_s, self.tables[name], spec.deadline_s)
+
+    def _join_spec(self, spec: ModelSpec, t: float) -> None:
+        name = spec.model.name
+        if name in self.models:
+            raise ValueError(f"join: model {name!r} already in the scenario "
+                             "(leave has no rejoin; use a fresh name)")
+        self.models[name] = spec.model
+        self.tables.update(build_tables({name: spec.model}, self.accs_spec))
+        self.graphs[name] = spec.model
+        for v in spec.model.variants:
+            self.graphs[v.name] = v
+        self.deadlines[name] = effective_deadline(
+            spec.period_s, self.tables[name], spec.deadline_s)
+        self.drop_history[name] = []
+        idx = len(self.specs)
+        self.specs.append(spec)
+        self.active.append(True)
+        self._arrival_procs.append(self._materialize_arrival(spec.arrival))
+        self._arrival_origin.append(t)
+        if spec.depends_on is None:
+            self._schedule_stream_arrival(idx, after_t=None)
 
     # --------------------------------------------------------------- jobs
     def _create_job(self, model_idx: int, t: float) -> Job:
-        spec = self.scenario.models[model_idx]
+        spec = self.specs[model_idx]
         graph = spec.model
         table = self.tables[graph.name]
         path = np.asarray(graph.sample_path(self.rng), dtype=np.int64)
@@ -220,7 +401,7 @@ class Simulator:
             deadline=t + self.deadlines[graph.name],
             t_cmpl=t,
             worst_energy=float(table.en_max[path].sum()),
-            is_tail=self.scenario.is_chain_tail(model_idx),
+            is_tail=self._is_chain_tail(model_idx),
         )
         self.jobs[job.jid] = job
         self.ready[job.jid] = job
@@ -259,8 +440,8 @@ class Simulator:
             hist.pop(0)
         if not dropped:
             # trigger control-dependent models (cascade) on completion
-            for dep_idx in self.scenario.dependents_of(job.base_name):
-                spec = self.scenario.models[dep_idx]
+            for dep_idx in self._dependents_of(job.base_name):
+                spec = self.specs[dep_idx]
                 if self.rng.random() < spec.trigger_prob:
                     self._create_job(dep_idx, t)
 
@@ -283,7 +464,7 @@ class Simulator:
         stale = [
             j for j in self.ready.values()
             if j.pos == 0 and t > j.deadline
-            + self.stale_periods * self.scenario.models[j.model_idx].period_s
+            + self.stale_periods * self.specs[j.model_idx].period_s
         ]
         for j in stale:
             self.aborts += 1
@@ -359,6 +540,7 @@ class Simulator:
 
     def run(self) -> SimResult:
         self._schedule_head_arrivals()
+        self._push_phase_events()
         self._push(self.window_s, WINDOW, None)
         while self.events:
             t, _, kind, arg = heapq.heappop(self.events)
@@ -367,8 +549,14 @@ class Simulator:
             self.t = t
             if kind == ARRIVAL:
                 idx = int(arg)  # type: ignore[arg-type]
-                self._create_job(idx, t)
-                self._push(t + self.scenario.models[idx].period_s, ARRIVAL, idx)
+                if self.active[idx]:
+                    self._create_job(idx, t)
+                    if self.recorder is not None:
+                        self.recorder.arrival(t, self.specs[idx].model.name)
+                    self._schedule_stream_arrival(idx, after_t=t)
+                # an inactive (left) stream dies at its pending arrival
+            elif kind == PHASE:
+                self._apply_phase(arg, t)
             elif kind == DONE:
                 self._complete(int(arg), t)  # type: ignore[arg-type]
             elif kind == WINDOW:
@@ -381,6 +569,8 @@ class Simulator:
                 self._push(t + self.window_s, WINDOW, None)
             self._drain_schedule(t)
         self.global_stats.merge(self.window_stats)
+        if self.recorder is not None:
+            self.trace = self.recorder.trace()
         util = [a.busy_time / max(self.t, 1e-9) for a in self.accs]
         return SimResult(
             scenario=self.scenario.name,
@@ -397,6 +587,7 @@ class Simulator:
             variant_counts=dict(self.variant_counts),
             windows=self.windows,
             acc_utilization=util,
+            trace=self.trace,
         )
 
     def _current_params(self) -> tuple[float, float]:

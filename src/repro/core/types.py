@@ -132,6 +132,12 @@ class ModelSpec:
     depends_on: Optional[str] = None   # name of the upstream model
     trigger_prob: float = 0.5          # P(parent result triggers this model)
     deadline_s: Optional[float] = None  # default: 1/fps
+    #: arrival process driving this stream (None = strict legacy periodic).
+    #: Either an object implementing the ArrivalProcess protocol of
+    #: repro.scenarios.arrivals, or its ``to_config`` dict; the engines
+    #: materialize it at setup.  Core stays import-independent of the
+    #: scenarios package by treating this as an opaque duck-typed value.
+    arrival: Optional[object] = None
 
     @property
     def period_s(self) -> float:

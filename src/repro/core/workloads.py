@@ -1,93 +1,40 @@
 """The five RTMM workload scenarios of the paper's Table 3.
 
-Each scenario is a set of concurrent ML pipelines: models with FPS targets,
-per-frame deadlines (1/FPS) and control dependencies ("Dep." column). The
-dependent model of a pipeline is triggered by its parent's completion with a
-configurable probability (paper default: 50%).
+Historically this module hand-built each scenario; they now live in the
+scenario engine's registry (``repro.scenarios.registry``) as declarative
+:class:`ScenarioBuilder` instances alongside user-registered and fuzzer-
+generated scenarios.  This module keeps the original ``build_scenario`` /
+``SCENARIOS`` API as a thin delegation layer so core callers and the
+benchmarks are unaffected.
 """
 from __future__ import annotations
 
-from .types import ModelGraph, ModelSpec, Scenario
-from . import zoo
+from .types import Scenario
 
-def spec(model: ModelGraph, fps: float, depends_on=None, trigger_prob=0.5,
-         deadline_factor: float | None = None) -> ModelSpec:
-    """Deadlines: left as None here — the effective per-frame deadline is
-    system-dependent (Planaria's convention: a multiple of the model's
-    isolated latency on the target hardware, clipped to the frame period)
-    and is resolved by ``costmodel.effective_deadline`` at simulator setup."""
-    return ModelSpec(model=model, fps=fps, depends_on=depends_on,
-                     trigger_prob=trigger_prob,
-                     deadline_s=None if deadline_factor is None
-                     else deadline_factor / fps)
+
+def build_scenario(name: str, cascade_prob: float = 0.5) -> Scenario:
+    from repro.scenarios import registry
+    return registry.build(name, cascade_prob=cascade_prob)
 
 
 def vr_gaming(cascade_prob: float = 0.5) -> Scenario:
-    hd = zoo.ssd_mobilenet_v2("hand_det_ssd", res=640)
-    return Scenario(
-        name="VR_Gaming",
-        models=(
-            spec(zoo.fbnet_c("gaze_fbnet_c"), fps=60),
-            spec(hd, fps=30),
-            spec(zoo.handpose_net("pose_handpose", res=320), fps=30,
-                      depends_on="hand_det_ssd", trigger_prob=cascade_prob),
-            spec(zoo.ofa_supernet("ctx_ofa"), fps=30),
-            spec(zoo.kws_res8("kws_res8"), fps=15),
-            spec(zoo.gnmt("translate_gnmt"), fps=15,
-                      depends_on="kws_res8", trigger_prob=cascade_prob),
-        ),
-    )
+    return build_scenario("VR_Gaming", cascade_prob)
 
 
 def ar_call(cascade_prob: float = 0.5) -> Scenario:
-    return Scenario(
-        name="AR_Call",
-        models=(
-            spec(zoo.kws_res8("kws_res8"), fps=15),
-            spec(zoo.gnmt("translate_gnmt"), fps=15,
-                      depends_on="kws_res8", trigger_prob=cascade_prob),
-            spec(zoo.skipnet("ctx_skipnet", res=448), fps=30),
-        ),
-    )
+    return build_scenario("AR_Call", cascade_prob)
 
 
 def drone_outdoor(cascade_prob: float = 0.5) -> Scenario:
-    del cascade_prob  # no cascaded pipeline in this scenario (Table 3)
-    return Scenario(
-        name="Drone_Outdoor",
-        models=(
-            spec(zoo.ssd_mobilenet_v2("objdet_ssd", res=640), fps=30),
-            spec(zoo.trailnet("nav_trailnet"), fps=60),
-            spec(zoo.sosnet("vo_sosnet", patches=144), fps=60),
-        ),
-    )
+    return build_scenario("Drone_Outdoor", cascade_prob)
 
 
 def drone_indoor(cascade_prob: float = 0.5) -> Scenario:
-    del cascade_prob
-    return Scenario(
-        name="Drone_Indoor",
-        models=(
-            spec(zoo.ssd_mobilenet_v2("objdet_ssd", res=640), fps=30),
-            spec(zoo.rapid_rl("nav_rapid_rl"), fps=60),
-            spec(zoo.sosnet("obst_sosnet", patches=144), fps=60),
-            spec(zoo.googlenet_car("car_googlenet"), fps=60),
-        ),
-    )
+    return build_scenario("Drone_Indoor", cascade_prob)
 
 
 def ar_social(cascade_prob: float = 0.5) -> Scenario:
-    return Scenario(
-        name="AR_Social",
-        models=(
-            spec(zoo.focal_depth("depth_focal"), fps=30),
-            spec(zoo.ed_tcn("action_ed_tcn"), fps=30),
-            spec(zoo.ssd_mobilenet_v2("face_det_ssd", res=640), fps=30),
-            spec(zoo.vgg_voxceleb("verif_vggvox"), fps=30,
-                      depends_on="face_det_ssd", trigger_prob=cascade_prob),
-            spec(zoo.ofa_supernet("ctx_ofa"), fps=30),
-        ),
-    )
+    return build_scenario("AR_Social", cascade_prob)
 
 
 SCENARIOS = {
@@ -97,7 +44,3 @@ SCENARIOS = {
     "Drone_Indoor": drone_indoor,
     "AR_Social": ar_social,
 }
-
-
-def build_scenario(name: str, cascade_prob: float = 0.5) -> Scenario:
-    return SCENARIOS[name](cascade_prob)

@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 ships the TPU params under the old TPUCompilerParams name
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 Array = jax.Array
 
 DEFAULT_BLOCK_T = 128
@@ -77,7 +81,7 @@ def gmm_padded(
                                    lambda tb, fb, eid: (tb, fb)),
         ),
         out_shape=jax.ShapeDtypeStruct((tp, f), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(tile_eid.astype(jnp.int32), x, w)

@@ -24,6 +24,8 @@ from __future__ import annotations
 import heapq
 import itertools
 import time
+import zlib
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -64,7 +66,14 @@ class ServeRequest:
 
 @dataclass
 class RequestQueue:
-    """Periodic frame generator for registered model streams."""
+    """Frame generator for registered model streams.
+
+    Streams are strictly periodic from t=0 by default; pass ``arrival`` (an
+    ``repro.scenarios.arrivals`` process instance or its config dict) for
+    jittered / Poisson / bursty / diurnal traffic — the same processes the
+    Level-1 simulator consumes, so a workload definition ports across both
+    engines unchanged.
+    """
 
     clock: Callable[[], float]
     streams: dict[str, dict] = field(default_factory=dict)
@@ -74,21 +83,38 @@ class RequestQueue:
     def add_stream(self, model: str, fps: float, batch: int, seq: int,
                    vocab: int, deadline_frac: float = 1.0,
                    depends_on: Optional[str] = None,
-                   trigger_prob: float = 1.0) -> None:
+                   trigger_prob: float = 1.0,
+                   arrival=None) -> None:
+        # crc32, not hash(): string hashing is salted per process and would
+        # make stream contents differ run to run
+        rng = np.random.default_rng(zlib.crc32(model.encode()) & 0xFFFF)
+        proc = None
+        next_t = 0.0
+        if arrival is not None and depends_on is None:
+            from repro.scenarios.arrivals import arrival_from_config
+            proc = (arrival_from_config(arrival) if isinstance(arrival, dict)
+                    else arrival)
+            idx = len(self.streams)
+            next_t = proc.start(idx, 1.0 / fps, rng)
         self.streams[model] = dict(
-            fps=fps, batch=batch, seq=seq, vocab=vocab, next_t=0.0,
+            fps=fps, batch=batch, seq=seq, vocab=vocab, next_t=next_t,
             deadline=deadline_frac / fps, depends_on=depends_on,
-            trigger_prob=trigger_prob, rng=np.random.default_rng(hash(model) & 0xFFFF))
+            trigger_prob=trigger_prob, rng=rng, arrival=proc)
 
     def poll(self, now: float) -> list[ServeRequest]:
-        """Emit any frames whose period elapsed (head-of-pipeline streams)."""
+        """Emit any frames whose arrival time elapsed (head streams)."""
         out = []
         for name, st in self.streams.items():
-            if st["depends_on"] is not None:
+            if st["depends_on"] is not None or st["next_t"] is None:
                 continue
-            while st["next_t"] <= now:
-                out.append(self._make(name, st, st["next_t"]))
-                st["next_t"] += 1.0 / st["fps"]
+            while st["next_t"] is not None and st["next_t"] <= now:
+                t = st["next_t"]
+                out.append(self._make(name, st, t))
+                if st["arrival"] is None:
+                    st["next_t"] = t + 1.0 / st["fps"]
+                else:
+                    st["next_t"] = st["arrival"].next_after(
+                        t, 1.0 / st["fps"], st["rng"])
         self.pending.extend(out)
         return out
 
@@ -107,6 +133,35 @@ class RequestQueue:
         return ServeRequest(rid=next(self._rid), model=name, tokens=tokens,
                             arrival=t, deadline=t + st["deadline"],
                             depends_on=st["depends_on"])
+
+
+class TraceReplayQueue(RequestQueue):
+    """Replays the head arrivals of a recorded scenario trace.
+
+    The same ``repro.scenarios.trace.Trace`` the Level-1 simulator records
+    and replays drives the serving engine here: each recorded arrival time
+    becomes one request for the matching registered stream (models absent
+    from the stream registry are ignored, so a trace can be replayed against
+    a subset deployment).  Dependent streams stay live — cascade triggering
+    remains the engine's own seeded draw, exactly as in the simulator.
+    """
+
+    def __init__(self, clock: Callable[[], float], trace) -> None:
+        super().__init__(clock=clock)
+        self._times: dict[str, deque] = {
+            name: deque(ts) for name, ts in trace.arrivals_by_model().items()
+        }
+
+    def poll(self, now: float) -> list[ServeRequest]:
+        out = []
+        for name, st in self.streams.items():
+            if st["depends_on"] is not None:
+                continue
+            q = self._times.get(name)
+            while q and q[0] <= now:
+                out.append(self._make(name, st, q.popleft()))
+        self.pending.extend(out)
+        return out
 
 
 # ---------------------------------------------------------------------------

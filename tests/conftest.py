@@ -7,13 +7,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import pytest
-from hypothesis import HealthCheck, settings
 
-# jit compiles inside property bodies blow the default 200ms deadline
-settings.register_profile(
-    "jax", deadline=None,
-    suppress_health_check=[HealthCheck.too_slow])
-settings.load_profile("jax")
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    # minimal environments run without hypothesis; test_properties.py
+    # skips itself at collection via pytest.importorskip
+    pass
+else:
+    # jit compiles inside property bodies blow the default 200ms deadline
+    settings.register_profile(
+        "jax", deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile("jax")
 
 
 @pytest.fixture(scope="session")

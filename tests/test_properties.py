@@ -1,6 +1,11 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.mapscore import (CSWITCH_MAX, MapScoreParams, STARV_MAX,
                                  URGENCY_MAX, mapscore)
