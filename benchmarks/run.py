@@ -28,6 +28,7 @@ MODULES = (
     ("fig13", "benchmarks.fig13_metric_ablation"),
     ("fig14", "benchmarks.fig14_supernet"),
     ("scenario_sweep", "benchmarks.scenario_sweep"),
+    ("fleet_sweep", "benchmarks.fleet_sweep"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline"),
 )
@@ -42,6 +43,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of benchmark tags to run")
+    ap.add_argument("--list", action="store_true",
+                    help="print available benchmark tags and exit")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write aggregated run() payloads to this JSON file")
     ap.add_argument("--seed", type=int, default=None,
@@ -49,6 +52,10 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=None,
                     help="per-cell simulation duration (seconds)")
     args = ap.parse_args()
+    if args.list:
+        for tag, modname in MODULES:
+            print(f"{tag:>16s}  {modname}")
+        return
     tags = {t for t, _ in MODULES}
     unknown = set(args.only or ()) - tags
     if unknown:
@@ -62,6 +69,7 @@ def main() -> None:
     import importlib
     failures = []
     payloads: dict[str, object] = {}
+    wall_s: dict[str, float] = {}
     for tag, modname in MODULES:
         if args.only and tag not in args.only:
             continue
@@ -88,10 +96,12 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures.append((tag, repr(e)))
             print(f"  FAILED: {e!r}")
-        print(f"  [{tag}] {time.time() - t0:.1f}s", flush=True)
+        wall_s[tag] = round(time.time() - t0, 3)
+        print(f"  [{tag}] {wall_s[tag]:.1f}s", flush=True)
     if args.json is not None:
         out = {"seed": args.seed, "duration_s": args.duration,
-               "failures": failures, "results": payloads}
+               "failures": failures, "wall_s": wall_s,
+               "results": payloads}
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1, sort_keys=True)
         print(f"\nwrote {args.json}")

@@ -30,3 +30,18 @@ if not sweep["all_replays_exact"]:
     sys.exit("trace replay determinism broken")
 print("ci: ok —", len(sweep["rows"]), "fuzzed scenarios, replays exact")
 EOF
+
+echo "=== fleet sweep (fast, 4 nodes + churn) ==="
+python - "$ARTIFACTS/ci_fleet_sweep.json" <<'EOF'
+import json, sys
+from benchmarks.fleet_sweep import run
+out = run(duration_s=1.5, seed=1, n_nodes=4, n_streams=28)
+json.dump(out, open(sys.argv[1], "w"), indent=1)
+if not out["replay_exact"]:
+    sys.exit("fleet trace replay determinism broken")
+if not out["score_beats_round_robin"]:
+    sys.exit("score-driven routing did not beat round-robin")
+print(f"ci: ok — {out['n_nodes']}-node fleet (+churn), "
+      f"{out['n_streams']} streams, "
+      f"UXCost(rr)/UXCost(score)={out['rr_over_score']:.3f}, replay exact")
+EOF

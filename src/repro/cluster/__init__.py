@@ -1,0 +1,27 @@
+"""Fleet subsystem: multi-node DREAM behind a score-driven global router.
+
+Composes N per-node simulators (heterogeneous Table-2 systems per node)
+under a fleet clock with pluggable routing policies, elastic membership
+(node join / drain / leave with stream migration and adaptivity-probe
+re-triggering), fleet-level UXCost aggregation, and a JSONL fleet trace
+whose replay reproduces an entire run bit-exactly.
+"""
+from .builder import (FleetEvent, FleetScenario, FleetScenarioBuilder,
+                      split_pipelines)
+from .fleet import (FleetResult, FleetSimulator, StreamView, node_seed,
+                    run_fleet)
+from .node import FleetNode, NodeTelemetry, StreamCost
+from .router import (POLICIES, LeastLoadedRouter, RoundRobinRouter,
+                     RouterPolicy, ScoreDrivenRouter, make_policy)
+from .trace import (FLEET_EVENT_KINDS, FLEET_TRACE_VERSION, FleetTrace,
+                    FleetTraceRecorder, dumps, load_trace, loads, save_trace)
+
+__all__ = [
+    "FleetEvent", "FleetScenario", "FleetScenarioBuilder", "split_pipelines",
+    "FleetResult", "FleetSimulator", "StreamView", "node_seed", "run_fleet",
+    "FleetNode", "NodeTelemetry", "StreamCost",
+    "POLICIES", "LeastLoadedRouter", "RoundRobinRouter", "RouterPolicy",
+    "ScoreDrivenRouter", "make_policy",
+    "FLEET_EVENT_KINDS", "FLEET_TRACE_VERSION", "FleetTrace",
+    "FleetTraceRecorder", "dumps", "load_trace", "loads", "save_trace",
+]

@@ -1,0 +1,201 @@
+"""Fleet scenarios: node membership + stream arrivals as declarative data.
+
+A :class:`FleetScenario` is an ordered list of timed fleet events — nodes
+joining/leaving/draining, streams arriving — exactly the external input a
+multi-node deployment sees.  The builder shards existing single-node
+workload definitions across the fleet: a registry scenario or a fuzzer
+sample splits into its independent pipelines (a head model plus its
+cascade children), each becoming one routable stream.
+
+Everything is plain data (``to_config``/``from_config``), so fleet
+scenarios serialize and fleet traces can embed the streams they placed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.scenarios.builder import ModelEntry, ScenarioBuilder, ScenarioError
+from repro.scenarios.fuzzer import fuzz_scenario
+
+
+@dataclass(frozen=True)
+class FleetEvent:
+    """One timed fleet-level event (serializable kind + payload)."""
+
+    t: float
+    kind: str           # node_join | node_leave | node_drain | stream
+    payload: dict
+
+    def to_config(self) -> dict:
+        return {"t": self.t, "kind": self.kind, **self.payload}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "FleetEvent":
+        d = dict(cfg)
+        return cls(t=float(d.pop("t")), kind=d.pop("kind"), payload=d)
+
+
+@dataclass(frozen=True)
+class FleetScenario:
+    """A full fleet workload: membership churn + stream arrivals."""
+
+    name: str
+    events: tuple[FleetEvent, ...]      # sorted by (t, declaration order)
+
+    def to_config(self) -> dict:
+        return {"name": self.name,
+                "events": [e.to_config() for e in self.events]}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "FleetScenario":
+        return cls(name=cfg["name"],
+                   events=tuple(FleetEvent.from_config(e)
+                                for e in cfg["events"]))
+
+    @property
+    def n_nodes(self) -> int:
+        return sum(1 for e in self.events if e.kind == "node_join")
+
+    @property
+    def n_streams(self) -> int:
+        return sum(1 for e in self.events if e.kind == "stream")
+
+
+def split_pipelines(builder: ScenarioBuilder) -> list[list[dict]]:
+    """Shard a scenario into its independent pipelines (head + cascade
+    children), as lists of serialized ModelEntry configs, head first.
+    Cross-pipeline dependencies cannot exist (the scenario builder only
+    allows forward references), so pipelines route independently."""
+    builder.validate()
+    pipelines: list[list[dict]] = []
+    owner: dict[str, int] = {}      # model name -> pipeline index
+    for entry in builder.entries:
+        cfg = entry.to_config()
+        # pin the effective instance name so fleet namespacing is stable
+        cfg["model"]["name"] = entry.model_name
+        if entry.depends_on is None:
+            owner[entry.model_name] = len(pipelines)
+            pipelines.append([cfg])
+        else:
+            pidx = owner[entry.depends_on]
+            owner[entry.model_name] = pidx
+            pipelines[pidx].append(cfg)
+    return pipelines
+
+
+class FleetScenarioBuilder:
+    """Fluent builder for fleet scenarios."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._events: list[FleetEvent] = []
+        self._next_node = 0
+        self._next_sid = 0
+        self._node_ids: set[int] = set()
+
+    # -------------------------------------------------------- membership
+    def node(self, system: str = "4K_1WS2OS", at: float = 0.0) -> int:
+        """Declare a node joining the fleet at time ``at`` (a Table-2
+        system name). Returns its node id."""
+        nid = self._next_node
+        self._next_node += 1
+        self._node_ids.add(nid)
+        self._events.append(FleetEvent(float(at), "node_join",
+                                       {"node": nid, "system": system}))
+        return nid
+
+    def node_leave(self, node_id: int, at: float) -> "FleetScenarioBuilder":
+        """Abrupt departure: the node stops at ``at``; its streams migrate,
+        jobs in flight there are lost."""
+        self._check_node(node_id)
+        self._events.append(FleetEvent(float(at), "node_leave",
+                                       {"node": node_id}))
+        return self
+
+    def node_drain(self, node_id: int, at: float) -> "FleetScenarioBuilder":
+        """Graceful departure: streams migrate away at ``at`` and the node
+        stops accepting placements, but keeps executing its queue."""
+        self._check_node(node_id)
+        self._events.append(FleetEvent(float(at), "node_drain",
+                                       {"node": node_id}))
+        return self
+
+    def _check_node(self, node_id: int) -> None:
+        if node_id not in self._node_ids:
+            raise ScenarioError(f"unknown fleet node id {node_id}")
+
+    # ----------------------------------------------------------- streams
+    def add_stream(self, entries: "list[dict] | list[ModelEntry]",
+                   at: float = 0.0) -> int:
+        """One routable stream: a pipeline of ModelEntry configs (head
+        first).  Returns the stream id."""
+        cfgs = []
+        for e in entries:
+            cfg = e.to_config() if isinstance(e, ModelEntry) else dict(e)
+            if cfg.get("model", {}).get("name") is None:
+                raise ScenarioError("fleet stream entries need explicit "
+                                    "model names (serializable ModelRefs)")
+            cfgs.append(cfg)
+        if not cfgs:
+            raise ScenarioError("fleet stream has no entries")
+        if cfgs[0].get("depends_on") is not None:
+            raise ScenarioError("fleet stream must start with a head entry")
+        sid = self._next_sid
+        self._next_sid += 1
+        self._events.append(FleetEvent(float(at), "stream",
+                                       {"sid": sid, "entries": cfgs}))
+        return sid
+
+    def add_scenario(self, builder: ScenarioBuilder,
+                     at: float = 0.0) -> list[int]:
+        """Shard a whole single-node scenario into per-pipeline streams."""
+        return [self.add_stream(p, at=at) for p in split_pipelines(builder)]
+
+    def fuzz_streams(self, n_streams: int, seed: int, t0: float = 0.0,
+                     t1: float = 1.0, max_pipelines: int = 1,
+                     fps_scale: float = 1.0) -> list[int]:
+        """Seeded stream population: fuzzer-sampled pipelines with arrival
+        times uniform over [t0, t1).  Deterministic at build time, so the
+        resulting FleetScenario needs no runtime randomness.
+
+        ``fps_scale`` rescales every stream's FPS targets: the fuzzer pools
+        are sized for one pipeline per multi-accelerator node, while a fleet
+        serves *many* light streams per node — ~0.25 puts a 12-streams-per-
+        node fleet near 50% offered utilization."""
+        rng = np.random.default_rng([seed, 0xF1EE7])
+        sids: list[int] = []
+        k = 0
+        while len(sids) < n_streams:
+            b = fuzz_scenario(seed * 100_003 + k, max_pipelines=max_pipelines)
+            k += 1
+            for pipe in split_pipelines(b):
+                if len(sids) >= n_streams:
+                    break
+                if fps_scale != 1.0:
+                    for cfg in pipe:
+                        cfg["fps"] = float(cfg["fps"]) * fps_scale
+                t = round(float(rng.uniform(t0, t1)), 6)
+                sids.append(self.add_stream(pipe, at=t))
+        return sids
+
+    # ------------------------------------------------------------- build
+    def build(self) -> FleetScenario:
+        if not self._node_ids:
+            raise ScenarioError(f"fleet scenario {self.name!r} has no nodes")
+        if not any(e.kind == "stream" for e in self._events):
+            raise ScenarioError(f"fleet scenario {self.name!r} has no streams")
+        indexed = sorted(enumerate(self._events),
+                         key=lambda p: (p[1].t, p[0]))
+        events = tuple(e for _, e in indexed)
+        joined: set[int] = set()            # temporal consistency check
+        for e in events:
+            if e.kind == "node_join":
+                joined.add(e.payload["node"])
+            elif e.kind in ("node_leave", "node_drain"):
+                if e.payload["node"] not in joined:
+                    raise ScenarioError(
+                        f"{e.kind} of node {e.payload['node']} at t={e.t} "
+                        "precedes its join")
+        return FleetScenario(name=self.name, events=events)

@@ -1,0 +1,402 @@
+"""FleetSimulator: N DREAM nodes behind a score-driven global router.
+
+Composes per-node discrete-event Simulators (heterogeneous Table-2 systems
+per node) under one fleet clock, using the step/peek API: before each
+fleet-level event — a stream arriving, a node joining/leaving/draining, a
+rebalance tick — every live node is advanced to the event time, so the
+router always reads telemetry that is causally consistent across the fleet.
+
+Elastic membership is first-class:
+
+  * ``node_join``  — a fresh (empty) node starts mid-run; its UXCost window
+    clock anchors at the join time.
+  * ``node_drain`` — graceful: streams migrate away, the node finishes its
+    queue but accepts no new placements.
+  * ``node_leave`` — abrupt: streams migrate, jobs in flight are lost.
+
+Every placement-affecting event re-triggers the (alpha, beta) adaptivity
+probe on the touched nodes (``DreamScheduler.retrigger_probe``), mirroring
+the paper's workload-change response.
+
+With ``record=True`` the run emits a :class:`~.trace.FleetTrace` capturing
+inputs *and* routing decisions; constructing a FleetSimulator from that
+trace (``replay=...``) bypasses the router and reproduces the run
+bit-exactly — same per-node jobs, same fleet UXCost.
+"""
+from __future__ import annotations
+
+import copy
+import re
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.scheduler import dream_full
+from repro.core.simulator import SchedulerBase
+from repro.core.uxcost import (WindowStats, overall_dlv_rate,
+                               overall_norm_energy, uxcost)
+from repro.scenarios.builder import ModelEntry
+
+from .builder import FleetScenario
+from .node import FleetNode, StreamCost
+from .router import RouterPolicy, ScoreDrivenRouter, make_policy
+from .trace import FleetTrace, FleetTraceRecorder
+
+
+def node_seed(fleet_seed: int, node_id: int) -> int:
+    """Per-node RNG seed: stable across record and replay."""
+    return fleet_seed + 7919 * (node_id + 1)
+
+
+#: placement-generation suffix in namespaced model names ("s12g2.det")
+_GEN_RE = re.compile(r"^(s\d+)g\d+\.")
+
+
+def canonical_stream_model(name: str) -> str:
+    """Collapse placement generations: a stream migrated across nodes is
+    one logical model in the fleet UXCost merge ("s12g2.det" -> "s12.det"),
+    so migrating does not split its DLV-floor / energy accounting."""
+    return _GEN_RE.sub(r"\1.", name)
+
+
+class StreamView:
+    """Router-facing view of one stream.
+
+    Holds the *original* (un-namespaced) pipeline entries so cost estimates
+    share memoized tables across streams and placement generations; graphs
+    materialize lazily, and per-node costs cache by system type (they
+    depend only on the node's accelerator mix, not its live state)."""
+
+    def __init__(self, sid: int, entry_cfgs: list[dict]):
+        self.sid = sid
+        self.entry_cfgs = entry_cfgs
+        self.entries = [ModelEntry.from_config(c) for c in entry_cfgs]
+        self._graphs: Optional[list] = None
+        self._cost_by_system: dict[object, StreamCost] = {}
+
+    @property
+    def head_period_s(self) -> float:
+        return 1.0 / self.entries[0].fps
+
+    def _graph_loads(self) -> list:
+        if self._graphs is None:
+            self._graphs = [
+                (e.ref.build(), e.fps,
+                 1.0 if e.depends_on is None else e.trigger_prob)
+                for e in self.entries
+            ]
+        return self._graphs
+
+    def cost_on(self, node: FleetNode) -> StreamCost:
+        key = node.system if node.system != "custom" else ("node", node.node_id)
+        hit = self._cost_by_system.get(key)
+        if hit is None:
+            hit = node.stream_cost(self._graph_loads(), self.head_period_s)
+            self._cost_by_system[key] = hit
+        return hit
+
+    def namespaced_specs(self, gen: int) -> tuple[list, list[str]]:
+        """Materialize placement-generation-``gen`` ModelSpecs.  Names are
+        prefixed per (stream, generation) so re-placements never collide
+        with an earlier residency of the same stream on the same node."""
+        prefix = f"s{self.sid}." if gen == 0 else f"s{self.sid}g{gen}."
+        specs, names = [], []
+        for cfg in self.entry_cfgs:
+            c = copy.deepcopy(cfg)
+            base = c["model"]["name"]
+            c["model"]["name"] = prefix + base
+            if c.get("depends_on"):
+                c["depends_on"] = prefix + c["depends_on"]
+            specs.append(ModelEntry.from_config(c).to_spec())
+            names.append(prefix + base)
+        return specs, names
+
+
+@dataclass
+class FleetResult:
+    name: str
+    policy: str
+    duration_s: float
+    n_nodes: int                 # nodes ever joined
+    n_streams: int
+    stats: WindowStats           # fleet-merged per-model window stats
+    uxcost: float                # fleet UXCost (Algorithm 2 on the merge)
+    dlv_rate: float
+    norm_energy: float
+    frames: int
+    drops: int
+    migrations: int
+    probe_retriggers: int
+    per_node: list[dict]
+    trace: Optional[FleetTrace] = None
+
+    def summary(self) -> str:
+        return (f"fleet[{self.policy:>11s}] nodes={self.n_nodes:<3d} "
+                f"streams={self.n_streams:<4d} UXCost={self.uxcost:10.4f} "
+                f"DLV={self.dlv_rate:6.3f} frames={self.frames} "
+                f"drops={self.drops} migr={self.migrations}")
+
+
+class FleetSimulator:
+    """Drive a FleetScenario (or a recorded FleetTrace) to completion."""
+
+    def __init__(
+        self,
+        scenario: Optional[FleetScenario] = None,
+        policy: "str | RouterPolicy" = "score",
+        *,
+        duration_s: float = 4.0,
+        seed: int = 0,
+        window_s: float = 0.5,
+        scheduler_factory: Optional[Callable[[int], SchedulerBase]] = None,
+        record: bool = False,
+        replay: Optional[FleetTrace] = None,
+        rebalance_every_s: Optional[float] = None,
+        rebalance_hysteresis: float = 0.15,
+    ):
+        if (scenario is None) == (replay is None):
+            raise ValueError("pass exactly one of scenario or replay")
+        self.replay = replay
+        if replay is not None:
+            meta = replay.meta
+            self.name = meta.get("scenario", "replayed-fleet")
+            self.policy = make_policy(meta.get("policy", "score"))
+            duration_s = float(meta["duration_s"])
+            seed = int(meta["seed"])
+            window_s = float(meta["window_s"])
+            rebalance_every_s = None    # decisions come from the trace
+            self._events = [(e["t"], e["type"], e) for e in replay.events]
+        else:
+            self.name = scenario.name
+            self.policy = make_policy(policy)
+            self._events = [(e.t, e.kind, dict(e.payload, t=e.t))
+                            for e in scenario.events]
+        self.duration_s = duration_s
+        self.seed = seed
+        self.window_s = window_s
+        self.scheduler_factory = (scheduler_factory
+                                  or (lambda s: dream_full(seed=s)))
+        #: scheduler identity, recorded in traces: replaying with a
+        #: different per-node scheduler would silently diverge
+        self._scheduler_name = self.scheduler_factory(0).name
+        if replay is not None:
+            expected = replay.meta.get("scheduler")
+            if expected is not None and expected != self._scheduler_name:
+                raise ValueError(
+                    f"trace was recorded with scheduler {expected!r}; pass a "
+                    f"matching scheduler_factory (got "
+                    f"{self._scheduler_name!r})")
+        if rebalance_every_s is not None and not rebalance_every_s > 0:
+            raise ValueError("rebalance_every_s must be positive")
+        self.rebalance_every_s = rebalance_every_s
+        self.rebalance_hysteresis = rebalance_hysteresis
+        self.nodes: dict[int, FleetNode] = {}
+        self.streams: dict[int, StreamView] = {}
+        self.stream_node: dict[int, int] = {}   # sid -> hosting node id
+        self.gen: dict[int, int] = {}           # sid -> placement generation
+        self.migrations = 0
+        self.recorder = None
+        self.trace: Optional[FleetTrace] = None
+        if record:
+            if replay is not None:
+                raise ValueError("record and replay are mutually exclusive")
+            self.recorder = FleetTraceRecorder({
+                "scenario": self.name, "policy": self.policy.name,
+                "scheduler": self._scheduler_name,
+                "seed": seed, "duration_s": duration_s,
+                "window_s": window_s,
+            })
+
+    # ---------------------------------------------------------- plumbing
+    def _advance_all(self, t: float) -> None:
+        for nid in sorted(self.nodes):
+            self.nodes[nid].advance_to(t)
+
+    def _candidates(self, exclude: Optional[int] = None) -> list[FleetNode]:
+        return [self.nodes[nid] for nid in sorted(self.nodes)
+                if self.nodes[nid].alive and not self.nodes[nid].draining
+                and nid != exclude]
+
+    def _place(self, sid: int, nid: int, t: float, gen: int) -> None:
+        sv = self.streams[sid]
+        specs, names = sv.namespaced_specs(gen)
+        self.nodes[nid].place(sid, specs, names, t)
+        self.stream_node[sid] = nid
+        self.gen[sid] = gen
+
+    def _migrate(self, sid: int, src: int, dst: int, t: float,
+                 gen: int) -> None:
+        self.nodes[src].evict(sid, t)
+        self._place(sid, dst, t, gen)
+        self.migrations += 1
+
+    # ------------------------------------------------------ event handlers
+    def _on_node_join(self, t: float, ev: dict) -> None:
+        nid, system = int(ev["node"]), ev["system"]
+        if nid in self.nodes:
+            raise ValueError(f"node {nid} joined twice")
+        ns = node_seed(self.seed, nid)
+        self.nodes[nid] = FleetNode(
+            nid, system, self.scheduler_factory(ns),
+            duration_s=self.duration_s, seed=ns,
+            window_s=self.window_s, at_t=t)
+        if self.recorder is not None:
+            self.recorder.node_join(t, nid, system)
+
+    def _on_node_leave(self, t: float, ev: dict) -> None:
+        node = self.nodes[int(ev["node"])]
+        if self.recorder is not None:
+            self.recorder.node_leave(t, node.node_id)
+        if self.replay is None:
+            self._migrate_all_off(node, t)
+        node.alive = False
+
+    def _on_node_drain(self, t: float, ev: dict) -> None:
+        node = self.nodes[int(ev["node"])]
+        if self.recorder is not None:
+            self.recorder.node_drain(t, node.node_id)
+        node.draining = True
+        if self.replay is None:
+            self._migrate_all_off(node, t)
+
+    def _migrate_all_off(self, node: FleetNode, t: float) -> None:
+        for sid in sorted(node.placements):
+            cands = self._candidates(exclude=node.node_id)
+            if not cands:
+                raise RuntimeError(
+                    f"no live nodes left to host stream {sid} at t={t}")
+            dst = self.policy.place(self.streams[sid], cands)
+            gen = self.gen[sid] + 1
+            self._migrate(sid, node.node_id, dst, t, gen)
+            if self.recorder is not None:
+                self.recorder.migrate(t, sid, node.node_id, dst, gen)
+
+    def _on_stream(self, t: float, ev: dict) -> None:
+        sid = int(ev["sid"])
+        self.streams[sid] = StreamView(sid, ev["entries"])
+        if self.recorder is not None:
+            self.recorder.stream(t, sid, ev["entries"])
+        if self.replay is not None:
+            return                       # a recorded `place` event follows
+        cands = self._candidates()
+        if not cands:
+            raise RuntimeError(f"stream {sid} arrived with no live nodes")
+        nid = self.policy.place(self.streams[sid], cands)
+        self._place(sid, nid, t, gen=0)
+        if self.recorder is not None:
+            self.recorder.place(t, sid, nid, 0)
+
+    def _on_place(self, t: float, ev: dict) -> None:       # replay only
+        self._place(int(ev["sid"]), int(ev["node"]), t, int(ev["gen"]))
+
+    def _on_migrate(self, t: float, ev: dict) -> None:     # replay only
+        self._migrate(int(ev["sid"]), int(ev["from"]), int(ev["to"]), t,
+                      int(ev["gen"]))
+
+    def _on_rebalance(self, t: float, ev: dict) -> None:   # live only
+        """Optional phase-boundary re-placement: move a stream when the
+        score-driven router now prefers another node by a clear margin."""
+        if not isinstance(self.policy, ScoreDrivenRouter):
+            return
+        cands = self._candidates()          # membership is fixed in-tick
+        if len(cands) < 2:
+            return
+        for sid in sorted(self.stream_node):
+            cur = self.stream_node[sid]
+            if not self.nodes[cur].alive:
+                continue
+            sv = self.streams[sid]
+            best_iso = min(sv.cost_on(n).iso_s for n in cands)
+            scores = {n.node_id: self.policy.score(sv, n, best_iso)
+                      for n in cands}
+            best = min(scores, key=lambda nid: (scores[nid], nid))
+            cur_score = scores.get(cur)
+            if (best != cur and cur_score is not None
+                    and cur_score - scores[best] > self.rebalance_hysteresis):
+                gen = self.gen[sid] + 1
+                self._migrate(sid, cur, best, t, gen)
+                if self.recorder is not None:
+                    self.recorder.migrate(t, sid, cur, best, gen)
+
+    # ----------------------------------------------------------------- run
+    def _event_stream(self) -> list[tuple[float, str, dict]]:
+        events = list(self._events)
+        if self.rebalance_every_s is not None:
+            k, seq = 1, 0
+            while k * self.rebalance_every_s < self.duration_s:
+                events.append((k * self.rebalance_every_s,
+                               "rebalance", {"k": k}))
+                k += 1
+        # stable sort keeps same-time events in declaration/record order;
+        # synthetic rebalance ticks land after same-time scenario events
+        return sorted(events, key=lambda e: e[0])
+
+    def run(self) -> FleetResult:
+        handlers = {
+            "node_join": self._on_node_join,
+            "node_leave": self._on_node_leave,
+            "node_drain": self._on_node_drain,
+            "stream": self._on_stream,
+            "place": self._on_place,
+            "migrate": self._on_migrate,
+            "rebalance": self._on_rebalance,
+        }
+        for t, kind, ev in self._event_stream():
+            if t > self.duration_s:
+                break
+            self._advance_all(t)
+            handlers[kind](t, ev)
+        self._advance_all(self.duration_s)
+        return self._finalize()
+
+    def _finalize(self) -> FleetResult:
+        fleet_stats = WindowStats()
+        per_node: list[dict] = []
+        frames = drops = retriggers = 0
+        for nid in sorted(self.nodes):
+            node = self.nodes[nid]
+            r = node.finalize()
+            for name, st in r.stats.per_model.items():
+                fleet_stats.model(canonical_stream_model(name)).merge(st)
+            frames += r.frames
+            drops += r.drops
+            retriggers += node.probe_retriggers
+            # busy fraction since the node's join (SimResult utilization
+            # divides by absolute time, understating mid-run joiners);
+            # clamped because an abrupt leave can freeze sim.t with a
+            # dispatch reservation still counted in busy_time
+            span = max(node.sim.t - node.join_t, 1e-9)
+            util = min(sum(a.busy_time for a in node.sim.accs)
+                       / (len(node.sim.accs) * span), 1.0)
+            per_node.append({
+                "node": nid, "system": node.system, "alive": node.alive,
+                "draining": node.draining, "frames": r.frames,
+                "drops": r.drops, "uxcost": r.uxcost,
+                "utilization": util, "streams": len(node.placements),
+                "probe_retriggers": node.probe_retriggers,
+            })
+        if self.recorder is not None:
+            self.trace = self.recorder.trace()
+        return FleetResult(
+            name=self.name,
+            policy=self.policy.name,
+            duration_s=self.duration_s,
+            n_nodes=len(self.nodes),
+            n_streams=len(self.streams),
+            stats=fleet_stats,
+            uxcost=uxcost(fleet_stats),
+            dlv_rate=overall_dlv_rate(fleet_stats),
+            norm_energy=overall_norm_energy(fleet_stats),
+            frames=frames,
+            drops=drops,
+            migrations=self.migrations,
+            probe_retriggers=retriggers,
+            per_node=per_node,
+            trace=self.trace,
+        )
+
+
+def run_fleet(scenario: FleetScenario, policy: "str | RouterPolicy",
+              duration_s: float = 4.0, seed: int = 0,
+              **kw) -> FleetResult:
+    return FleetSimulator(scenario, policy, duration_s=duration_s,
+                          seed=seed, **kw).run()

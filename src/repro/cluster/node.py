@@ -1,0 +1,184 @@
+"""One DREAM node inside a fleet: a per-node Simulator plus the telemetry
+and placement surface the global router consumes.
+
+A :class:`FleetNode` wraps an *empty-scenario* ``repro.core.Simulator``
+(streams arrive later, placed by the router through ``Simulator.join_model``)
+driven through the step/peek API so the fleet clock can interleave nodes.
+Telemetry is a cheap snapshot — queue depth, backlog, the latest UXCost
+window, utilization — and the MapScore-style cross-node summaries (how well
+a candidate stream's models suit this node's accelerator mix, and how much
+utilization it would add) come from the memoized offline cost tables, so
+evaluating a stream against every node of a 16-node fleet costs a handful
+of dict lookups.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.costmodel import build_cost_table
+from repro.core.simulator import SchedulerBase, SimResult, Simulator
+from repro.core.types import Accelerator, ModelGraph, Scenario, SYSTEMS
+
+
+@dataclass(frozen=True)
+class NodeTelemetry:
+    """Router-visible snapshot of one node (all fields cheap to compute)."""
+
+    node_id: int
+    system: str
+    n_accs: int
+    queue_depth: int        # jobs ready or running right now
+    active_streams: int     # streams currently placed here
+    backlog_s: float        # summed mean to-go latency of live jobs (s)
+    offered_util: float     # placed streams' offered load / accelerator count
+    window_uxcost: float    # most recent UXCost window (0 before the first)
+    window_dlv: float       # DLV rate over the most recent advance span
+    utilization: float      # cumulative busy fraction so far
+    drops: int
+    draining: bool
+
+
+@dataclass(frozen=True)
+class StreamCost:
+    """MapScore-style summary of one stream on one node's accelerator mix."""
+
+    iso_s: float            # best-accelerator isolated latency, full pipeline
+    offered_s: float        # expected busy-seconds per wall-clock second
+    urgency: float          # iso latency / head period (deadline tightness)
+
+
+class FleetNode:
+    """A member of the fleet: simulator + stream bookkeeping + telemetry."""
+
+    def __init__(self, node_id: int, system: str | tuple[Accelerator, ...],
+                 scheduler: SchedulerBase, *, duration_s: float,
+                 seed: int, window_s: float = 0.5, at_t: float = 0.0):
+        self.node_id = node_id
+        self.system = system if isinstance(system, str) else "custom"
+        self.accs_spec = SYSTEMS[system] if isinstance(system, str) else system
+        self.sim = Simulator(Scenario(name=f"node{node_id}", models=()),
+                             self.accs_spec, scheduler,
+                             duration_s=duration_s, seed=seed,
+                             window_s=window_s)
+        self.sim.start(at_t=at_t)
+        self.join_t = at_t
+        self.draining = False
+        self.alive = True
+        #: sid -> list of namespaced model names placed for that stream
+        self.placements: dict[int, list[str]] = {}
+        #: sum of offered load (busy-s per s) of currently placed streams
+        self.offered_s = 0.0
+        self.probe_retriggers = 0
+        #: DLV rate over the most recent advance span (not run-cumulative,
+        #: so a node is not penalized forever for early violations)
+        self.recent_dlv = 0.0
+        self._dlv_snapshot = (0, 0)          # (frames, violated) seen so far
+
+    # ------------------------------------------------------------- clock
+    def advance_to(self, t: float) -> None:
+        if self.alive:
+            self.sim.step_until(t)
+            self._update_recent_dlv()
+
+    def _update_recent_dlv(self) -> None:
+        frames = viol = 0
+        for st in self.sim.global_stats.per_model.values():
+            frames += st.frames
+            viol += st.violated
+        df = frames - self._dlv_snapshot[0]
+        if df > 0:
+            self.recent_dlv = (viol - self._dlv_snapshot[1]) / df
+            self._dlv_snapshot = (frames, viol)
+
+    def finalize(self) -> SimResult:
+        return self.sim.finalize()
+
+    # -------------------------------------------------------- placement
+    def place(self, sid: int, specs: list, names: list[str],
+              t: float) -> None:
+        """Join a stream's pipeline (ModelSpecs, head first) at time t."""
+        for spec in specs:
+            self.sim.join_model(spec, t)
+        self.placements[sid] = list(names)
+        for g, fps, weight in _spec_loads(specs):
+            self.offered_s += weight * fps * self._iso_best(g)
+        self.retrigger_probe()
+
+    def evict(self, sid: int, t: float) -> None:
+        """Stop a stream's arrivals here (jobs in flight still complete)."""
+        for name in self.placements.pop(sid, ()):
+            self.sim.leave_model(name, t)
+        # offered load is recomputed from scratch on eviction: the spec
+        # objects are gone, so track via the remaining placements instead
+        self._recompute_offered()
+        self.retrigger_probe()
+
+    def _recompute_offered(self) -> None:
+        live = {n for names in self.placements.values() for n in names}
+        total = 0.0
+        for i, spec in enumerate(self.sim.specs):
+            if spec.model.name in live and self.sim.active[i]:
+                w = 1.0 if spec.depends_on is None else spec.trigger_prob
+                total += w * spec.fps * self._iso_best(spec.model)
+        self.offered_s = total
+
+    def retrigger_probe(self) -> None:
+        """Membership/placement churn re-arms the node's (alpha, beta)
+        probe — the simulator-level analogue of the paper's workload-change
+        re-trigger, signalled explicitly by the fleet."""
+        fn = getattr(self.sim.scheduler, "retrigger_probe", None)
+        if fn is not None:
+            fn()
+            self.probe_retriggers += 1
+
+    # -------------------------------------------------------- estimates
+    def _iso_best(self, graph: ModelGraph) -> float:
+        table = build_cost_table(graph, self.accs_spec)
+        return float(table.lat.sum(axis=1).min())
+
+    def stream_cost(self, graphs: list[tuple[ModelGraph, float, float]],
+                    head_period_s: float) -> StreamCost:
+        """Estimate a candidate stream on this node.  ``graphs`` is a list
+        of (graph, fps, weight) with weight = cascade trigger probability
+        (1.0 for heads); cost tables are memoized so this is cheap."""
+        iso = 0.0
+        offered = 0.0
+        for g, fps, weight in graphs:
+            best = self._iso_best(g)
+            iso += weight * best
+            offered += weight * fps * best
+        urgency = iso / max(head_period_s, 1e-9)
+        return StreamCost(iso_s=iso, offered_s=offered, urgency=urgency)
+
+    # -------------------------------------------------------- telemetry
+    def telemetry(self) -> NodeTelemetry:
+        sim = self.sim
+        live = [j for j in sim.jobs.values() if not j.done]
+        backlog = sum(j.togo() for j in live)
+        n_accs = len(sim.accs)
+        if sim.windows:
+            _, wux, _, _ = sim.windows[-1]
+        else:
+            wux = 0.0
+        span = max(sim.t - self.join_t, 1e-9)   # busy fraction since join
+        util = sum(a.busy_time for a in sim.accs) / (n_accs * span)
+        return NodeTelemetry(
+            node_id=self.node_id,
+            system=self.system,
+            n_accs=n_accs,
+            queue_depth=len(live),
+            active_streams=len(self.placements),
+            backlog_s=backlog,
+            offered_util=self.offered_s / n_accs,
+            window_uxcost=wux,
+            window_dlv=self.recent_dlv,
+            utilization=min(util, 1.0),
+            drops=sim.drops,
+            draining=self.draining,
+        )
+
+
+def _spec_loads(specs: list) -> list[tuple[ModelGraph, float, float]]:
+    return [(s.model, s.fps, 1.0 if s.depends_on is None else s.trigger_prob)
+            for s in specs]

@@ -1,0 +1,121 @@
+"""Global admission/routing policies: which node serves a new stream.
+
+The router sees only aggregated telemetry (:class:`~.node.NodeTelemetry`)
+plus per-(stream, node) cost summaries from the memoized offline tables —
+never per-job state — so the same policies port to a real deployment where
+nodes export a handful of gauges.
+
+Policies:
+
+  * ``round_robin``   — cycle over live nodes; the fleet baseline.
+  * ``least_loaded``  — minimize post-placement offered utilization.
+  * ``score``         — DREAM-Fleet: a MapScore-analogue at node granularity
+    combining load, hardware preference (how well the stream's models suit
+    the node's WS/OS accelerator mix, weighted by deadline urgency) and the
+    node's recent UXCost-window health.
+
+All policies are deterministic: ties break on node id, and the round-robin
+cursor is part of the policy state (reconstructed identically on replay —
+though replay short-circuits routing entirely via recorded placements).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from .node import FleetNode, StreamCost
+
+
+class RouterPolicy:
+    """Placement policy plug-in: pick a node id for a candidate stream."""
+
+    name = "base"
+
+    def place(self, stream, nodes: Sequence[FleetNode]) -> int:
+        """Return the node_id to host ``stream`` (a StreamView).  ``nodes``
+        is the list of live, non-draining nodes, sorted by node_id."""
+        raise NotImplementedError
+
+
+class RoundRobinRouter(RouterPolicy):
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._cursor = 0
+
+    def place(self, stream, nodes: Sequence[FleetNode]) -> int:
+        node = nodes[self._cursor % len(nodes)]
+        self._cursor += 1
+        return node.node_id
+
+
+class LeastLoadedRouter(RouterPolicy):
+    """Minimize the node's offered utilization after placement."""
+
+    name = "least_loaded"
+
+    def place(self, stream, nodes: Sequence[FleetNode]) -> int:
+        best_id, best_key = nodes[0].node_id, None
+        for node in nodes:
+            tel = node.telemetry()
+            cost = stream.cost_on(node)
+            after = tel.offered_util + cost.offered_s / tel.n_accs
+            key = (after, tel.queue_depth, node.node_id)
+            if best_key is None or key < best_key:
+                best_id, best_key = node.node_id, key
+        return best_id
+
+
+#: DREAM-Fleet score weights.  Load dominates (an overloaded node violates
+#: deadlines no matter how well-matched its dataflows are); the live
+#: backlog corrects the static offered-load estimate with what is actually
+#: queued; preference is urgency-weighted (tight-deadline streams pay most
+#: for a poor hardware match); recent deadline-violation health breaks
+#: structural ties toward nodes that are currently delivering.
+W_BACKLOG = 0.5
+W_PREF = 0.2
+W_UX = 0.15
+URGENCY_CAP = 4.0
+
+
+class ScoreDrivenRouter(RouterPolicy):
+    name = "score"
+
+    def score(self, stream, node: FleetNode,
+              best_iso: float) -> float:
+        """Lower is better.  ``best_iso`` is the stream's best isolated
+        latency across all candidate nodes (preference normalizer)."""
+        tel = node.telemetry()
+        cost: StreamCost = stream.cost_on(node)
+        load_after = tel.offered_util + cost.offered_s / tel.n_accs
+        pref_penalty = (cost.iso_s / max(best_iso, 1e-12)) - 1.0
+        urgency = min(cost.urgency, URGENCY_CAP)
+        return (load_after
+                + W_BACKLOG * tel.backlog_s / tel.n_accs
+                + W_PREF * pref_penalty * urgency
+                + W_UX * min(tel.window_dlv, 1.0))
+
+    def place(self, stream, nodes: Sequence[FleetNode]) -> int:
+        best_iso = min(stream.cost_on(n).iso_s for n in nodes)
+        best_id, best_key = nodes[0].node_id, None
+        for node in nodes:
+            key = (self.score(stream, node, best_iso), node.node_id)
+            if best_key is None or key < best_key:
+                best_id, best_key = node.node_id, key
+        return best_id
+
+
+POLICIES = {
+    "round_robin": RoundRobinRouter,
+    "least_loaded": LeastLoadedRouter,
+    "score": ScoreDrivenRouter,
+}
+
+
+def make_policy(policy: "str | RouterPolicy") -> RouterPolicy:
+    if isinstance(policy, RouterPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown router policy {policy!r}; "
+                         f"choose from {sorted(POLICIES)}") from None

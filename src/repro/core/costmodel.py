@@ -190,15 +190,54 @@ class CostTable:
         return self.lat.shape[0]
 
 
+#: Memo for build_cost_table keyed by (layers, accelerators, shared_bw).
+#: Costs depend only on the layer list and the accelerator mix — NOT on the
+#: graph's name — so renamed instances of the same architecture (two zoo
+#: builds, fleet placement-namespaced copies like "s12.det") all share one
+#: table, and the cache stays bounded by distinct structures, not labels.
+#: Layer / Accelerator are frozen dataclasses, so structural equality works.
+#: CostTable is frozen and its arrays are never written after construction,
+#: so sharing across simulators / fleet nodes is safe.
+_TABLE_CACHE: dict[tuple, CostTable] = {}
+_TABLE_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def table_cache_info() -> dict:
+    """Snapshot of the CostTable memo: hits, misses, current size."""
+    return {**_TABLE_CACHE_STATS, "size": len(_TABLE_CACHE)}
+
+
+def clear_table_cache() -> None:
+    _TABLE_CACHE.clear()
+    _TABLE_CACHE_STATS["hits"] = _TABLE_CACHE_STATS["misses"] = 0
+
+
 def build_cost_table(model: ModelGraph, accs: tuple[Accelerator, ...],
                      shared_bw: bool = True) -> CostTable:
-    """Cost table for one model on a multi-accelerator system.
+    """Cost table for one model on a multi-accelerator system (memoized).
 
     ``shared_bw``: Table 2 of the paper specifies 90 GB/s of *shared* off-chip
     bandwidth for the whole chip. The offline tables therefore charge each
     sub-accelerator its proportional share (bw / n_accs) — a deterministic,
     conservative model of shared-bus contention on an edge SoC.
     """
+    key = (model.layers, tuple(accs), bool(shared_bw))
+    cached = _TABLE_CACHE.get(key)
+    if cached is not None:
+        _TABLE_CACHE_STATS["hits"] += 1
+        if cached.model_name != model.name:
+            # same structure under another label: share the arrays, relabel
+            from dataclasses import replace as _rep
+            cached = _rep(cached, model_name=model.name)
+        return cached
+    _TABLE_CACHE_STATS["misses"] += 1
+    table = _build_cost_table(model, tuple(accs), shared_bw)
+    _TABLE_CACHE[key] = table
+    return table
+
+
+def _build_cost_table(model: ModelGraph, accs: tuple[Accelerator, ...],
+                      shared_bw: bool) -> CostTable:
     n_a, n_l = len(accs), len(model.layers)
     if shared_bw and n_a > 1:
         from dataclasses import replace as _rep

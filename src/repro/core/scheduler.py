@@ -58,6 +58,18 @@ class AdaptivityState:
             return self.candidates[self.cand_idx]
         return self.center
 
+    def retrigger(self, radius: float = 0.4) -> None:
+        """Restart the (alpha, beta) probe from the current center — the
+        response to an externally-signalled workload change (stream
+        migration, node membership churn) rather than a detected DLV drift.
+        Fresh candidates are drawn on the next window step."""
+        self.radius = max(self.radius, radius)
+        self.probing = True
+        self.candidates = []
+        self.results = []
+        self.cand_idx = 0
+        self.dlv_ema = None
+
     def step(self, window_uxcost: float, window_dlv: float,
              rng: np.random.Generator) -> np.ndarray:
         """Advance one UXCost window; returns the params for the next window."""
@@ -136,6 +148,12 @@ class DreamScheduler(SchedulerBase):
             self.name = "MapScore-fixed"
 
     # ----------------------------------------------------------- adaptivity
+    def retrigger_probe(self) -> None:
+        """Re-arm the (alpha, beta) search after an external workload shift
+        (fleet routers call this on the nodes a migration touched)."""
+        if self.adapt is not None:
+            self.adapt.retrigger()
+
     def on_window(self, sim: Simulator, stats: WindowStats, uxc: float) -> None:
         if self.adapt is None:
             return

@@ -247,6 +247,7 @@ class Simulator:
         #: time (0 at stream start), so a mid-run join at t anchors its
         #: process — including any internal MMPP/diurnal clock — at t
         self._arrival_origin = [0.0] * len(self.specs)
+        self._started = False
 
     @staticmethod
     def _materialize_arrival(arrival):
@@ -362,6 +363,18 @@ class Simulator:
         if name in self.models:
             raise ValueError(f"join: model {name!r} already in the scenario "
                              "(leave has no rejoin; use a fresh name)")
+        # joins arrive from phase scripts and hand-editable replay traces,
+        # which bypass ScenarioBuilder.validate — re-check the hazards here
+        # (a non-positive period would schedule arrivals backwards and keep
+        # the event loop below duration_s forever)
+        if not (np.isfinite(spec.fps) and spec.fps > 0):
+            raise ValueError(f"join: fps must be positive, got {spec.fps}")
+        if not 0.0 <= spec.trigger_prob <= 1.0:
+            raise ValueError(f"join: trigger_prob {spec.trigger_prob} "
+                             "outside [0, 1]")
+        if spec.depends_on is not None and spec.depends_on not in self.models:
+            raise ValueError(f"join: {name!r} depends on {spec.depends_on!r},"
+                             " which is not in the scenario")
         self.models[name] = spec.model
         self.tables.update(build_tables({name: spec.model}, self.accs_spec))
         self.graphs[name] = spec.model
@@ -377,6 +390,18 @@ class Simulator:
         self._arrival_origin.append(t)
         if spec.depends_on is None:
             self._schedule_stream_arrival(idx, after_t=None)
+
+    # --------------------------------------------- external-driver surface
+    def join_model(self, spec: ModelSpec, t: float) -> None:
+        """Add a pipeline stage at time ``t`` (fleet routers place streams
+        through this; equivalent to a ``join`` phase action)."""
+        self._join_spec(spec, t)
+
+    def leave_model(self, name: str, t: float) -> None:
+        """Stop a model's arrivals and cascade triggers at time ``t``.
+        Already-created jobs still execute and count toward stats."""
+        del t  # takes effect immediately; kept for call-site symmetry
+        self.active[self._index_of(name)] = False
 
     # --------------------------------------------------------------- jobs
     def _create_job(self, model_idx: int, t: float) -> Job:
@@ -538,37 +563,77 @@ class Simulator:
                 return
             self._dispatch(d, t)
 
-    def run(self) -> SimResult:
+    def start(self, at_t: float = 0.0) -> None:
+        """Arm the engine: queue initial head arrivals, phase events, and the
+        first UXCost window.  ``run()`` calls this; external drivers (the
+        fleet clock in ``repro.cluster``) call it directly — a node joining a
+        running fleet at time t passes ``at_t=t`` so its window clock starts
+        there. (Head arrivals of a pre-populated scenario always anchor at
+        stream-local 0; fleet nodes start empty and gain streams via
+        ``join_model``, which anchors at the join time.)"""
+        if self._started:
+            raise RuntimeError("Simulator.start() called twice")
+        self._started = True
         self._schedule_head_arrivals()
         self._push_phase_events()
-        self._push(self.window_s, WINDOW, None)
-        while self.events:
-            t, _, kind, arg = heapq.heappop(self.events)
-            if t > self.duration_s:
-                break
-            self.t = t
-            if kind == ARRIVAL:
-                idx = int(arg)  # type: ignore[arg-type]
-                if self.active[idx]:
-                    self._create_job(idx, t)
-                    if self.recorder is not None:
-                        self.recorder.arrival(t, self.specs[idx].model.name)
-                    self._schedule_stream_arrival(idx, after_t=t)
-                # an inactive (left) stream dies at its pending arrival
-            elif kind == PHASE:
-                self._apply_phase(arg, t)
-            elif kind == DONE:
-                self._complete(int(arg), t)  # type: ignore[arg-type]
-            elif kind == WINDOW:
-                uxc = uxcost(self.window_stats)
-                a, b = self._current_params()
-                self.windows.append((t, uxc, a, b))
-                self.scheduler.on_window(self, self.window_stats, uxc)
-                self.global_stats.merge(self.window_stats)
-                self.window_stats = WindowStats()
-                self._push(t + self.window_s, WINDOW, None)
-            self._drain_schedule(t)
+        self._push(at_t + self.window_s, WINDOW, None)
+
+    def peek_t(self) -> Optional[float]:
+        """Time of the next queued event (None when exhausted).  WINDOW
+        events self-perpetuate, so bound any polling loop by duration_s."""
+        return self.events[0][0] if self.events else None
+
+    def step(self) -> bool:
+        """Process the single next event if it lies within duration_s.
+        Returns False (and leaves the event queued) once the horizon is
+        reached — the point at which ``finalize()`` may be called."""
+        if not self.events or self.events[0][0] > self.duration_s:
+            return False
+        t, _, kind, arg = heapq.heappop(self.events)
+        self.t = t
+        self._process_event(t, kind, arg)
+        self._drain_schedule(t)
+        return True
+
+    def step_until(self, t_limit: float) -> None:
+        """Process every event with time <= min(t_limit, duration_s).  The
+        fleet clock interleaves nodes by advancing each to the next fleet
+        event time before applying it."""
+        lim = min(t_limit, self.duration_s)
+        while self.events and self.events[0][0] <= lim:
+            self.step()
+
+    def _process_event(self, t: float, kind: int, arg: object) -> None:
+        if kind == ARRIVAL:
+            idx = int(arg)  # type: ignore[arg-type]
+            if self.active[idx]:
+                self._create_job(idx, t)
+                if self.recorder is not None:
+                    self.recorder.arrival(t, self.specs[idx].model.name)
+                self._schedule_stream_arrival(idx, after_t=t)
+            # an inactive (left) stream dies at its pending arrival
+        elif kind == PHASE:
+            self._apply_phase(arg, t)
+        elif kind == DONE:
+            self._complete(int(arg), t)  # type: ignore[arg-type]
+        elif kind == WINDOW:
+            uxc = uxcost(self.window_stats)
+            a, b = self._current_params()
+            self.windows.append((t, uxc, a, b))
+            self.scheduler.on_window(self, self.window_stats, uxc)
+            self.global_stats.merge(self.window_stats)
+            self.window_stats = WindowStats()
+            self._push(t + self.window_s, WINDOW, None)
+
+    def run(self) -> SimResult:
+        self.start()
+        while self.step():
+            pass
+        return self.finalize()
+
+    def finalize(self) -> SimResult:
         self.global_stats.merge(self.window_stats)
+        self.window_stats = WindowStats()  # idempotent wrt. a second call
         if self.recorder is not None:
             self.trace = self.recorder.trace()
         util = [a.busy_time / max(self.t, 1e-9) for a in self.accs]

@@ -71,7 +71,11 @@ def dumps(trace: Trace) -> str:
     return "\n".join(lines) + "\n"
 
 
-def loads(text: str) -> Trace:
+def loads(text: str, *, event_kinds: tuple[str, ...] = ("arrival", "phase"),
+          version: int = TRACE_VERSION) -> Trace:
+    """Parse a JSONL trace.  ``event_kinds`` is the set of accepted event
+    types — the default is the simulator trace; layered formats (the fleet
+    trace of ``repro.cluster``) pass their own kinds and version."""
     meta: dict = {}
     events: list[dict] = []
     for lineno, line in enumerate(text.splitlines(), 1):
@@ -82,11 +86,11 @@ def loads(text: str) -> Trace:
         kind = obj.pop("type", None)
         if kind == "meta":
             meta = obj
-        elif kind in ("arrival", "phase"):
+        elif kind in event_kinds:
             events.append({"type": kind, **obj})
         else:
             raise ValueError(f"trace line {lineno}: unknown type {kind!r}")
-    if meta.get("version", TRACE_VERSION) != TRACE_VERSION:
+    if meta.get("version", version) != version:
         raise ValueError(f"unsupported trace version {meta.get('version')}")
     return Trace(meta=meta, events=events)
 

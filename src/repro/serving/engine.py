@@ -91,9 +91,13 @@ class RequestQueue:
         proc = None
         next_t = 0.0
         if arrival is not None and depends_on is None:
+            import copy
             from repro.scenarios.arrivals import arrival_from_config
+            # shallow-copy: processes carry per-stream state (MMPP clocks),
+            # so streams must never share one instance (same contract as
+            # Simulator._materialize_arrival)
             proc = (arrival_from_config(arrival) if isinstance(arrival, dict)
-                    else arrival)
+                    else copy.copy(arrival))
             idx = len(self.streams)
             next_t = proc.start(idx, 1.0 / fps, rng)
         self.streams[model] = dict(

@@ -307,3 +307,23 @@ def test_fuzzed_scenario_simulates():
     r = run_sim(b.build(), SYSTEM, dream_full, duration_s=1.5, seed=0,
                 phase_script=fuzz_phase_script(5, b, 1.5))
     assert r.frames > 0 and r.uxcost >= 0.0
+
+
+def test_join_action_validates_spec():
+    """Joins arrive via phase scripts / hand-edited traces and bypass the
+    builder — the simulator must re-check the hazards itself."""
+    def run_with(entry):
+        sim = Simulator(build_scenario("AR_Call", 0.5), SYSTEM,
+                        DreamScheduler(adaptivity=False), duration_s=0.6,
+                        seed=0,
+                        phase_script=PhaseScript([(0.2, join(entry))]))
+        return sim.run()
+
+    with pytest.raises(ValueError):          # would loop forever otherwise
+        run_with(ModelEntry(ref=ModelRef("kws_res8", name="bad"), fps=-15))
+    with pytest.raises(ValueError):
+        run_with(ModelEntry(ref=ModelRef("kws_res8", name="bad"), fps=15,
+                            depends_on="no_such_model"))
+    with pytest.raises(ValueError):
+        run_with(ModelEntry(ref=ModelRef("kws_res8", name="bad"), fps=15,
+                            trigger_prob=1.5))

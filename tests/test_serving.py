@@ -109,3 +109,16 @@ def test_trace_replay_queue_feeds_recorded_arrivals():
     assert q.poll(1.0) == []                      # queue drains exactly once
     # dependents stay live (cascade-triggered, not replayed)
     assert len(q.trigger_dependents("kws_res8", now=0.5)) == 1
+
+
+def test_request_queue_copies_arrival_instances():
+    """Stateful arrival processes must never be shared between streams
+    (same contract as Simulator._materialize_arrival)."""
+    from repro.scenarios.arrivals import BurstyOnOff
+    from repro.serving.engine import RequestQueue
+    shared = BurstyOnOff(on_s=0.3, off_s=0.3, burst_factor=2.0)
+    q = RequestQueue(clock=lambda: 0.0)
+    q.add_stream("a", fps=10, batch=1, seq=8, vocab=16, arrival=shared)
+    q.add_stream("b", fps=10, batch=1, seq=8, vocab=16, arrival=shared)
+    assert q.streams["a"]["arrival"] is not q.streams["b"]["arrival"]
+    assert q.streams["a"]["arrival"] is not shared

@@ -104,3 +104,30 @@ def test_lower_train_step_on_real_device_mesh(arch):
     with mesh:
         new_state, metrics = jax.jit(step)(state, batch)
     assert np.isfinite(float(metrics["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh factorization on degraded device counts
+# ---------------------------------------------------------------------------
+
+from repro.distributed.elastic import best_mesh_shape
+
+
+@pytest.mark.parametrize("n,mp,expect", [
+    (8, 4, (2, 4)),      # healthy pod: model axis kept intact
+    (6, 4, (3, 2)),      # degraded: 4 does not divide 6, halve to 2
+    (7, 4, (7, 1)),      # prime survivor count: model axis collapses
+    (12, 8, (3, 4)),     # 8 -> 4 is the largest halving that divides
+    (5, 2, (5, 1)),      # odd survivor count under mp=2
+    (1, 8, (1, 1)),      # single device left
+    (96, 16, (6, 16)),   # non-power-of-two total, mp intact
+    (9, 3, (3, 3)),      # non-power-of-two axis that still divides
+    (10, 3, (10, 1)),    # halving from 3 jumps straight to 1 (3//2 == 1)
+])
+def test_best_mesh_shape_degraded_counts(n, mp, expect):
+    """Join/leave leaves arbitrary device counts; the re-mesh must keep the
+    model axis when it divides and shrink it minimally when it does not."""
+    dp, m = best_mesh_shape(n, mp)
+    assert (dp, m) == expect
+    assert dp * m <= n                       # never oversubscribes
+    assert mp % m == 0                       # weights re-tile by halvings
