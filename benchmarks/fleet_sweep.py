@@ -1,4 +1,4 @@
-"""Fleet sweep: multi-node DREAM behind the global router, policy shootout.
+"""Fleet policy shootout + cascade stage-split sweep over multi-node DREAM.
 
 Exercises the cluster subsystem at production shape: a ≥16-node fleet of
 mixed 4K/8K Table-2 systems serving ≥200 fuzzer-sampled streams, with
@@ -8,13 +8,23 @@ round-robin, least-loaded, and the score-driven DREAM-Fleet router — and
 the score-driven run is recorded and replayed as a determinism self-check
 (the replayed fleet UXCost must equal the live one exactly).
 
+The cascade section then runs a cascade-heavy population (every stream a
+2-3 stage pipeline) on a dataflow-polarized fleet twice under the same
+transfer model: whole-pipeline placement vs stage-split routing
+(``split_stages=True``), where each stage lands on the node whose WS/OS
+mix suits it and cross-node triggers pay explicit activation-transfer
+latency + energy.
+
 The headline claims, asserted by ``main()`` and the CI gate:
   * score-driven routing achieves lower fleet UXCost than round-robin;
-  * the recorded fleet trace replays bit-exactly.
+  * stage-split routing achieves no worse fleet UXCost than whole-pipeline
+    placement under the same (migration-inclusive) transfer model;
+  * both recorded fleet traces replay bit-exactly.
 """
 from __future__ import annotations
 
-from repro.cluster import FleetScenario, FleetScenarioBuilder, FleetSimulator
+from repro.cluster import (FleetScenario, FleetScenarioBuilder,
+                           FleetSimulator, TransferModel)
 from repro.cluster import trace as ftrace
 
 from .common import save_artifact
@@ -45,6 +55,101 @@ def build_fleet(seed: int, n_nodes: int, n_streams: int,
     b.fuzz_streams(n_streams, seed=seed, t0=0.0,
                    t1=round(0.5 * duration_s, 6), fps_scale=FPS_SCALE)
     return b.build()
+
+
+#: cascade fleet: mixed-capacity, mixed-dataflow node pool.  The cascade
+#: population is *heavy* (full fuzzer FPS targets): a 2-3 stage pipeline
+#:  approaches a whole node's capacity, so whole-pipeline placement is
+#: lumpy bin-packing with big items while stage-split placement packs at
+#: stage granularity — the load-shape gap the sweep measures
+CASCADE_SYSTEMS = ("4K_2WS", "8K_2OS", "4K_2OS", "8K_2WS",
+                   "8K_2WS", "4K_2OS", "8K_2OS", "4K_2WS")
+#: cascade streams keep full FPS (heavy pipelines) — contrast FPS_SCALE
+CASCADE_FPS_SCALE = 1.0
+
+
+def build_cascade_fleet(seed: int, n_nodes: int, n_streams: int,
+                        duration_s: float, churn: bool = True) -> FleetScenario:
+    b = FleetScenarioBuilder(f"cascade_sweep_{seed}")
+    nids = [b.node(CASCADE_SYSTEMS[i % len(CASCADE_SYSTEMS)])
+            for i in range(n_nodes)]
+    if churn:
+        b.node_drain(nids[0], at=round(0.5 * duration_s, 6))
+    # deterministic arrivals pin the offered workload so the whole-vs-split
+    # comparison (and the counter-based cascade draws) see identical load
+    # regardless of placement
+    b.fuzz_streams(n_streams, seed=seed, t0=0.0,
+                   t1=round(0.5 * duration_s, 6),
+                   fps_scale=CASCADE_FPS_SCALE,
+                   cascade_prob=1.0, max_depth=3, cascades_only=True,
+                   deterministic_arrivals=True)
+    return b.build()
+
+
+def run_cascade(duration_s: float, seed: int, n_nodes: int,
+                n_streams: int, churn: bool = True,
+                n_seeds: int = 3) -> dict:
+    """Whole-pipeline vs stage-split placement on cascade-heavy fleets —
+    identical scenarios, score policy, transfer model and trigger
+    realizations per seed; only the placement granularity differs (the
+    ``score_whole`` control co-locates every stage on the whole-stream
+    choice).  Aggregated over ``n_seeds`` scenario seeds because online
+    greedy placement is high-variance at heavy per-stream load — per-seed
+    rows are reported so individual losses stay visible.  Every split run
+    is recorded and replayed as a determinism self-check."""
+    transfer = TransferModel()
+    rows = []
+    for s in range(seed, seed + n_seeds):
+        fscn = build_cascade_fleet(s, n_nodes, n_streams, duration_s,
+                                   churn=churn)
+        whole = FleetSimulator(fscn, "score_whole", duration_s=duration_s,
+                               seed=s, transfer=transfer,
+                               split_stages=True).run()
+        fs = FleetSimulator(fscn, "score", duration_s=duration_s, seed=s,
+                            transfer=transfer, split_stages=True,
+                            record=True)
+        split = fs.run()
+        replayed = FleetSimulator(
+            replay=ftrace.loads(ftrace.dumps(split.trace))).run()
+        rows.append({
+            "seed": s,
+            "whole": {"uxcost": whole.uxcost, "dlv_rate": whole.dlv_rate,
+                      "norm_energy": whole.norm_energy,
+                      "frames": whole.frames,
+                      "migrations": whole.migrations,
+                      "xfer_energy_j": whole.xfer_energy_j},
+            "split": {"uxcost": split.uxcost, "dlv_rate": split.dlv_rate,
+                      "norm_energy": split.norm_energy,
+                      "frames": split.frames,
+                      "migrations": split.migrations,
+                      "stage_migrations": split.stage_migrations,
+                      "trigger_transfers": split.trigger_transfers,
+                      "xfer_energy_j": split.xfer_energy_j},
+            "split_streams": sum(
+                1 for sid, sv in fs.streams.items()
+                if len({fs.stage_node[(sid, k)]
+                        for k in range(sv.n_stages)}) > 1),
+            "whole_over_split": whole.uxcost / max(split.uxcost, 1e-12),
+            "replay_exact": (replayed.uxcost == split.uxcost
+                             and replayed.frames == split.frames
+                             and replayed.xfer_energy_j
+                             == split.xfer_energy_j),
+        })
+    whole_total = sum(r["whole"]["uxcost"] for r in rows)
+    split_total = sum(r["split"]["uxcost"] for r in rows)
+    return {
+        "n_nodes": n_nodes, "n_streams": n_streams, "churn": churn,
+        "n_seeds": n_seeds, "transfer": transfer.to_config(),
+        "rows": rows,
+        "whole_uxcost_total": whole_total,
+        "split_uxcost_total": split_total,
+        "split_streams": sum(r["split_streams"] for r in rows),
+        "trigger_transfers": sum(r["split"]["trigger_transfers"]
+                                 for r in rows),
+        "whole_over_split": whole_total / max(split_total, 1e-12),
+        "split_beats_whole": split_total < whole_total,
+        "replay_exact": all(r["replay_exact"] for r in rows),
+    }
 
 
 def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
@@ -78,6 +183,10 @@ def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
                                     < rows["round_robin"]["uxcost"]),
         "replay_exact": (replayed.uxcost == rows["score"]["uxcost"]
                          and replayed.frames == rows["score"]["frames"]),
+        # floors keep the derived config in the regime stage-splitting is
+        # for: >=8 nodes (placement diversity) serving >=10 heavy cascades
+        "cascade": run_cascade(duration_s, seed, max(n_nodes // 2, 8),
+                               max(n_streams // 16, 10), churn=churn),
     }
     save_artifact("fleet_sweep", out)
     return out
@@ -95,10 +204,30 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
               f"frames={r['frames']:<6d} migr={r['migrations']}")
     print(f"  UXCost(round_robin)/UXCost(score) = {out['rr_over_score']:.3f}"
           f"   replay_exact={out['replay_exact']}")
+    c = out["cascade"]
+    print(f"cascade sweep: {c['n_nodes']} nodes x {c['n_seeds']} seeds, "
+          f"{c['n_streams']} heavy cascade streams each "
+          f"({c['split_streams']} split across nodes, "
+          f"{c['trigger_transfers']} cross-node triggers)")
+    for r in c["rows"]:
+        print(f"  seed {r['seed']}: whole={r['whole']['uxcost']:9.2f} "
+              f"(DLV={r['whole']['dlv_rate']:5.3f})  "
+              f"split={r['split']['uxcost']:9.2f} "
+              f"(DLV={r['split']['dlv_rate']:5.3f})  "
+              f"ratio={r['whole_over_split']:5.3f} "
+              f"replay={r['replay_exact']}")
+    print(f"  aggregate UXCost(whole)/UXCost(split) = "
+          f"{c['whole_over_split']:.3f}   replay_exact={c['replay_exact']}")
     if not out["score_beats_round_robin"]:
         raise SystemExit("score-driven routing did not beat round-robin")
     if not out["replay_exact"]:
         raise SystemExit("fleet trace replay mismatch — determinism broken")
+    if not c["split_beats_whole"]:
+        raise SystemExit("stage-split routing did not beat whole-pipeline "
+                         "placement on the cascade fleet")
+    if not c["replay_exact"]:
+        raise SystemExit("cascade fleet trace replay mismatch — "
+                         "determinism broken")
 
 
 if __name__ == "__main__":

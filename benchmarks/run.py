@@ -39,6 +39,21 @@ def _filter_kwargs(fn, **kw) -> dict:
     return {k: v for k, v in kw.items() if k in params and v is not None}
 
 
+def _describe(modname: str) -> str:
+    """One-line benchmark description: the first line of the module's
+    docstring, read via ``ast`` so --list stays instant (no benchmark
+    imports, no jax) and docs/tooling share one source of truth."""
+    import ast
+    import importlib.util
+    try:
+        spec = importlib.util.find_spec(modname)
+        with open(spec.origin) as f:
+            doc = ast.get_docstring(ast.parse(f.read()))
+        return doc.strip().splitlines()[0] if doc else "(no description)"
+    except Exception:  # noqa: BLE001 — --list must never crash
+        return "(no description)"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
@@ -55,6 +70,7 @@ def main() -> None:
     if args.list:
         for tag, modname in MODULES:
             print(f"{tag:>16s}  {modname}")
+            print(f"{'':>16s}  {_describe(modname)}")
         return
     tags = {t for t, _ in MODULES}
     unknown = set(args.only or ()) - tags

@@ -1,4 +1,5 @@
-"""Fleet serving demo: ServingEngine instances behind the global router.
+"""Fleet serving demo: concurrent ServingEngine instances behind the
+global router.
 
 The same router policies that drive the Level-1 fleet simulator
 (`repro.cluster.router`) place real-model request streams across multiple
@@ -9,11 +10,17 @@ adapter over each engine's *measured* latency table is enough: the same
 score formula runs on measured numbers here and on offline cost tables in
 the simulator.
 
+Execution is concurrent — one thread per node, as in a real fleet where
+nodes serve independently (placement stays sequential and deterministic;
+engines share read-only JAX handles and JAX releases the GIL during
+device execution; see docs/architecture.md "Concurrency model").
+
     PYTHONPATH=src python examples/serve_fleet.py --duration 4 \
         --policy score
 """
 import argparse
 import sys
+from concurrent.futures import ThreadPoolExecutor
 
 sys.path.insert(0, "src")
 
@@ -135,17 +142,31 @@ def main() -> None:
         print(f"[serve_fleet]   stream {i}: {model:>9s} @{fps:4.1f}fps "
               f"-> node {where}")
 
-    fleet_stats = WindowStats()
+    # drive every node's engine concurrently (one thread per node, like a
+    # real fleet): each thread owns exactly one engine + queue, so there is
+    # no shared mutable state between them; results are collected per node
+    # and merged in node order after the join, keeping output and fleet
+    # stats deterministic regardless of thread scheduling
+    active = [n for n in nodes if n.streams]
     for node in nodes:
-        if not node.streams:
+        if node not in active:
             print(f"[serve_fleet] node {node.name}: idle")
-            continue
-        report = node.engine.run(queues[node.node_id],
-                                 duration_s=args.duration)
-        print(f"[serve_fleet] node {node.name}: {report.summary()}")
+    with ThreadPoolExecutor(max_workers=max(len(active), 1)) as pool:
+        futures = {
+            node.node_id: pool.submit(node.engine.run,
+                                      queues[node.node_id],
+                                      duration_s=args.duration)
+            for node in active
+        }
+        reports = {nid: fut.result() for nid, fut in futures.items()}
+    fleet_stats = WindowStats()
+    for node in active:                       # node order: deterministic
+        print(f"[serve_fleet] node {node.name}: "
+              f"{reports[node.node_id].summary()}")
         fleet_stats.merge(node.engine.stats)
     print(f"[serve_fleet] fleet UXCost = {uxcost(fleet_stats):.4f} over "
-          f"{sum(st.frames for st in fleet_stats.per_model.values())} frames")
+          f"{sum(st.frames for st in fleet_stats.per_model.values())} frames "
+          f"({len(active)} nodes in parallel)")
 
 
 if __name__ == "__main__":

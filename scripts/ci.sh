@@ -45,3 +45,40 @@ print(f"ci: ok — {out['n_nodes']}-node fleet (+churn), "
       f"{out['n_streams']} streams, "
       f"UXCost(rr)/UXCost(score)={out['rr_over_score']:.3f}, replay exact")
 EOF
+
+echo "=== cascade stage-split smoke (8 nodes + drain) ==="
+python - "$ARTIFACTS/ci_cascade_split.json" <<'EOF'
+import json, sys
+from benchmarks.fleet_sweep import run_cascade
+# 8 nodes: stage-splitting needs node diversity — 4-node fleets leave too
+# few placement targets for heavy stages, and the comparison turns on luck
+out = run_cascade(duration_s=1.5, seed=0, n_nodes=8, n_streams=10)
+json.dump(out, open(sys.argv[1], "w"), indent=1)
+if not out["replay_exact"]:
+    sys.exit("stage-split fleet trace replay determinism broken")
+if out["split_uxcost_total"] > out["whole_uxcost_total"]:
+    sys.exit("stage-split routing exceeded whole-pipeline UXCost")
+print(f"ci: ok — cascade fleets ({out['n_seeds']} seeds), "
+      f"{out['split_streams']} streams split, "
+      f"{out['trigger_transfers']} cross-node triggers, "
+      f"UXCost(whole)/UXCost(split)={out['whole_over_split']:.3f}, "
+      "replays exact")
+EOF
+
+echo "=== docs cross-references ==="
+python scripts/check_docs.py docs
+
+echo "=== pydoc render check (public fleet/scenario APIs) ==="
+python - <<'EOF'
+import pydoc
+for mod in ("repro.cluster", "repro.cluster.fleet", "repro.cluster.router",
+            "repro.cluster.node", "repro.cluster.builder",
+            "repro.cluster.trace", "repro.scenarios",
+            "repro.scenarios.builder", "repro.scenarios.arrivals",
+            "repro.scenarios.phases", "repro.scenarios.trace",
+            "repro.scenarios.registry", "repro.scenarios.fuzzer",
+            "repro.core.costmodel"):
+    text = pydoc.plain(pydoc.render_doc(mod))  # raises on import failure
+    assert "NAME" in text and "DESCRIPTION" in text, mod
+print("pydoc: ok — all public modules render")
+EOF

@@ -5,11 +5,19 @@ under a fleet clock with pluggable routing policies, elastic membership
 (node join / drain / leave with stream migration and adaptivity-probe
 re-triggering), fleet-level UXCost aggregation, and a JSONL fleet trace
 whose replay reproduces an entire run bit-exactly.
+
+Placement is stream- or *stage*-granular: with ``split_stages=True`` and a
+:class:`repro.core.costmodel.TransferModel`, the router places each cascade
+stage independently, cross-node triggers pay explicit activation-transfer
+latency/energy, and migrations charge state-transfer cost into the fleet
+UXCost — see ``docs/architecture.md`` and ``docs/scheduling.md``.
 """
+from repro.core.costmodel import TransferModel
+
 from .builder import (FleetEvent, FleetScenario, FleetScenarioBuilder,
                       split_pipelines)
-from .fleet import (FleetResult, FleetSimulator, StreamView, node_seed,
-                    run_fleet)
+from .fleet import (FleetResult, FleetSimulator, StreamView,
+                    canonical_stream_model, node_seed, run_fleet)
 from .node import FleetNode, NodeTelemetry, StreamCost
 from .router import (POLICIES, LeastLoadedRouter, RoundRobinRouter,
                      RouterPolicy, ScoreDrivenRouter, make_policy)
@@ -17,8 +25,10 @@ from .trace import (FLEET_EVENT_KINDS, FLEET_TRACE_VERSION, FleetTrace,
                     FleetTraceRecorder, dumps, load_trace, loads, save_trace)
 
 __all__ = [
+    "TransferModel",
     "FleetEvent", "FleetScenario", "FleetScenarioBuilder", "split_pipelines",
-    "FleetResult", "FleetSimulator", "StreamView", "node_seed", "run_fleet",
+    "FleetResult", "FleetSimulator", "StreamView", "canonical_stream_model",
+    "node_seed", "run_fleet",
     "FleetNode", "NodeTelemetry", "StreamCost",
     "POLICIES", "LeastLoadedRouter", "RoundRobinRouter", "RouterPolicy",
     "ScoreDrivenRouter", "make_policy",

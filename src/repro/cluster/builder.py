@@ -5,10 +5,21 @@ joining/leaving/draining, streams arriving — exactly the external input a
 multi-node deployment sees.  The builder shards existing single-node
 workload definitions across the fleet: a registry scenario or a fuzzer
 sample splits into its independent pipelines (a head model plus its
-cascade children), each becoming one routable stream.
+cascade children), each becoming one routable stream whose stages the
+stage-split router may later place on different nodes.
 
-Everything is plain data (``to_config``/``from_config``), so fleet
-scenarios serialize and fleet traces can embed the streams they placed.
+Invariants:
+
+  * everything is plain data (``to_config``/``from_config``): fleet
+    scenarios serialize, and fleet traces can embed the streams they
+    placed;
+  * every stream starts with a head entry and names its models explicitly
+    (serializable ModelRefs) — the fleet's placement-generation
+    namespacing needs stable base names;
+  * ``build()`` enforces temporal consistency (no drain/leave before the
+    node's join) and sorts events by (time, declaration order);
+  * fuzzed populations are deterministic at build time — the resulting
+    FleetScenario needs no runtime randomness.
 """
 from __future__ import annotations
 
@@ -155,7 +166,9 @@ class FleetScenarioBuilder:
 
     def fuzz_streams(self, n_streams: int, seed: int, t0: float = 0.0,
                      t1: float = 1.0, max_pipelines: int = 1,
-                     fps_scale: float = 1.0) -> list[int]:
+                     fps_scale: float = 1.0, cascade_prob: float = 0.5,
+                     max_depth: int = 2, cascades_only: bool = False,
+                     deterministic_arrivals: bool = False) -> list[int]:
         """Seeded stream population: fuzzer-sampled pipelines with arrival
         times uniform over [t0, t1).  Deterministic at build time, so the
         resulting FleetScenario needs no runtime randomness.
@@ -163,19 +176,43 @@ class FleetScenarioBuilder:
         ``fps_scale`` rescales every stream's FPS targets: the fuzzer pools
         are sized for one pipeline per multi-accelerator node, while a fleet
         serves *many* light streams per node — ~0.25 puts a 12-streams-per-
-        node fleet near 50% offered utilization."""
+        node fleet near 50% offered utilization.
+
+        ``cascade_prob`` / ``max_depth`` thread to the fuzzer (cascade
+        sharding specs: 1.0 / 3 yields a cascade-heavy population whose
+        pipelines the stage-split router can shard across nodes);
+        ``cascades_only`` additionally drops single-stage pipelines, so
+        every admitted stream has at least one cross-placeable edge.
+
+        ``deterministic_arrivals`` replaces every sampled arrival process
+        with an explicitly-phased periodic one (phase hashed from the
+        stream id).  Stochastic arrival processes draw from a *per-node*
+        RNG in event order, so their realizations depend on which streams
+        share a node — pinning them makes the offered workload identical
+        across placement policies, which is what a fair routing comparison
+        (e.g. whole-pipeline vs stage-split) needs."""
+        if cascades_only and not cascade_prob > 0.0:
+            raise ScenarioError("cascades_only with cascade_prob=0 can "
+                                "never admit a stream")
         rng = np.random.default_rng([seed, 0xF1EE7])
         sids: list[int] = []
         k = 0
         while len(sids) < n_streams:
-            b = fuzz_scenario(seed * 100_003 + k, max_pipelines=max_pipelines)
+            b = fuzz_scenario(seed * 100_003 + k, max_pipelines=max_pipelines,
+                              cascade_prob=cascade_prob, max_depth=max_depth)
             k += 1
             for pipe in split_pipelines(b):
                 if len(sids) >= n_streams:
                     break
-                if fps_scale != 1.0:
-                    for cfg in pipe:
+                if cascades_only and len(pipe) < 2:
+                    continue
+                for cfg in pipe:
+                    if fps_scale != 1.0:
                         cfg["fps"] = float(cfg["fps"]) * fps_scale
+                    if deterministic_arrivals:
+                        phase = ((len(sids) * 7919) % 97) / 97.0
+                        cfg["arrival"] = {"kind": "periodic",
+                                          "phase_frac": round(phase, 6)}
                 t = round(float(rng.uniform(t0, t1)), 6)
                 sids.append(self.add_stream(pipe, at=t))
         return sids

@@ -1,10 +1,31 @@
 """FleetSimulator: N DREAM nodes behind a score-driven global router.
 
+This module owns the fleet clock and every placement-affecting code path:
+stream admission, stage-split placement, elastic membership, migration
+(and its transfer-cost accounting), rebalance ticks, trace record/replay,
+and the fleet-level UXCost merge.
+
 Composes per-node discrete-event Simulators (heterogeneous Table-2 systems
 per node) under one fleet clock, using the step/peek API: before each
 fleet-level event — a stream arriving, a node joining/leaving/draining, a
 rebalance tick — every live node is advanced to the event time, so the
 router always reads telemetry that is causally consistent across the fleet.
+
+Two placement granularities:
+
+  * **whole-stream** (default) — a stream (head + cascade children) lands
+    on one node; cascades trigger inside that node's simulator.  This is
+    the PR-2 behavior, preserved bit-exactly.
+  * **stage-split** (``split_stages=True`` + a ``TransferModel``) — the
+    router places each pipeline *stage* independently.  Cascade edges that
+    cross nodes become fleet-level triggers: the parent node exports the
+    completion, the fleet draws the trigger probability from a dedicated
+    RNG stream, charges the activation transfer (latency delays the child
+    and eats its deadline slack; energy lands in the fleet UXCost merge),
+    and injects the frame into the child's node.  Causal consistency is
+    kept by an *interleaved* advance: nodes step strictly in global event
+    order (ties broken by node id) so a trigger is always injected before
+    its target passes the injection time.
 
 Elastic membership is first-class:
 
@@ -14,22 +35,50 @@ Elastic membership is first-class:
     queue but accepts no new placements.
   * ``node_leave`` — abrupt: streams migrate, jobs in flight are lost.
 
+Under a ``TransferModel``, every migration (drain/leave/rebalance) charges
+the moved model state exactly once: the re-placement is delayed by the
+state-transfer latency and the link energy is added to the moved model's
+fleet UXCost entry.  With ``bandwidth_bytes_s == 0`` there is no usable
+inter-node link: stage placement degenerates to whole-pipeline co-location
+and migrations fall back to reloading weights from node-local storage
+(energy charged, no wire delay).
+
 Every placement-affecting event re-triggers the (alpha, beta) adaptivity
 probe on the touched nodes (``DreamScheduler.retrigger_probe``), mirroring
 the paper's workload-change response.
 
 With ``record=True`` the run emits a :class:`~.trace.FleetTrace` capturing
-inputs *and* routing decisions; constructing a FleetSimulator from that
-trace (``replay=...``) bypasses the router and reproduces the run
-bit-exactly — same per-node jobs, same fleet UXCost.
+inputs *and* routing decisions (stage-level when splitting); constructing
+a FleetSimulator from that trace (``replay=...``) bypasses the router and
+reproduces the run bit-exactly — cross-node triggers are re-derived from
+the recorded placements via the deterministic interleaved clock and the
+dedicated trigger RNG, so they need no trace records of their own.
+
+Invariants:
+
+  * placement-generation namespacing — a (stream, stage) re-placed after a
+    migration gets a fresh ``g<N>`` name prefix, so it can never collide
+    with an earlier residency on the same node; UXCost merging collapses
+    the generations back to one logical model per stream.
+  * stage-split cascade draws are *counter-based*: the n-th completion of
+    a cascade edge draws from a generator keyed by (fleet seed, stream,
+    edge, n), so trigger realizations are a property of the workload, not
+    of placement or interleave order — different placements of one
+    scenario face identical cascades, and whole-stream runs (which draw
+    triggers inside their node simulators, as in PR 2) are untouched.
 """
 from __future__ import annotations
 
 import copy
+import heapq
 import re
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+import numpy as np
+
+from repro.core.costmodel import (TransferModel, activation_bytes,
+                                  model_state_bytes)
 from repro.core.scheduler import dream_full
 from repro.core.simulator import SchedulerBase
 from repro.core.uxcost import (WindowStats, overall_dlv_rate,
@@ -38,8 +87,30 @@ from repro.scenarios.builder import ModelEntry
 
 from .builder import FleetScenario
 from .node import FleetNode, StreamCost
-from .router import RouterPolicy, ScoreDrivenRouter, make_policy
+from .router import (RouterPolicy, ScoreDrivenRouter, argmin_node,
+                     make_policy)
 from .trace import FleetTrace, FleetTraceRecorder
+
+#: domain-separation constant for stage-split cascade trigger draws
+_TRIGGER_STREAM = 0x7819
+_U64 = (1 << 64) - 1
+
+
+def _hash_u01(*keys: int) -> float:
+    """Deterministic uniform in [0, 1) from integer keys: a boost-style
+    hash combine followed by the splitmix64 finalizer.  Used for the
+    counter-based cascade trigger draws — constructing a numpy Generator
+    per draw would dominate the interleave hot path, and a keyed hash
+    gives the same placement-independence at a fraction of the cost."""
+    x = 0x9E3779B97F4A7C15
+    for k in keys:
+        x = (x ^ ((k & _U64) + 0x9E3779B97F4A7C15
+                  + ((x << 6) & _U64) + (x >> 2))) & _U64
+    x = (x + 0x9E3779B97F4A7C15) & _U64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _U64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _U64
+    x ^= x >> 31
+    return x / 2.0 ** 64
 
 
 def node_seed(fleet_seed: int, node_id: int) -> int:
@@ -47,24 +118,32 @@ def node_seed(fleet_seed: int, node_id: int) -> int:
     return fleet_seed + 7919 * (node_id + 1)
 
 
-#: placement-generation suffix in namespaced model names ("s12g2.det")
-_GEN_RE = re.compile(r"^(s\d+)g\d+\.")
+#: placement namespacing in model names: "s<sid>[t<stage>][g<gen>].<base>"
+_GEN_RE = re.compile(r"^(s\d+)(?:t\d+)?(?:g\d+)?\.")
 
 
 def canonical_stream_model(name: str) -> str:
-    """Collapse placement generations: a stream migrated across nodes is
-    one logical model in the fleet UXCost merge ("s12g2.det" -> "s12.det"),
-    so migrating does not split its DLV-floor / energy accounting."""
+    """Collapse placement generations and stage indices: a stream migrated
+    across nodes (or split into stages) is one logical model per base name
+    in the fleet UXCost merge ("s12g2.det" -> "s12.det", "s12t1g2.track"
+    -> "s12.track"), so moving or splitting does not fragment its
+    DLV-floor / energy accounting."""
     return _GEN_RE.sub(r"\1.", name)
 
 
 class StreamView:
-    """Router-facing view of one stream.
+    """Router-facing view of one stream (a pipeline of cascade stages).
 
     Holds the *original* (un-namespaced) pipeline entries so cost estimates
     share memoized tables across streams and placement generations; graphs
     materialize lazily, and per-node costs cache by system type (they
-    depend only on the node's accelerator mix, not its live state)."""
+    depend only on the node's accelerator mix, not its live state).
+
+    The stage surface (``stage_cost_on`` / ``stage_spec`` / ``parent_of`` /
+    ``children_of``) exposes each pipeline stage as an independently
+    placeable unit; ``stage_weight`` is the cumulative trigger probability
+    from the head, so offered-load estimates reflect each stage's true
+    arrival rate (head fps x product of trigger probabilities)."""
 
     def __init__(self, sid: int, entry_cfgs: list[dict]):
         self.sid = sid
@@ -72,11 +151,32 @@ class StreamView:
         self.entries = [ModelEntry.from_config(c) for c in entry_cfgs]
         self._graphs: Optional[list] = None
         self._cost_by_system: dict[object, StreamCost] = {}
+        self._stage_graphs: Optional[list] = None
+        self._stage_cost: dict[object, StreamCost] = {}
+        # cascade topology: parent index + children (index, trigger_prob)
+        name_to_idx = {e.model_name: i for i, e in enumerate(self.entries)}
+        self._parent: list[Optional[int]] = []
+        self._children: dict[int, list[tuple[int, float]]] = {}
+        self._weight: list[float] = []
+        for i, e in enumerate(self.entries):
+            if e.depends_on is None:
+                self._parent.append(None)
+                self._weight.append(1.0)
+            else:
+                p = name_to_idx[e.depends_on]
+                self._parent.append(p)
+                self._weight.append(self._weight[p] * e.trigger_prob)
+                self._children.setdefault(p, []).append((i, e.trigger_prob))
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.entries)
 
     @property
     def head_period_s(self) -> float:
         return 1.0 / self.entries[0].fps
 
+    # ------------------------------------------------------ whole-stream
     def _graph_loads(self) -> list:
         if self._graphs is None:
             self._graphs = [
@@ -95,9 +195,10 @@ class StreamView:
         return hit
 
     def namespaced_specs(self, gen: int) -> tuple[list, list[str]]:
-        """Materialize placement-generation-``gen`` ModelSpecs.  Names are
-        prefixed per (stream, generation) so re-placements never collide
-        with an earlier residency of the same stream on the same node."""
+        """Materialize placement-generation-``gen`` ModelSpecs for a whole-
+        stream placement.  Names are prefixed per (stream, generation) so
+        re-placements never collide with an earlier residency of the same
+        stream on the same node."""
         prefix = f"s{self.sid}." if gen == 0 else f"s{self.sid}g{gen}."
         specs, names = [], []
         for cfg in self.entry_cfgs:
@@ -109,6 +210,68 @@ class StreamView:
             specs.append(ModelEntry.from_config(c).to_spec())
             names.append(prefix + base)
         return specs, names
+
+    # ------------------------------------------------------- stage surface
+    def parent_of(self, k: int) -> Optional[int]:
+        """Index of stage ``k``'s cascade parent (None for heads)."""
+        return self._parent[k]
+
+    def children_of(self, k: int) -> list[tuple[int, float]]:
+        """(stage index, trigger probability) of stage ``k``'s dependents."""
+        return self._children.get(k, [])
+
+    def stage_base(self, k: int) -> str:
+        return self.entries[k].model_name
+
+    def stage_weight(self, k: int) -> float:
+        """Cumulative trigger probability from the head (1.0 for heads)."""
+        return self._weight[k]
+
+    def stage_period_s(self, k: int) -> float:
+        return 1.0 / self.entries[k].fps
+
+    def stage_graph(self, k: int):
+        if self._stage_graphs is None:
+            self._stage_graphs = [e.ref.build() for e in self.entries]
+        return self._stage_graphs[k]
+
+    def act_bytes_into(self, k: int) -> float:
+        """Bytes a cross-node trigger into stage ``k`` ships (the parent's
+        final activation); 0.0 for heads."""
+        p = self._parent[k]
+        return 0.0 if p is None else activation_bytes(self.stage_graph(p))
+
+    def state_bytes(self, k: int) -> float:
+        """Bytes a migration of stage ``k`` ships (its weight state)."""
+        return model_state_bytes(self.stage_graph(k))
+
+    def stage_cost_on(self, node: FleetNode, k: int) -> StreamCost:
+        sys_key = (node.system if node.system != "custom"
+                   else ("node", node.node_id))
+        key = (sys_key, k)
+        hit = self._stage_cost.get(key)
+        if hit is None:
+            rate = self.entries[0].fps * self.stage_weight(k)
+            hit = node.stream_cost([(self.stage_graph(k), rate, 1.0)],
+                                   self.stage_period_s(k))
+            self._stage_cost[key] = hit
+        return hit
+
+    def stage_spec(self, k: int, gen: int):
+        """Materialize stage ``k`` at placement generation ``gen`` as a
+        standalone ModelSpec.  Non-head stages lose their local cascade
+        dependency and get a ``triggered`` arrival process: their frames
+        come only from fleet-forwarded triggers (same-node edges included,
+        so a stream's dynamics do not change when a stage migrates)."""
+        prefix = (f"s{self.sid}t{k}." if gen == 0
+                  else f"s{self.sid}t{k}g{gen}.")
+        c = copy.deepcopy(self.entry_cfgs[k])
+        base = c["model"]["name"]
+        c["model"]["name"] = prefix + base
+        if c.get("depends_on") is not None:
+            c["depends_on"] = None
+            c["arrival"] = {"kind": "triggered"}
+        return ModelEntry.from_config(c).to_spec(), prefix + base
 
 
 @dataclass
@@ -128,6 +291,10 @@ class FleetResult:
     probe_retriggers: int
     per_node: list[dict]
     trace: Optional[FleetTrace] = None
+    split: bool = False          # stage-split placement was enabled
+    stage_migrations: int = 0    # migrations that moved a single stage
+    trigger_transfers: int = 0   # cascade triggers that crossed nodes
+    xfer_energy_j: float = 0.0   # total transfer energy charged to UXCost
 
     def summary(self) -> str:
         return (f"fleet[{self.policy:>11s}] nodes={self.n_nodes:<3d} "
@@ -152,6 +319,8 @@ class FleetSimulator:
         replay: Optional[FleetTrace] = None,
         rebalance_every_s: Optional[float] = None,
         rebalance_hysteresis: float = 0.15,
+        transfer: Optional[TransferModel] = None,
+        split_stages: bool = False,
     ):
         if (scenario is None) == (replay is None):
             raise ValueError("pass exactly one of scenario or replay")
@@ -164,12 +333,20 @@ class FleetSimulator:
             seed = int(meta["seed"])
             window_s = float(meta["window_s"])
             rebalance_every_s = None    # decisions come from the trace
+            transfer = (TransferModel.from_config(meta["transfer"])
+                        if "transfer" in meta else None)
+            split_stages = bool(meta.get("split", False))
             self._events = [(e["t"], e["type"], e) for e in replay.events]
         else:
             self.name = scenario.name
             self.policy = make_policy(policy)
             self._events = [(e.t, e.kind, dict(e.payload, t=e.t))
                             for e in scenario.events]
+        if split_stages and transfer is None:
+            raise ValueError("split_stages requires a TransferModel: "
+                             "stage placement is priced by transfer cost")
+        self.transfer = transfer
+        self.split = bool(split_stages)
         self.duration_s = duration_s
         self.seed = seed
         self.window_s = window_s
@@ -193,29 +370,154 @@ class FleetSimulator:
         self.streams: dict[int, StreamView] = {}
         self.stream_node: dict[int, int] = {}   # sid -> hosting node id
         self.gen: dict[int, int] = {}           # sid -> placement generation
+        # stage-split bookkeeping, keyed by (sid, stage)
+        self.stage_node: dict[tuple[int, int], int] = {}
+        self.stage_gen: dict[tuple[int, int], int] = {}
+        self.stage_name: dict[tuple[int, int], str] = {}
+        #: when each stage's state is resident on its current node — a
+        #: migrated stage cannot serve triggers while its weights are
+        #: still on the wire
+        self.stage_ready: dict[tuple[int, int], float] = {}
+        #: namespaced name -> (sid, stage); grows only — in-flight jobs of a
+        #: migrated-away residency still resolve their logical stage
+        self._name_stage: dict[str, tuple[int, int]] = {}
+        #: canonical model name -> transfer energy charged (J)
+        self.xfer_energy: dict[str, float] = {}
+        #: per-edge completion counters for counter-based trigger draws
+        self._trigger_counts: dict[tuple[int, int], int] = {}
         self.migrations = 0
+        self.stage_migrations = 0
+        self.trigger_transfers = 0
         self.recorder = None
         self.trace: Optional[FleetTrace] = None
         if record:
             if replay is not None:
                 raise ValueError("record and replay are mutually exclusive")
-            self.recorder = FleetTraceRecorder({
+            meta = {
                 "scenario": self.name, "policy": self.policy.name,
                 "scheduler": self._scheduler_name,
                 "seed": seed, "duration_s": duration_s,
                 "window_s": window_s,
-            })
+            }
+            if self.transfer is not None:
+                meta["transfer"] = self.transfer.to_config()
+            if self.split:
+                meta["split"] = True
+            self.recorder = FleetTraceRecorder(meta)
 
     # ---------------------------------------------------------- plumbing
     def _advance_all(self, t: float) -> None:
+        """Advance every live node to fleet time ``t``.  Whole-stream mode
+        advances node by node (cascades are node-local, so cross-node order
+        is irrelevant — and this is the bit-exact PR-2 path).  Stage-split
+        mode interleaves nodes in global event order so cross-node triggers
+        inject causally."""
+        if self.split:
+            self._interleave_to(t)
         for nid in sorted(self.nodes):
             self.nodes[nid].advance_to(t)
+
+    def _node_lim(self, node: FleetNode, t: float) -> float:
+        return min(t, node.sim.duration_s)
+
+    def _interleave_to(self, t: float) -> None:
+        """Step all live nodes' simulators in global event-time order
+        (ties: lowest node id first), draining exported cascade completions
+        after every step and injecting the resulting triggers — possibly
+        into other nodes, whose heap entries are refreshed lazily."""
+        heap: list[tuple[float, int]] = []
+        for nid in sorted(self.nodes):
+            node = self.nodes[nid]
+            if not node.alive:
+                continue
+            pt = node.sim.peek_t()
+            if pt is not None and pt <= self._node_lim(node, t):
+                heapq.heappush(heap, (pt, nid))
+        while heap:
+            pt, nid = heapq.heappop(heap)
+            node = self.nodes[nid]
+            if not node.alive:
+                continue
+            cur = node.sim.peek_t()
+            if cur is None or cur > self._node_lim(node, t):
+                continue            # stale entry; node has nothing due
+            if cur != pt:
+                heapq.heappush(heap, (cur, nid))
+                continue            # refresh stale entry, keep ordering
+            node.sim.step()
+            for t_inj, dst in self._drain_triggers(node):
+                dnode = self.nodes[dst]
+                if (dst != nid and dnode.alive
+                        and t_inj <= self._node_lim(dnode, t)):
+                    heapq.heappush(heap, (t_inj, dst))
+            nxt = node.sim.peek_t()
+            if nxt is not None and nxt <= self._node_lim(node, t):
+                heapq.heappush(heap, (nxt, nid))
+
+    def _drain_triggers(self, node: FleetNode) -> list[tuple[float, int]]:
+        """Forward the node's exported cascade completions to the current
+        hosts of their dependent stages.  Cross-node edges pay the
+        activation transfer: the child frame arrives ``transfer_s`` later
+        (deadline still anchored at the parent's completion, so the wire
+        eats real slack) and the link energy is charged to the child's
+        fleet UXCost entry.  Returns (injection time, node id) pairs for
+        the interleave heap."""
+        if not node.sim.pending_completions:
+            return []
+        pend = node.sim.pending_completions
+        node.sim.pending_completions = []
+        pushes: list[tuple[float, int]] = []
+        for name, tc in pend:
+            key = self._name_stage.get(name)
+            if key is None:
+                continue
+            sid, k = key
+            sv = self.streams[sid]
+            for ck, prob in sv.children_of(k):
+                if not self._trigger_fires(sid, ck, prob):
+                    continue
+                dst = self.stage_node.get((sid, ck))
+                if dst is None or not self.nodes[dst].alive:
+                    continue
+                t_inj = tc
+                if dst != node.node_id:
+                    nbytes = sv.act_bytes_into(ck)
+                    t_inj = tc + self.transfer.transfer_s(nbytes)
+                    self._charge(f"s{sid}." + sv.stage_base(ck),
+                                 self.transfer.transfer_j(nbytes))
+                    self.trigger_transfers += 1
+                # a freshly-migrated child serves nothing until its weight
+                # state lands; early triggers queue until residency (the
+                # deadline anchor stays at the parent completion, so the
+                # wait eats real slack)
+                t_inj = max(t_inj, self.stage_ready.get((sid, ck), t_inj))
+                self.nodes[dst].sim.inject_arrival(
+                    self.stage_name[(sid, ck)], t_inj, deadline_anchor=tc)
+                pushes.append((t_inj, dst))
+        return pushes
+
+    def _trigger_fires(self, sid: int, ck: int, prob: float) -> bool:
+        """Counter-based Bernoulli draw for cascade edge (sid -> stage ck):
+        the n-th parent completion of an edge draws a keyed hash of
+        (fleet seed, stream, edge, n), so the realized trigger sequence
+        is a property of the *workload*, not of placement or event
+        interleaving — whole-pipeline and stage-split runs of one scenario
+        face identical cascade realizations, and replay needs no trace
+        records for triggers."""
+        n = self._trigger_counts.get((sid, ck), 0)
+        self._trigger_counts[(sid, ck)] = n + 1
+        return _hash_u01(self.seed, _TRIGGER_STREAM, sid, ck, n) < prob
+
+    def _charge(self, canonical: str, joules: float) -> None:
+        self.xfer_energy[canonical] = (self.xfer_energy.get(canonical, 0.0)
+                                       + joules)
 
     def _candidates(self, exclude: Optional[int] = None) -> list[FleetNode]:
         return [self.nodes[nid] for nid in sorted(self.nodes)
                 if self.nodes[nid].alive and not self.nodes[nid].draining
                 and nid != exclude]
 
+    # ------------------------------------------------ whole-stream placement
     def _place(self, sid: int, nid: int, t: float, gen: int) -> None:
         sv = self.streams[sid]
         specs, names = sv.namespaced_specs(gen)
@@ -224,10 +526,111 @@ class FleetSimulator:
         self.gen[sid] = gen
 
     def _migrate(self, sid: int, src: int, dst: int, t: float,
-                 gen: int) -> None:
+                 gen: int) -> tuple[Optional[float], Optional[float]]:
+        """Move a whole stream; returns the (latency, energy) charged, or
+        (None, None) when no transfer model is active."""
         self.nodes[src].evict(sid, t)
-        self._place(sid, dst, t, gen)
+        xfer_s = xfer_j = None
+        t_place = t
+        if self.transfer is not None:
+            sv = self.streams[sid]
+            total = sum(sv.state_bytes(k) for k in range(sv.n_stages))
+            xfer_s = (self.transfer.transfer_s(total)
+                      if self.transfer.enabled else 0.0)
+            xfer_j = self.transfer.transfer_j(total)
+            t_place = t + xfer_s
+            for k in range(sv.n_stages):
+                self._charge(f"s{sid}." + sv.stage_base(k),
+                             self.transfer.transfer_j(sv.state_bytes(k)))
+        self._place(sid, dst, t_place, gen)
         self.migrations += 1
+        return xfer_s, xfer_j
+
+    # ------------------------------------------------ stage-split placement
+    def _place_stage(self, sid: int, k: int, nid: int, t: float,
+                     gen: int) -> None:
+        sv = self.streams[sid]
+        spec, name = sv.stage_spec(k, gen)
+        node = self.nodes[nid]
+        w = (1.0 if sv.parent_of(k) is None
+             else sv.entries[k].trigger_prob)
+        node.place((sid, k), [spec], [name], t, weights=[w])
+        if sv.children_of(k):
+            # parent stages report completions so the fleet can forward
+            # cascade triggers (same-node edges included)
+            node.sim.export_completions.add(name)
+        self.stage_node[(sid, k)] = nid
+        self.stage_gen[(sid, k)] = gen
+        self.stage_name[(sid, k)] = name
+        self.stage_ready[(sid, k)] = t   # migrations pass t + transfer_s
+        self._name_stage[name] = (sid, k)
+
+    def _migrate_stage(self, sid: int, k: int, src: int, dst: int, t: float,
+                       gen: int) -> tuple[float, float]:
+        """Move one stage; returns the (latency, energy) charged.  The
+        re-placement is delayed by the state-transfer latency; with a
+        zero-bandwidth link the state reloads from node-local storage
+        instead (energy only, no wire delay)."""
+        self.nodes[src].evict((sid, k), t)
+        sv = self.streams[sid]
+        nbytes = sv.state_bytes(k)
+        xfer_s = (self.transfer.transfer_s(nbytes)
+                  if self.transfer.enabled else 0.0)
+        xfer_j = self.transfer.transfer_j(nbytes)
+        self._charge(f"s{sid}." + sv.stage_base(k), xfer_j)
+        self._place_stage(sid, k, dst, t + xfer_s, gen)
+        self.migrations += 1
+        self.stage_migrations += 1
+        return xfer_s, xfer_j
+
+    def _stage_score_full(self, sid: int, k: int, node: FleetNode,
+                          best_iso: float) -> float:
+        """Stage score including *all* cascade edges the placement would
+        cut: the parent edge (via the router) plus edges to already-placed
+        children — so a head cannot drift away from its children for free
+        during drains and rebalances.  Edges to stages on draining or dead
+        nodes are ignored: those stages must move regardless, and pricing
+        them (infinitely, under zero bandwidth) would otherwise make every
+        candidate look equally bad and collapse the argmin onto the lowest
+        node id."""
+        sv = self.streams[sid]
+        p = sv.parent_of(k)
+        parent_nid = self.stage_node.get((sid, p)) if p is not None else None
+        if parent_nid is not None:
+            pn = self.nodes[parent_nid]
+            if not pn.alive or pn.draining:
+                parent_nid = None
+        s = self.policy.stage_score(sv, k, node, best_iso, parent_nid,
+                                    self.transfer)
+        for ck, _prob in sv.children_of(k):
+            cn = self.stage_node.get((sid, ck))
+            if cn is None or cn == node.node_id:
+                continue
+            cnode = self.nodes[cn]
+            if not cnode.alive or cnode.draining:
+                continue
+            s += self.policy.transfer_penalty(sv, ck, self.transfer)
+        return s
+
+    def _pick_stage_dst(self, sid: int, k: int,
+                        cands: list[FleetNode]) -> int:
+        """Destination for one migrating stage.  Non-splitting policies
+        keep streams co-located: a stage follows its (already re-placed)
+        parent, and heads re-run whole-stream placement — so the
+        ``score_whole`` control arm and round-robin/least-loaded fleets
+        never split a pipeline through churn.  Splitting policies re-score
+        the stage with all its cascade edges."""
+        sv = self.streams[sid]
+        if not getattr(self.policy, "splits_stages", False):
+            p = sv.parent_of(k)
+            if p is not None:
+                pn = self.stage_node.get((sid, p))
+                if pn is not None and any(n.node_id == pn for n in cands):
+                    return pn
+            return self.policy.place(sv, cands)
+        best_iso = min(sv.stage_cost_on(n, k).iso_s for n in cands)
+        return argmin_node(
+            cands, lambda n: self._stage_score_full(sid, k, n, best_iso))
 
     # ------------------------------------------------------ event handlers
     def _on_node_join(self, t: float, ev: dict) -> None:
@@ -259,16 +662,30 @@ class FleetSimulator:
             self._migrate_all_off(node, t)
 
     def _migrate_all_off(self, node: FleetNode, t: float) -> None:
-        for sid in sorted(node.placements):
+        for key in sorted(node.placements):
             cands = self._candidates(exclude=node.node_id)
             if not cands:
                 raise RuntimeError(
-                    f"no live nodes left to host stream {sid} at t={t}")
-            dst = self.policy.place(self.streams[sid], cands)
-            gen = self.gen[sid] + 1
-            self._migrate(sid, node.node_id, dst, t, gen)
-            if self.recorder is not None:
-                self.recorder.migrate(t, sid, node.node_id, dst, gen)
+                    f"no live nodes left to host {key} at t={t}")
+            if self.split:
+                sid, k = key
+                dst = self._pick_stage_dst(sid, k, cands)
+                gen = self.stage_gen[(sid, k)] + 1
+                xfer_s, xfer_j = self._migrate_stage(
+                    sid, k, node.node_id, dst, t, gen)
+                if self.recorder is not None:
+                    self.recorder.migrate(t, sid, node.node_id, dst, gen,
+                                          stage=k, xfer_s=xfer_s,
+                                          xfer_j=xfer_j)
+            else:
+                sid = key
+                dst = self.policy.place(self.streams[sid], cands)
+                gen = self.gen[sid] + 1
+                xfer_s, xfer_j = self._migrate(sid, node.node_id, dst, t,
+                                               gen)
+                if self.recorder is not None:
+                    self.recorder.migrate(t, sid, node.node_id, dst, gen,
+                                          xfer_s=xfer_s, xfer_j=xfer_j)
 
     def _on_stream(self, t: float, ev: dict) -> None:
         sid = int(ev["sid"])
@@ -276,29 +693,57 @@ class FleetSimulator:
         if self.recorder is not None:
             self.recorder.stream(t, sid, ev["entries"])
         if self.replay is not None:
-            return                       # a recorded `place` event follows
+            return                       # recorded `place` events follow
         cands = self._candidates()
         if not cands:
             raise RuntimeError(f"stream {sid} arrived with no live nodes")
-        nid = self.policy.place(self.streams[sid], cands)
-        self._place(sid, nid, t, gen=0)
-        if self.recorder is not None:
-            self.recorder.place(t, sid, nid, 0)
+        sv = self.streams[sid]
+        if self.split:
+            nids = self.policy.place_stages(sv, cands, self.transfer)
+            for k, nid in enumerate(nids):
+                self._place_stage(sid, k, nid, t, gen=0)
+                if self.recorder is not None:
+                    self.recorder.place(t, sid, nid, 0, stage=k)
+        else:
+            nid = self.policy.place(sv, cands)
+            self._place(sid, nid, t, gen=0)
+            if self.recorder is not None:
+                self.recorder.place(t, sid, nid, 0)
 
     def _on_place(self, t: float, ev: dict) -> None:       # replay only
-        self._place(int(ev["sid"]), int(ev["node"]), t, int(ev["gen"]))
+        if "stage" in ev:
+            self._place_stage(int(ev["sid"]), int(ev["stage"]),
+                              int(ev["node"]), t, int(ev["gen"]))
+        else:
+            self._place(int(ev["sid"]), int(ev["node"]), t, int(ev["gen"]))
 
     def _on_migrate(self, t: float, ev: dict) -> None:     # replay only
-        self._migrate(int(ev["sid"]), int(ev["from"]), int(ev["to"]), t,
-                      int(ev["gen"]))
+        if "stage" in ev:
+            self._migrate_stage(int(ev["sid"]), int(ev["stage"]),
+                                int(ev["from"]), int(ev["to"]), t,
+                                int(ev["gen"]))
+        else:
+            self._migrate(int(ev["sid"]), int(ev["from"]), int(ev["to"]), t,
+                          int(ev["gen"]))
 
     def _on_rebalance(self, t: float, ev: dict) -> None:   # live only
-        """Optional phase-boundary re-placement: move a stream when the
-        score-driven router now prefers another node by a clear margin."""
+        """Optional phase-boundary re-placement: move a stream (or, in
+        stage-split mode, a single stage) when the score-driven router now
+        prefers another node by a clear margin."""
         if not isinstance(self.policy, ScoreDrivenRouter):
             return
         cands = self._candidates()          # membership is fixed in-tick
         if len(cands) < 2:
+            return
+        if self.split:
+            # each policy rebalances at its own placement granularity:
+            # splitting policies move single stages, non-splitting ones
+            # move whole co-located streams — so control arms correct
+            # placement mistakes too, just never by splitting a pipeline
+            if getattr(self.policy, "splits_stages", False):
+                self._rebalance_stages(t, cands)
+            else:
+                self._rebalance_streams_whole(t, cands)
             return
         for sid in sorted(self.stream_node):
             cur = self.stream_node[sid]
@@ -313,9 +758,60 @@ class FleetSimulator:
             if (best != cur and cur_score is not None
                     and cur_score - scores[best] > self.rebalance_hysteresis):
                 gen = self.gen[sid] + 1
-                self._migrate(sid, cur, best, t, gen)
+                xfer_s, xfer_j = self._migrate(sid, cur, best, t, gen)
                 if self.recorder is not None:
-                    self.recorder.migrate(t, sid, cur, best, gen)
+                    self.recorder.migrate(t, sid, cur, best, gen,
+                                          xfer_s=xfer_s, xfer_j=xfer_j)
+
+    def _rebalance_streams_whole(self, t: float,
+                                 cands: list[FleetNode]) -> None:
+        """Stage-mode rebalance for non-splitting policies: score whole
+        streams and move every stage of a winner together (stages of such
+        streams are co-located by invariant, so one source node hosts
+        them all)."""
+        for sid in sorted(self.streams):
+            if (sid, 0) not in self.stage_node:
+                continue
+            cur = self.stage_node[(sid, 0)]
+            if not self.nodes[cur].alive or self.nodes[cur].draining:
+                continue
+            sv = self.streams[sid]
+            best_iso = min(sv.cost_on(n).iso_s for n in cands)
+            scores = {n.node_id: self.policy.score(sv, n, best_iso)
+                      for n in cands}
+            best = min(scores, key=lambda nid: (scores[nid], nid))
+            cur_score = scores.get(cur)
+            if (best == cur or cur_score is None
+                    or cur_score - scores[best] <= self.rebalance_hysteresis):
+                continue
+            for k in range(sv.n_stages):
+                gen = self.stage_gen[(sid, k)] + 1
+                xfer_s, xfer_j = self._migrate_stage(sid, k, cur, best, t,
+                                                     gen)
+                if self.recorder is not None:
+                    self.recorder.migrate(t, sid, cur, best, gen, stage=k,
+                                          xfer_s=xfer_s, xfer_j=xfer_j)
+
+    def _rebalance_stages(self, t: float, cands: list[FleetNode]) -> None:
+        for (sid, k) in sorted(self.stage_node):
+            cur = self.stage_node[(sid, k)]
+            if not self.nodes[cur].alive or self.nodes[cur].draining:
+                continue
+            sv = self.streams[sid]
+            best_iso = min(sv.stage_cost_on(n, k).iso_s for n in cands)
+            scores: dict[int, float] = {
+                n.node_id: self._stage_score_full(sid, k, n, best_iso)
+                for n in cands}
+            best = min(scores, key=lambda nid: (scores[nid], nid))
+            cur_score = scores.get(cur)
+            if (best != cur and cur_score is not None
+                    and cur_score - scores[best] > self.rebalance_hysteresis):
+                gen = self.stage_gen[(sid, k)] + 1
+                xfer_s, xfer_j = self._migrate_stage(sid, k, cur, best, t,
+                                                     gen)
+                if self.recorder is not None:
+                    self.recorder.migrate(t, sid, cur, best, gen, stage=k,
+                                          xfer_s=xfer_s, xfer_j=xfer_j)
 
     # ----------------------------------------------------------------- run
     def _event_stream(self) -> list[tuple[float, str, dict]]:
@@ -374,6 +870,25 @@ class FleetSimulator:
                 "utilization": util, "streams": len(node.placements),
                 "probe_retriggers": node.probe_retriggers,
             })
+        # transfer energy (cross-node triggers + migrations) joins the moved
+        # model's UXCost entry: NormEnergy rises, so moving state is never
+        # free — charged exactly once per transfer, at transfer time.  A
+        # model that completed zero frames has no worst-case normalizer
+        # (NormEnergy ratio would discard the charge), so its charges
+        # redirect to a same-stream entry that did complete frames; only a
+        # stream with no completed frames at all leaves its (reported, but
+        # unnormalizable) transfer energy out of the UXCost product
+        for name in sorted(self.xfer_energy):
+            st = fleet_stats.per_model.get(name)
+            target = name
+            if st is None or st.worst_energy_j <= 0.0:
+                prefix = name.split(".", 1)[0] + "."
+                cands = sorted(
+                    n for n, s2 in fleet_stats.per_model.items()
+                    if n.startswith(prefix) and s2.worst_energy_j > 0.0)
+                if cands:
+                    target = cands[0]
+            fleet_stats.model(target).energy_j += self.xfer_energy[name]
         if self.recorder is not None:
             self.trace = self.recorder.trace()
         return FleetResult(
@@ -392,6 +907,10 @@ class FleetSimulator:
             probe_retriggers=retriggers,
             per_node=per_node,
             trace=self.trace,
+            split=self.split,
+            stage_migrations=self.stage_migrations,
+            trigger_transfers=self.trigger_transfers,
+            xfer_energy_j=sum(self.xfer_energy.values()),
         )
 
 

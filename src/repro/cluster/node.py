@@ -10,6 +10,18 @@ a candidate stream's models suit this node's accelerator mix, and how much
 utilization it would add) come from the memoized offline cost tables, so
 evaluating a stream against every node of a 16-node fleet costs a handful
 of dict lookups.
+
+Invariants:
+
+  * placement keys are opaque to the node (the fleet passes stream ids or
+    (sid, stage) tuples) and homogeneous within one run;
+  * every placement/eviction re-arms the node's (alpha, beta) adaptivity
+    probe (``retrigger_probe``) — churn is a workload change by definition;
+  * ``offered_s`` tracks the summed offered load of *currently placed*
+    streams under the weights the fleet supplied at placement time, so
+    whole-stream and stage-split runs report comparable utilization;
+  * ``recent_dlv`` covers only the latest advance span — a node is not
+    penalized forever for early violations.
 """
 from __future__ import annotations
 
@@ -65,10 +77,17 @@ class FleetNode:
         self.join_t = at_t
         self.draining = False
         self.alive = True
-        #: sid -> list of namespaced model names placed for that stream
-        self.placements: dict[int, list[str]] = {}
+        #: placement key -> namespaced model names placed under it.  The
+        #: key is opaque to the node: the fleet uses the stream id for
+        #: whole-stream placements and (sid, stage) tuples in stage-split
+        #: mode; keys within one run are always homogeneous
+        self.placements: dict[object, list[str]] = {}
         #: sum of offered load (busy-s per s) of currently placed streams
         self.offered_s = 0.0
+        #: per-model offered-load weights (cascade stages placed standalone
+        #: carry their trigger probability here, since their specs no longer
+        #: declare a local dependency)
+        self._load_weights: dict[str, float] = {}
         self.probe_retriggers = 0
         #: DLV rate over the most recent advance span (not run-cumulative,
         #: so a node is not penalized forever for early violations)
@@ -95,20 +114,31 @@ class FleetNode:
         return self.sim.finalize()
 
     # -------------------------------------------------------- placement
-    def place(self, sid: int, specs: list, names: list[str],
-              t: float) -> None:
-        """Join a stream's pipeline (ModelSpecs, head first) at time t."""
+    def place(self, key: object, specs: list, names: list[str],
+              t: float, weights: "Optional[list[float]]" = None) -> None:
+        """Join a stream's pipeline — or a single stage of one — under
+        ``key`` (ModelSpecs in dependency order, head first).  ``weights``
+        overrides the offered-load weight per spec (the fleet passes the
+        stage's trigger probability for standalone cascade stages, keeping
+        load telemetry consistent across placement granularities)."""
         for spec in specs:
             self.sim.join_model(spec, t)
-        self.placements[sid] = list(names)
-        for g, fps, weight in _spec_loads(specs):
+        self.placements[key] = list(names)
+        for i, (g, fps, weight) in enumerate(_spec_loads(specs)):
+            if weights is not None:
+                weight = weights[i]
+            self._load_weights[names[i]] = weight
             self.offered_s += weight * fps * self._iso_best(g)
         self.retrigger_probe()
 
-    def evict(self, sid: int, t: float) -> None:
-        """Stop a stream's arrivals here (jobs in flight still complete)."""
-        for name in self.placements.pop(sid, ()):
+    def evict(self, key: object, t: float) -> None:
+        """Stop a placement's arrivals here (jobs in flight still
+        complete, and exported completions still drain)."""
+        for name in self.placements.pop(key, ()):
             self.sim.leave_model(name, t)
+            # every re-placement mints a generation-fresh name, so a
+            # weight kept past eviction would never be read again
+            self._load_weights.pop(name, None)
         # offered load is recomputed from scratch on eviction: the spec
         # objects are gone, so track via the remaining placements instead
         self._recompute_offered()
@@ -119,7 +149,9 @@ class FleetNode:
         total = 0.0
         for i, spec in enumerate(self.sim.specs):
             if spec.model.name in live and self.sim.active[i]:
-                w = 1.0 if spec.depends_on is None else spec.trigger_prob
+                w = self._load_weights.get(
+                    spec.model.name,
+                    1.0 if spec.depends_on is None else spec.trigger_prob)
                 total += w * spec.fps * self._iso_best(spec.model)
         self.offered_s = total
 

@@ -1,4 +1,5 @@
-"""Global admission/routing policies: which node serves a new stream.
+"""Global admission/routing policies: which node serves a new stream, and —
+when stage splitting is enabled — which node serves each *stage* of it.
 
 The router sees only aggregated telemetry (:class:`~.node.NodeTelemetry`)
 plus per-(stream, node) cost summaries from the memoized offline tables —
@@ -14,26 +15,58 @@ Policies:
     the node's WS/OS accelerator mix, weighted by deadline urgency) and the
     node's recent UXCost-window health.
 
+Stage-level placement (``place_stages``) splits a cascade pipeline across
+nodes: the score policy places stages greedily in pipeline order, charging
+a transfer-cost penalty (activation bytes over the inter-node link, from
+:class:`repro.core.costmodel.TransferModel`) whenever a cascade edge would
+cross nodes.  With zero bandwidth the penalty is infinite and placement
+degenerates to whole-pipeline.  Policies without stage awareness co-locate
+every stage on the whole-stream choice.
+
 All policies are deterministic: ties break on node id, and the round-robin
 cursor is part of the policy state (reconstructed identically on replay —
 though replay short-circuits routing entirely via recorded placements).
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 from .node import FleetNode, StreamCost
+
+
+def argmin_node(nodes: Sequence[FleetNode], score_fn) -> int:
+    """Node id minimizing ``score_fn(node)``, ties to the lower node id —
+    the one argmin loop every placement path shares."""
+    best_id, best_key = nodes[0].node_id, None
+    for node in nodes:
+        key = (score_fn(node), node.node_id)
+        if best_key is None or key < best_key:
+            best_id, best_key = node.node_id, key
+    return best_id
 
 
 class RouterPolicy:
     """Placement policy plug-in: pick a node id for a candidate stream."""
 
     name = "base"
+    #: whether place_stages may put stages of one stream on different
+    #: nodes; non-splitting policies also migrate and rebalance streams as
+    #: co-located units
+    splits_stages = False
 
     def place(self, stream, nodes: Sequence[FleetNode]) -> int:
         """Return the node_id to host ``stream`` (a StreamView).  ``nodes``
         is the list of live, non-draining nodes, sorted by node_id."""
         raise NotImplementedError
+
+    def place_stages(self, stream, nodes: Sequence[FleetNode],
+                     transfer) -> list[int]:
+        """Per-stage placement: node_id for each pipeline stage of
+        ``stream`` (a StreamView), head first.  The default co-locates all
+        stages on the whole-stream ``place`` choice; stage-aware policies
+        override to split cascades when the transfer economics justify it."""
+        del transfer
+        return [self.place(stream, nodes)] * stream.n_stages
 
 
 class RoundRobinRouter(RouterPolicy):
@@ -75,17 +108,26 @@ W_BACKLOG = 0.5
 W_PREF = 0.2
 W_UX = 0.15
 URGENCY_CAP = 4.0
+#: weight of the cross-node transfer penalty in stage-level scoring: the
+#: per-trigger link time as a fraction of the receiving stage's period,
+#: amplified so the router only splits when the hardware-match gain is
+#: decisively larger than the wire bill
+W_XFER = 8.0
 
 
 class ScoreDrivenRouter(RouterPolicy):
     name = "score"
+    splits_stages = True
 
     def score(self, stream, node: FleetNode,
               best_iso: float) -> float:
         """Lower is better.  ``best_iso`` is the stream's best isolated
         latency across all candidate nodes (preference normalizer)."""
+        return self._score(stream.cost_on(node), node, best_iso)
+
+    def _score(self, cost: StreamCost, node: FleetNode,
+               best_iso: float) -> float:
         tel = node.telemetry()
-        cost: StreamCost = stream.cost_on(node)
         load_after = tel.offered_util + cost.offered_s / tel.n_accs
         pref_penalty = (cost.iso_s / max(best_iso, 1e-12)) - 1.0
         urgency = min(cost.urgency, URGENCY_CAP)
@@ -96,18 +138,72 @@ class ScoreDrivenRouter(RouterPolicy):
 
     def place(self, stream, nodes: Sequence[FleetNode]) -> int:
         best_iso = min(stream.cost_on(n).iso_s for n in nodes)
-        best_id, best_key = nodes[0].node_id, None
-        for node in nodes:
-            key = (self.score(stream, node, best_iso), node.node_id)
-            if best_key is None or key < best_key:
-                best_id, best_key = node.node_id, key
-        return best_id
+        return argmin_node(nodes,
+                           lambda n: self.score(stream, n, best_iso))
+
+    # ------------------------------------------------------ stage placement
+    def transfer_penalty(self, stream, k: int, transfer) -> float:
+        """Score penalty for putting stage ``k`` on a different node than
+        its parent: the per-trigger transfer latency of the parent's output
+        activation, relative to the stage's period (how much of every frame
+        interval the wire eats), weighted by W_XFER.  Infinite when the
+        transfer model is absent or has zero bandwidth."""
+        if transfer is None or not transfer.enabled:
+            return float("inf")
+        xfer_s = transfer.transfer_s(stream.act_bytes_into(k))
+        return W_XFER * xfer_s / max(stream.stage_period_s(k), 1e-9)
+
+    def stage_score(self, stream, k: int, node: FleetNode, best_iso: float,
+                    parent_nid: Optional[int], transfer) -> float:
+        """Score of placing stage ``k`` on ``node`` given the stage's parent
+        already landed on ``parent_nid`` (None for heads)."""
+        s = self._score(stream.stage_cost_on(node, k), node, best_iso)
+        if parent_nid is not None and node.node_id != parent_nid:
+            s += self.transfer_penalty(stream, k, transfer)
+        return s
+
+    def place_stages(self, stream, nodes: Sequence[FleetNode],
+                     transfer) -> list[int]:
+        """Split-refinement placement: anchor the head on the whole-stream
+        ``place`` choice (which prices the full pipeline's load, so heads
+        never land somewhere that cannot absorb the children that follow),
+        then let each non-head stage peel off to another node only when its
+        stage score there beats staying with its parent by more than the
+        cascade-edge transfer penalty.  With zero bandwidth the penalty is
+        infinite, every stage stays with its parent, and the assignment is
+        exactly the whole-pipeline placement."""
+        out: list[int] = [self.place(stream, nodes)]
+        for k in range(1, stream.n_stages):
+            best_iso = min(stream.stage_cost_on(n, k).iso_s for n in nodes)
+            p = stream.parent_of(k)
+            parent_nid = out[p] if p is not None else out[0]
+            out.append(argmin_node(
+                nodes, lambda n: self.stage_score(stream, k, n, best_iso,
+                                                  parent_nid, transfer)))
+        return out
+
+
+class WholePipelineScoreRouter(ScoreDrivenRouter):
+    """Score-driven placement that never splits: every stage co-locates on
+    the whole-stream choice — at admission, at migration, and at
+    rebalance (``splits_stages = False`` makes the fleet move and
+    rebalance streams as units).  This is the control arm for stage-split
+    experiments — identical scoring, telemetry, migration accounting and
+    trigger machinery, with placement granularity as the only variable."""
+
+    name = "score_whole"
+    splits_stages = False
+
+    def place_stages(self, stream, nodes: Sequence[FleetNode],
+                     transfer) -> list[int]:
+        return RouterPolicy.place_stages(self, stream, nodes, transfer)
 
 
 POLICIES = {
     "round_robin": RoundRobinRouter,
     "least_loaded": LeastLoadedRouter,
     "score": ScoreDrivenRouter,
+    "score_whole": WholePipelineScoreRouter,
 }
 
 

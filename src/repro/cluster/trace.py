@@ -1,8 +1,9 @@
 """Fleet trace: the fleet run's external input + routing decisions, JSONL.
 
-Layered on :mod:`repro.scenarios.trace` (same container, same JSONL
-conventions, ``sort_keys`` bytes-stable lines) with fleet-level event
-kinds.  A fleet trace records, in processing order:
+This module owns the on-disk contract of a fleet run.  It layers on
+:mod:`repro.scenarios.trace` (same container, same JSONL conventions,
+``sort_keys`` bytes-stable lines) with fleet-level event kinds.  A fleet
+trace records, in processing order:
 
     {"type": "meta", "kind": "fleet", "version": 1, "seed": ..., ...}
     {"type": "node_join",  "t": 0.0, "node": 0, "system": "4K_2WS"}
@@ -12,12 +13,33 @@ kinds.  A fleet trace records, in processing order:
     {"type": "migrate",    "t": 1.0, "sid": 3, "from": 1, "to": 0, "gen": 1}
     {"type": "node_leave", "t": 1.5, "node": 3}
 
-Because placements and migrations are recorded (not just the inputs),
-replay bypasses the router entirely: a 16-node/1000-stream run reproduces
-bit-exactly — same per-node simulators, same jobs, same fleet UXCost —
-regardless of later routing-policy changes.
+Stage-split runs (``FleetSimulator(split_stages=True)``) additionally carry
+a ``"stage"`` index on ``place``/``migrate`` events, and migrations under a
+transfer model carry the exact charge the live run paid:
+
+    {"type": "place",   "t": 0.3, "sid": 4, "stage": 1, "node": 5, "gen": 0}
+    {"type": "migrate", "t": 1.0, "sid": 3, "stage": 0, "from": 1, "to": 0,
+     "gen": 1, "xfer_s": 0.0082, "xfer_j": 3.1e-4}
+
+The meta line carries ``"transfer"`` (the exact TransferModel parameters)
+and ``"split"`` when stage splitting was live; replay reconstructs the
+model from meta and re-derives every charge through the same code path,
+so a trace stays exact even if the *default* transfer constants change
+later.  The per-migration ``xfer_s``/``xfer_j`` fields document what the
+live run paid (and are asserted in tests); legacy whole-stream traces are
+byte-identical to the PR-2 format.
+
+Invariant: because placements *and* migrations are recorded (not just the
+inputs), replay bypasses the router entirely — a 16-node/1000-stream run
+reproduces bit-exactly (same per-node simulators, same jobs, same fleet
+UXCost) regardless of later routing-policy changes.  Cross-node cascade
+triggers are deliberately NOT recorded: they are deterministic internal
+dynamics (a dedicated fleet trigger RNG + the deterministic interleaved
+clock), fully determined by the recorded placements.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 from repro.scenarios import trace as base
 
@@ -66,14 +88,27 @@ class FleetTraceRecorder:
         self.events.append({"type": "stream", "t": float(t), "sid": sid,
                             "entries": entries})
 
-    def place(self, t: float, sid: int, node: int, gen: int) -> None:
-        self.events.append({"type": "place", "t": float(t), "sid": sid,
-                            "node": node, "gen": gen})
+    def place(self, t: float, sid: int, node: int, gen: int,
+              stage: Optional[int] = None) -> None:
+        ev = {"type": "place", "t": float(t), "sid": sid,
+              "node": node, "gen": gen}
+        if stage is not None:
+            ev["stage"] = stage
+        self.events.append(ev)
 
-    def migrate(self, t: float, sid: int, src: int, dst: int,
-                gen: int) -> None:
-        self.events.append({"type": "migrate", "t": float(t), "sid": sid,
-                            "from": src, "to": dst, "gen": gen})
+    def migrate(self, t: float, sid: int, src: int, dst: int, gen: int,
+                stage: Optional[int] = None,
+                xfer_s: Optional[float] = None,
+                xfer_j: Optional[float] = None) -> None:
+        ev = {"type": "migrate", "t": float(t), "sid": sid,
+              "from": src, "to": dst, "gen": gen}
+        if stage is not None:
+            ev["stage"] = stage
+        if xfer_s is not None:
+            ev["xfer_s"] = float(xfer_s)
+        if xfer_j is not None:
+            ev["xfer_j"] = float(xfer_j)
+        self.events.append(ev)
 
     def trace(self) -> FleetTrace:
         return FleetTrace(meta=dict(self.meta), events=list(self.events))

@@ -264,6 +264,74 @@ def _build_cost_table(model: ModelGraph, accs: tuple[Accelerator, ...],
     )
 
 
+# ---------------------------------------------------------------------------
+# Inter-node transfer / migration cost model (fleet-level)
+# ---------------------------------------------------------------------------
+# The per-(layer, accelerator) tables above cost *execution*; splitting a
+# cascade pipeline across fleet nodes additionally costs *movement*: a
+# cross-node cascade trigger ships the parent stage's output activation over
+# the inter-node link, and a migration (join/drain/leave/rebalance) ships the
+# moved model's weight state.  Both are charged explicitly — latency delays
+# the receiving stage (eating its deadline slack) and energy lands in the
+# fleet UXCost merge — so the router can only win by splitting when the
+# hardware-match gain exceeds the transfer bill.
+
+#: 10 GbE-class inter-node link defaults (edge cluster ballpark)
+XFER_BANDWIDTH_BYTES_S = 1.25e9   # payload bandwidth of the inter-node link
+XFER_BASE_LATENCY_S = 200e-6      # per-transfer fixed cost (NIC + RPC + hop)
+XFER_ENERGY_PER_BYTE_J = 30e-12   # NIC + switch energy per byte moved
+
+
+@dataclass(frozen=True)
+class TransferModel:
+    """Inter-node state-transfer cost: latency + energy per moved byte.
+
+    ``bandwidth_bytes_s == 0`` models an air-gapped fleet: every transfer
+    takes infinite time, so stage-split placement degenerates to
+    whole-pipeline placement (the router can never justify a cross-node
+    edge) and migrations are charged energy only.
+    """
+
+    bandwidth_bytes_s: float = XFER_BANDWIDTH_BYTES_S
+    base_latency_s: float = XFER_BASE_LATENCY_S
+    energy_per_byte_j: float = XFER_ENERGY_PER_BYTE_J
+
+    @property
+    def enabled(self) -> bool:
+        """Whether cross-node transfers can complete in finite time."""
+        return self.bandwidth_bytes_s > 0.0
+
+    def transfer_s(self, nbytes: float) -> float:
+        """Wall-clock seconds to move ``nbytes`` between two nodes."""
+        if not self.enabled:
+            return math.inf
+        return self.base_latency_s + float(nbytes) / self.bandwidth_bytes_s
+
+    def transfer_j(self, nbytes: float) -> float:
+        """Link energy (J) to move ``nbytes`` between two nodes."""
+        return float(nbytes) * self.energy_per_byte_j
+
+    def to_config(self) -> dict:
+        return {"bandwidth_bytes_s": self.bandwidth_bytes_s,
+                "base_latency_s": self.base_latency_s,
+                "energy_per_byte_j": self.energy_per_byte_j}
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "TransferModel":
+        return cls(**cfg)
+
+
+def model_state_bytes(graph: ModelGraph) -> float:
+    """Bytes of model state a migration must ship: all layer weights."""
+    return float(sum(l.weight_bytes for l in graph.layers))
+
+
+def activation_bytes(graph: ModelGraph) -> float:
+    """Bytes a cross-node cascade trigger ships: the final activation the
+    parent stage hands to its dependent (its last layer's output)."""
+    return float(graph.layers[-1].out_bytes)
+
+
 # Deadline convention (Planaria §evaluation: deadlines are set as a multiple
 # of each model's isolated latency on the target hardware, clipped to the
 # frame period; a floor keeps very light models from getting sub-queueing-

@@ -39,7 +39,7 @@ from .costmodel import CostTable, E_DRAM, build_tables, effective_deadline
 from .types import Accelerator, ModelGraph, ModelSpec, Scenario, SYSTEMS
 from .uxcost import WindowStats, uxcost, overall_dlv_rate, overall_norm_energy
 
-ARRIVAL, DONE, WINDOW, PHASE = 0, 1, 2, 3
+ARRIVAL, DONE, WINDOW, PHASE, INJECT = 0, 1, 2, 3, 4
 
 #: arrival-process rng stream id, kept distinct from the path/cascade stream
 #: so trace replay (which consumes no arrival randomness) stays bit-exact.
@@ -241,6 +241,13 @@ class Simulator:
                 "seed": seed, "duration_s": duration_s,
                 "window_s": window_s,
             })
+        #: cross-simulator cascade surface (used by the fleet layer when a
+        #: pipeline is split across nodes): completions of models named here
+        #: are queued on ``pending_completions`` for an external driver to
+        #: drain and forward; both stay empty in single-node runs, so the
+        #: engine's behavior and RNG consumption are untouched
+        self.export_completions: set[str] = set()
+        self.pending_completions: list[tuple[str, float]] = []
         self._arrival_procs = [self._materialize_arrival(s.arrival)
                                for s in self.specs]
         #: per-stream time origin: arrival processes run in stream-local
@@ -275,6 +282,8 @@ class Simulator:
 
     def _is_chain_tail(self, idx: int) -> bool:
         name = self.specs[idx].model.name
+        if name in self.export_completions:
+            return False                # has remote (cross-node) dependents
         return not any(s.depends_on == name and self.active[i]
                        for i, s in enumerate(self.specs))
 
@@ -403,6 +412,16 @@ class Simulator:
         del t  # takes effect immediately; kept for call-site symmetry
         self.active[self._index_of(name)] = False
 
+    def inject_arrival(self, name: str, t: float,
+                       deadline_anchor: Optional[float] = None) -> None:
+        """Queue one externally-triggered frame of ``name`` at time ``t``
+        (the fleet layer forwards cross-node cascade triggers through this).
+        ``deadline_anchor`` backdates the deadline clock — a trigger that
+        spent transfer latency on the wire arrives at ``t`` but its deadline
+        anchors at the parent's completion time, so cross-node latency eats
+        real slack.  The injected frame schedules no follow-up arrival."""
+        self._push(t, INJECT, (self._index_of(name), deadline_anchor))
+
     # --------------------------------------------------------------- jobs
     def _create_job(self, model_idx: int, t: float) -> Job:
         spec = self.specs[model_idx]
@@ -469,6 +488,10 @@ class Simulator:
                 spec = self.specs[dep_idx]
                 if self.rng.random() < spec.trigger_prob:
                     self._create_job(dep_idx, t)
+            # remote dependents (pipeline stages on other fleet nodes):
+            # report the completion; the fleet clock drains and forwards
+            if job.base_name in self.export_completions:
+                self.pending_completions.append((job.base_name, t))
 
     def deadline_of(self, job: Job) -> float:
         return job.deadline
@@ -612,6 +635,13 @@ class Simulator:
                     self.recorder.arrival(t, self.specs[idx].model.name)
                 self._schedule_stream_arrival(idx, after_t=t)
             # an inactive (left) stream dies at its pending arrival
+        elif kind == INJECT:
+            idx, anchor = arg  # type: ignore[misc]
+            if self.active[idx]:
+                job = self._create_job(idx, t)
+                if anchor is not None:
+                    name = self.specs[idx].model.name
+                    job.deadline = anchor + self.deadlines[name]
         elif kind == PHASE:
             self._apply_phase(arg, t)
         elif kind == DONE:

@@ -8,8 +8,8 @@ delegates here), arbitrary new scenarios compose via
 consume the same :class:`.trace.Trace` format for exact replay.
 """
 from .arrivals import (ArrivalProcess, BurstyOnOff, Diurnal, Periodic,
-                       PeriodicJitter, Poisson, arrival_from_config,
-                       arrival_kinds)
+                       PeriodicJitter, Poisson, Triggered,
+                       arrival_from_config, arrival_kinds)
 from .builder import ModelEntry, ModelRef, ScenarioBuilder, ScenarioError
 from .phases import (PhaseAction, PhaseScript, join, join_entry, leave,
                      scale_fps, set_fps, set_trigger_prob)
@@ -21,7 +21,7 @@ from . import registry
 
 __all__ = [
     "ArrivalProcess", "BurstyOnOff", "Diurnal", "Periodic", "PeriodicJitter",
-    "Poisson", "arrival_from_config", "arrival_kinds",
+    "Poisson", "Triggered", "arrival_from_config", "arrival_kinds",
     "ModelEntry", "ModelRef", "ScenarioBuilder", "ScenarioError",
     "PhaseAction", "PhaseScript", "join", "join_entry", "leave", "scale_fps",
     "set_fps", "set_trigger_prob",

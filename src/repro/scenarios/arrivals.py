@@ -203,6 +203,27 @@ class Diurnal(ArrivalProcess):
         return self.next_after(0.0, period_s, rng)
 
 
+@_register
+@dataclass
+class Triggered(ArrivalProcess):
+    """No autonomous arrivals: frames come only from an external driver.
+
+    Used by the fleet layer for cascade stages split away from their head —
+    the parent stage lives on another node, so frames are injected through
+    ``Simulator.inject_arrival`` when cross-node triggers land, never
+    self-scheduled.  ``start``/``next_after`` therefore always return None
+    and consume no randomness.
+    """
+
+    kind = "triggered"
+
+    def start(self, index, period_s, rng):
+        return None
+
+    def next_after(self, t, period_s, rng):
+        return None
+
+
 def arrival_from_config(cfg: dict) -> ArrivalProcess:
     """Materialize a process from its ``to_config`` dict."""
     d = dict(cfg)

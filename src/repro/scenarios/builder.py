@@ -5,7 +5,14 @@ cascade dependencies, and optional arrival processes — then materialized
 into the immutable :class:`repro.core.types.Scenario` the simulator and
 serving engine consume.  Because the description is plain data, scenarios
 round-trip through JSON (``to_config`` / ``from_config``), which is what
-the registry, the fuzzer, and phase-script ``join`` actions build on.
+the registry, the fuzzer, phase-script ``join`` actions, and the fleet's
+stream sharding build on.
+
+Invariants enforced by ``validate()``: model names are unique within a
+scenario, FPS targets are positive, trigger probabilities lie in [0, 1],
+and cascade dependencies only reference *earlier* entries (forward-only —
+which is why a pipeline can always be placed head first, and why
+cross-pipeline dependencies cannot exist).
 
     scn = (ScenarioBuilder("kitchen_sink")
            .model("ssd_mnv2", fps=30, name="det", kwargs={"res": 640})

@@ -69,8 +69,18 @@ def _sample_arrival(rng: np.random.Generator) -> Optional[ArrivalProcess]:
                    day_s=round(float(rng.uniform(2.0, 12.0)), 3))
 
 
-def fuzz_scenario(seed: int, max_pipelines: int = 4) -> ScenarioBuilder:
-    """Draw one valid random scenario (1..max_pipelines pipelines)."""
+def fuzz_scenario(seed: int, max_pipelines: int = 4,
+                  cascade_prob: float = 0.5,
+                  max_depth: int = 2) -> ScenarioBuilder:
+    """Draw one valid random scenario (1..max_pipelines pipelines).
+
+    ``cascade_prob`` is the probability each pipeline grows a cascade
+    child (1.0 makes every pipeline a cascade — the population the fleet
+    stage-split benchmarks want); ``max_depth`` bounds the cascade chain
+    length (2 = head + child, the historical shape).  Defaults consume
+    exactly the seed fuzzer's RNG stream, so existing seeds reproduce
+    their historical scenarios bit-for-bit.
+    """
     rng = np.random.default_rng(seed)
     n = int(rng.integers(1, max_pipelines + 1))
     b = ScenarioBuilder(f"fuzz_{seed}")
@@ -80,12 +90,15 @@ def fuzz_scenario(seed: int, max_pipelines: int = 4) -> ScenarioBuilder:
         b.model(ModelRef(hb, name=head, kwargs=dict(hkw)),
                 fps=float(FPS_CHOICES[int(rng.integers(0, len(FPS_CHOICES)))]),
                 arrival=_sample_arrival(rng))
-        if rng.random() < 0.5:
+        parent, depth = head, 1
+        while depth < max_depth and rng.random() < cascade_prob:
             cb, ckw = CHILD_POOL[int(rng.integers(0, len(CHILD_POOL)))]
-            b.model(ModelRef(cb, name=f"{cb}_{p}c", kwargs=dict(ckw)),
+            child = f"{cb}_{p}c" if depth == 1 else f"{cb}_{p}c{depth}"
+            b.model(ModelRef(cb, name=child, kwargs=dict(ckw)),
                     fps=float(FPS_CHOICES[int(rng.integers(0, len(FPS_CHOICES)))]),
-                    depends_on=head,
+                    depends_on=parent,
                     trigger_prob=round(float(rng.uniform(0.2, 1.0)), 3))
+            parent, depth = child, depth + 1
     b.validate()
     return b
 

@@ -7,7 +7,9 @@ list of ``(time, PhaseAction)`` pairs the simulator applies as first-class
 events, so a single run can sweep through several workload regimes.
 
 Actions are plain data (kind + payload) so scripts serialize into traces
-and replay exactly.  Supported kinds:
+and replay exactly; the simulator re-validates every payload on apply
+(traces are hand-editable) and records applied actions in processing
+order.  Supported kinds:
 
     set_fps(model, fps)          retarget one model's FPS (period + deadline)
     scale_fps(factor[, models])  multiply FPS of all (or listed) models

@@ -1,10 +1,12 @@
 """Fleet subsystem: step/peek core API, sharding builder, router policies,
-elastic membership, fleet-trace replay determinism, CostTable memoization."""
+elastic membership, fleet-trace replay determinism, CostTable memoization,
+stage-split cascade placement and migration/transfer cost accounting."""
 import numpy as np
 import pytest
 
 from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
-                           NodeTelemetry, RoundRobinRouter, make_policy,
+                           NodeTelemetry, RoundRobinRouter, TransferModel,
+                           canonical_stream_model, make_policy,
                            run_fleet, split_pipelines)
 from repro.cluster import trace as ftrace
 from repro.core import build_scenario, dream_full
@@ -202,6 +204,168 @@ def test_fleet_trace_rejects_foreign_formats():
                           record=True).run()
     with pytest.raises(ValueError):                   # fleet kinds are not
         strace.loads(ftrace.dumps(live.trace))        # simulator kinds
+
+
+# ---------------------------------------------------------------------------
+# stage-split cascade placement + transfer cost accounting
+# ---------------------------------------------------------------------------
+
+def cascade_fleet(seed=3, n_streams=10, dur=1.5, churn=False):
+    b = FleetScenarioBuilder("test_cascades")
+    nids = [b.node(s) for s in ("4K_2WS", "8K_2OS", "4K_2OS", "8K_2WS")]
+    if churn:
+        b.node("8K_1WS2OS", at=0.4 * dur)
+        b.node_drain(nids[0], at=0.5 * dur)
+    b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=0.5 * dur,
+                   fps_scale=0.25, cascade_prob=1.0, max_depth=3,
+                   cascades_only=True)
+    return b.build()
+
+
+def test_canonical_collapses_stage_and_generation_prefixes():
+    assert canonical_stream_model("s12.det") == "s12.det"
+    assert canonical_stream_model("s12g2.det") == "s12.det"
+    assert canonical_stream_model("s12t1.det") == "s12.det"
+    assert canonical_stream_model("s12t1g3.det") == "s12.det"
+
+
+def test_split_requires_transfer_model():
+    with pytest.raises(ValueError):
+        FleetSimulator(cascade_fleet(), "score", duration_s=1.0,
+                       split_stages=True)
+
+
+def test_stage_split_places_and_triggers_across_nodes():
+    """The tentpole: stages of one cascade land on different nodes, the
+    cross-node triggers actually run the children, and the transfer bill
+    (energy into the UXCost merge) is nonzero."""
+    fs = FleetSimulator(cascade_fleet(), "score", duration_s=1.5, seed=3,
+                        transfer=TransferModel(), split_stages=True)
+    r = fs.run()
+    assert r.split
+    split_sids = [sid for sid, sv in fs.streams.items()
+                  if len({fs.stage_node[(sid, k)]
+                          for k in range(sv.n_stages)}) > 1]
+    assert split_sids                        # at least one pipeline split
+    assert r.trigger_transfers > 0           # cross-node cascades fired
+    assert r.xfer_energy_j > 0.0
+    # children of split streams really execute (cross-node triggers landed):
+    # individual low-probability children may finish zero frames in a short
+    # run, but across all split pipelines the cascades must have flowed
+    child_frames = sum(
+        r.stats.per_model[f"s{sid}." + fs.streams[sid].stage_base(k)].frames
+        for sid in split_sids
+        for k in range(1, fs.streams[sid].n_stages)
+        if f"s{sid}." + fs.streams[sid].stage_base(k) in r.stats.per_model)
+    assert child_frames > 0
+
+
+def test_zero_bandwidth_degenerates_to_whole_pipeline():
+    """bw=0 means no usable inter-node link: every stage co-locates with
+    its head (whole-pipeline placement) and no trigger ever crosses —
+    including through drain-driven migrations, which must neither split a
+    stream nor dump every moved head onto the lowest node id."""
+    for churn in (False, True):
+        fs = FleetSimulator(cascade_fleet(churn=churn), "score",
+                            duration_s=1.5, seed=3,
+                            transfer=TransferModel(bandwidth_bytes_s=0.0),
+                            split_stages=True)
+        r = fs.run()
+        for sid, sv in fs.streams.items():
+            nodes = {fs.stage_node[(sid, k)] for k in range(sv.n_stages)}
+            assert len(nodes) == 1
+        assert r.trigger_transfers == 0
+        if churn:
+            assert r.migrations > 0
+            hosts = {fs.stage_node[(sid, 0)] for sid in fs.streams}
+            assert len(hosts) > 1        # drained streams spread, not piled
+
+
+def test_score_whole_control_never_splits_through_churn():
+    """The whole-pipeline control arm must keep every stream co-located
+    even across drain migrations and rebalance ticks — placement
+    granularity is the only variable in the whole-vs-split comparison."""
+    fs = FleetSimulator(cascade_fleet(churn=True), "score_whole",
+                        duration_s=1.5, seed=3, transfer=TransferModel(),
+                        split_stages=True, rebalance_every_s=0.5)
+    r = fs.run()
+    assert r.migrations > 0              # the drain really moved streams
+    for sid, sv in fs.streams.items():
+        nodes = {fs.stage_node[(sid, k)] for k in range(sv.n_stages)}
+        assert len(nodes) == 1
+    assert r.trigger_transfers == 0
+
+
+def test_drain_charges_transfer_cost_exactly_once_per_stream():
+    """A drain mid-run charges each moved stream's state transfer exactly
+    once: total charged energy equals bytes-moved x energy-per-byte summed
+    over the recorded migrations, nothing more."""
+    T = TransferModel()
+    fscn = small_fleet(seed=2, n_streams=12, churn=False)
+    b_events = list(fscn.events)
+    from repro.cluster import FleetEvent, FleetScenario
+    b_events.append(FleetEvent(1.0, "node_drain", {"node": 1}))
+    fscn = FleetScenario("drain_charge", tuple(sorted(
+        b_events, key=lambda e: e.t)))
+    fs = FleetSimulator(fscn, "score", duration_s=1.5, seed=2,
+                        transfer=T, record=True)
+    r = fs.run()
+    migrated = r.trace.migrations
+    assert migrated                          # the drain moved something
+    assert len({m["sid"] for m in migrated}) == len(migrated)  # once each
+    expected = sum(
+        T.transfer_j(fs.streams[m["sid"]].state_bytes(k))
+        for m in migrated
+        for k in range(fs.streams[m["sid"]].n_stages))
+    assert r.xfer_energy_j == pytest.approx(expected, rel=1e-12)
+    # per-model: each moved stage's canonical entry charged exactly once
+    for m in migrated:
+        sv = fs.streams[m["sid"]]
+        for k in range(sv.n_stages):
+            name = f"s{m['sid']}." + sv.stage_base(k)
+            assert fs.xfer_energy[name] == pytest.approx(
+                T.transfer_j(sv.state_bytes(k)), rel=1e-12)
+
+
+def test_drain_charges_transfer_cost_exactly_once_per_stage():
+    """Stage-split churn run: every recorded stage migration carries its
+    own charge, and the fleet total is exactly the sum of the records."""
+    T = TransferModel()
+    fs = FleetSimulator(cascade_fleet(churn=True), "score", duration_s=1.5,
+                        seed=3, transfer=T, split_stages=True, record=True)
+    r = fs.run()
+    migrated = r.trace.migrations
+    assert migrated and all("stage" in m for m in migrated)
+    assert r.stage_migrations == len(migrated)
+    mig_total = sum(m["xfer_j"] for m in migrated)
+    trig_total = r.xfer_energy_j - mig_total
+    assert trig_total >= 0.0                 # remainder = trigger transfers
+    for m in migrated:
+        sv = fs.streams[m["sid"]]
+        assert m["xfer_j"] == pytest.approx(
+            T.transfer_j(sv.state_bytes(m["stage"])), rel=1e-12)
+
+
+def test_migration_heavy_split_trace_replays_bitexact():
+    """Stage-split + churn + rebalance: record, serialize, replay — fleet
+    UXCost, frames, migrations and transfer charges all reproduce."""
+    live_fs = FleetSimulator(cascade_fleet(churn=True), "score",
+                             duration_s=1.5, seed=3,
+                             transfer=TransferModel(), split_stages=True,
+                             record=True, rebalance_every_s=0.5)
+    live = live_fs.run()
+    assert live.migrations > 0
+    text = ftrace.dumps(live.trace)
+    assert text == ftrace.dumps(ftrace.loads(text))   # bytes-stable JSONL
+    rep_fs = FleetSimulator(replay=ftrace.loads(text))
+    rep = rep_fs.run()
+    assert rep.uxcost == live.uxcost
+    assert rep.frames == live.frames
+    assert rep.drops == live.drops
+    assert rep.migrations == live.migrations
+    assert rep.trigger_transfers == live.trigger_transfers
+    assert rep.xfer_energy_j == live.xfer_energy_j
+    assert rep_fs.xfer_energy == live_fs.xfer_energy
 
 
 # ---------------------------------------------------------------------------
