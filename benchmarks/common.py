@@ -4,12 +4,12 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Callable, Iterable, Optional
+from typing import Callable, Iterable
 
 import numpy as np
 
-from repro.core import (HETERO_SYSTEMS, HOMO_SYSTEMS, SYSTEMS, SimResult,
-                        build_scenario, dream_full, run_planaria, run_sim)
+from repro.core import (SimResult, build_scenario, dream_full,
+                        run_planaria, run_sim)
 from repro.core.baselines import FCFSScheduler, VeltairLikeScheduler
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")

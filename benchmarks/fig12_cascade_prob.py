@@ -6,7 +6,7 @@ drop and Supernet switching contribute most under the heaviest load.
 """
 from __future__ import annotations
 
-from repro.core import build_scenario, dream_full, dream_mapscore, run_sim
+from repro.core import build_scenario, dream_mapscore, run_sim
 
 from .common import DURATION_S, run_cell, save_artifact
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 from repro.core import HOMO_SYSTEMS
 
 from . import fig7_heterogeneous as f7
-from .common import DURATION_S, save_artifact
+from .common import DURATION_S
 
 
 def run(duration_s: float = DURATION_S, seed: int = 0) -> dict:

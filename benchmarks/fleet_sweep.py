@@ -1,4 +1,4 @@
-"""Fleet policy shootout + cascade stage-split sweep over multi-node DREAM.
+"""Fleet policy shootout + cascade stage-split + drift-tuner sweeps.
 
 Exercises the cluster subsystem at production shape: a ≥16-node fleet of
 mixed 4K/8K Table-2 systems serving ≥200 fuzzer-sampled streams, with
@@ -15,17 +15,29 @@ transfer model: whole-pipeline placement vs stage-split routing
 mix suits it and cross-node triggers pay explicit activation-transfer
 latency + energy.
 
+The drift section runs a *drifting* workload — diurnal anti-phase load
+swings (phase-scripted ``scale_fps`` on half-populations) plus a mid-run
+drain — twice: under the hand-fixed ``score`` router and under the
+online-learned ``tuned_score`` router (telemetry-fed weight tuner, see
+``repro.cluster.telemetry`` / ``TunedScoreRouter``).  Static weights go
+stale when the load regime shifts; the tuner must recover at least that
+headroom, aggregated over ≥3 scenario seeds, and every tuned run must
+replay bit-exactly with the tuner bypassed.
+
 The headline claims, asserted by ``main()`` and the CI gate:
   * score-driven routing achieves lower fleet UXCost than round-robin;
   * stage-split routing achieves no worse fleet UXCost than whole-pipeline
     placement under the same (migration-inclusive) transfer model;
-  * both recorded fleet traces replay bit-exactly.
+  * tuned routing achieves no worse fleet UXCost than static score
+    routing on the drifting workload (tuned_over_static >= 1.0);
+  * all recorded fleet traces replay bit-exactly.
 """
 from __future__ import annotations
 
 from repro.cluster import (FleetScenario, FleetScenarioBuilder,
                            FleetSimulator, TransferModel)
 from repro.cluster import trace as ftrace
+from repro.scenarios.phases import scale_fps
 
 from .common import save_artifact
 
@@ -152,6 +164,105 @@ def run_cascade(duration_s: float, seed: int, n_nodes: int,
     }
 
 
+#: drift fleet: the same interleaved capacity/dataflow mix as the policy
+#: shootout, at a size where a half-population load swing saturates part
+#: of the fleet (weight choice matters) without stalling it outright
+DRIFT_FPS_SCALE = 0.4
+#: diurnal peak factor: half the streams scale up by this mid-run, then
+#: recede while the other half peaks (anti-phase) — the regime shift that
+#: makes hand-fixed score weights stale
+DRIFT_PEAK = 2.5
+
+
+def build_drift_fleet(seed: int, n_nodes: int, n_streams: int,
+                      duration_s: float, churn: bool = True) -> FleetScenario:
+    b = FleetScenarioBuilder(f"drift_sweep_{seed}")
+    nids = [b.node(SYSTEMS_MIX[i % len(SYSTEMS_MIX)])
+            for i in range(n_nodes)]
+    if churn:
+        b.node_drain(nids[0], at=round(0.5 * duration_s, 6))
+    # arrivals keep coming for most of the run (placement decisions are
+    # the tuner's lever) and are deterministic, so both router arms face
+    # an identical offered workload regardless of placement
+    sids = b.fuzz_streams(n_streams, seed=seed, t0=0.0,
+                          t1=round(0.85 * duration_s, 6),
+                          fps_scale=DRIFT_FPS_SCALE,
+                          deterministic_arrivals=True)
+    # diurnal half-populations in anti-phase: the first half peaks early
+    # and recedes, the second half ramps late — two regime shifts, each
+    # re-arming the tuner probe through the fleet phase events
+    half = sids[:len(sids) // 2]
+    rest = sids[len(sids) // 2:]
+    b.phase(scale_fps(DRIFT_PEAK), at=round(0.3 * duration_s, 6), sids=half)
+    b.phase(scale_fps(round(1.0 / DRIFT_PEAK, 6)),
+            at=round(0.75 * duration_s, 6), sids=half)
+    b.phase(scale_fps(DRIFT_PEAK), at=round(0.75 * duration_s, 6),
+            sids=rest)
+    return b.build()
+
+
+def run_drift(duration_s: float, seed: int, n_nodes: int = 8,
+              n_streams: int = 64, churn: bool = True, n_seeds: int = 3,
+              tune_every_s: float = 0.2,
+              rebalance_every_s: float = 0.4) -> dict:
+    """Static vs online-tuned score routing on drifting-workload fleets —
+    identical scenarios per seed, placement-granularity and machinery
+    identical; the only variable is whether the score weights are the
+    hand-fixed constants or learned online from fleet telemetry.
+    Aggregated over ``n_seeds`` scenario seeds with per-seed rows
+    reported; every tuned run is recorded and replayed (tuner bypassed,
+    weights from the trace) as a determinism self-check."""
+    rows = []
+    for s in range(seed, seed + n_seeds):
+        fscn = build_drift_fleet(s, n_nodes, n_streams, duration_s,
+                                 churn=churn)
+        static = FleetSimulator(fscn, "score", duration_s=duration_s,
+                                seed=s,
+                                rebalance_every_s=rebalance_every_s).run()
+        fs = FleetSimulator(fscn, "tuned_score", duration_s=duration_s,
+                            seed=s, rebalance_every_s=rebalance_every_s,
+                            tune_every_s=tune_every_s, record=True)
+        tuned = fs.run()
+        replayed = FleetSimulator(
+            replay=ftrace.loads(ftrace.dumps(tuned.trace))).run()
+        rows.append({
+            "seed": s,
+            "static": {"uxcost": static.uxcost,
+                       "dlv_rate": static.dlv_rate,
+                       "norm_energy": static.norm_energy,
+                       "frames": static.frames,
+                       "migrations": static.migrations},
+            "tuned": {"uxcost": tuned.uxcost, "dlv_rate": tuned.dlv_rate,
+                      "norm_energy": tuned.norm_energy,
+                      "frames": tuned.frames,
+                      "migrations": tuned.migrations,
+                      "weights": list(tuned.weights),
+                      "tuner_windows": tuned.tuner_windows,
+                      "tuner_commits": tuned.tuner_commits,
+                      "tuner_retriggers": tuned.tuner_retriggers},
+            "static_over_tuned": static.uxcost / max(tuned.uxcost, 1e-12),
+            "replay_exact": (replayed.uxcost == tuned.uxcost
+                             and replayed.frames == tuned.frames
+                             and tuple(replayed.weights)
+                             == tuple(tuned.weights)),
+        })
+    static_total = sum(r["static"]["uxcost"] for r in rows)
+    tuned_total = sum(r["tuned"]["uxcost"] for r in rows)
+    return {
+        "n_nodes": n_nodes, "n_streams": n_streams, "churn": churn,
+        "n_seeds": n_seeds, "tune_every_s": tune_every_s,
+        "rebalance_every_s": rebalance_every_s,
+        "fps_scale": DRIFT_FPS_SCALE, "peak": DRIFT_PEAK,
+        "rows": rows,
+        "static_uxcost_total": static_total,
+        "tuned_uxcost_total": tuned_total,
+        "tuner_commits": sum(r["tuned"]["tuner_commits"] for r in rows),
+        "tuned_over_static": static_total / max(tuned_total, 1e-12),
+        "tuned_beats_static": tuned_total <= static_total,
+        "replay_exact": all(r["replay_exact"] for r in rows),
+    }
+
+
 def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
         n_streams: int = 200, churn: bool = True) -> dict:
     fscn = build_fleet(seed, n_nodes, n_streams, duration_s, churn=churn)
@@ -187,6 +298,13 @@ def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
         # for: >=8 nodes (placement diversity) serving >=10 heavy cascades
         "cascade": run_cascade(duration_s, seed, max(n_nodes // 2, 8),
                                max(n_streams // 16, 10), churn=churn),
+        # the drift arm needs enough run time for telemetry windows: short
+        # (CI-smoke) durations use the tighter validated configuration
+        "drift": (run_drift(duration_s, seed, churn=churn)
+                  if duration_s >= 2.0 else
+                  run_drift(duration_s, seed, n_nodes=8, n_streams=48,
+                            churn=churn, tune_every_s=0.15,
+                            rebalance_every_s=0.3)),
     }
     save_artifact("fleet_sweep", out)
     return out
@@ -218,6 +336,19 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
               f"replay={r['replay_exact']}")
     print(f"  aggregate UXCost(whole)/UXCost(split) = "
           f"{c['whole_over_split']:.3f}   replay_exact={c['replay_exact']}")
+    d = out["drift"]
+    print(f"drift sweep: {d['n_nodes']} nodes x {d['n_seeds']} seeds, "
+          f"{d['n_streams']} streams, diurnal anti-phase swings + drain, "
+          f"tune_every={d['tune_every_s']}s")
+    for r in d["rows"]:
+        tw = r["tuned"]
+        print(f"  seed {r['seed']}: static={r['static']['uxcost']:9.2f} "
+              f"(DLV={r['static']['dlv_rate']:5.3f})  "
+              f"tuned={tw['uxcost']:9.2f} (DLV={tw['dlv_rate']:5.3f})  "
+              f"ratio={r['static_over_tuned']:5.3f} "
+              f"commits={tw['tuner_commits']} replay={r['replay_exact']}")
+    print(f"  aggregate UXCost(static)/UXCost(tuned) = "
+          f"{d['tuned_over_static']:.3f}   replay_exact={d['replay_exact']}")
     if not out["score_beats_round_robin"]:
         raise SystemExit("score-driven routing did not beat round-robin")
     if not out["replay_exact"]:
@@ -227,6 +358,12 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
                          "placement on the cascade fleet")
     if not c["replay_exact"]:
         raise SystemExit("cascade fleet trace replay mismatch — "
+                         "determinism broken")
+    if not d["tuned_beats_static"]:
+        raise SystemExit("online-tuned routing did worse than static score "
+                         "weights on the drifting-workload fleet")
+    if not d["replay_exact"]:
+        raise SystemExit("tuned fleet trace replay mismatch — "
                          "determinism broken")
 
 

@@ -11,7 +11,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 # note: `from repro.kernels import flash_attention` would resolve to the
 # ops wrapper *function* re-exported by the package, not the module

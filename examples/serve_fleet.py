@@ -1,5 +1,5 @@
 """Fleet serving demo: concurrent ServingEngine instances behind the
-global router.
+global router — optionally with the online weight tuner in the loop.
 
 The same router policies that drive the Level-1 fleet simulator
 (`repro.cluster.router`) place real-model request streams across multiple
@@ -10,13 +10,21 @@ adapter over each engine's *measured* latency table is enough: the same
 score formula runs on measured numbers here and on offline cost tables in
 the simulator.
 
+``--policy tuned_score`` closes the telemetry loop over real engines: the
+run splits into ``--epochs`` serving epochs, each epoch re-places every
+stream with the router's current weights, serves it, and feeds the
+realized per-node deadline-violation rates back as a telemetry window
+(`TunedScoreRouter.on_window`) — the same hindsight-scored coordinate
+probe the fleet simulator drives at tune ticks, walking real measured
+outcomes instead of simulated ones.
+
 Execution is concurrent — one thread per node, as in a real fleet where
 nodes serve independently (placement stays sequential and deterministic;
 engines share read-only JAX handles and JAX releases the GIL during
 device execution; see docs/architecture.md "Concurrency model").
 
     PYTHONPATH=src python examples/serve_fleet.py --duration 4 \
-        --policy score
+        --policy tuned_score --epochs 3
 """
 import argparse
 import sys
@@ -27,6 +35,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.cluster.node import NodeTelemetry, StreamCost
+from repro.cluster.telemetry import TelemetryWindow
 from repro.cluster.router import make_policy
 from repro.core.uxcost import WindowStats, uxcost
 from repro.launch.serve import build_handle
@@ -72,12 +81,59 @@ class EngineStream:
                           urgency=iso * self.fps)
 
 
+def epoch_window(epoch: int, nodes, prev) -> TelemetryWindow:
+    """Fold the epoch's engine stats into the telemetry-window shape the
+    tuner consumes.  Windows are pure *deltas* (the TelemetryWindow
+    contract): ``prev`` maps node_id -> per-model cumulative snapshots at
+    the previous epoch boundary, and everything — frames, per-node DLV,
+    the window UXCost — is computed from the difference."""
+    node_dlv, node_frames = {}, {}
+    delta = WindowStats()
+    for node in nodes:
+        snap = {name: (st.frames, st.violated, st.energy_j,
+                       st.worst_energy_j)
+                for name, st in node.engine.stats.per_model.items()}
+        last = prev.get(node.node_id, {})
+        nf = nv = 0
+        for name, (f, v, e, w) in snap.items():
+            pf, pv, pe, pw = last.get(name, (0, 0, 0.0, 0.0))
+            if f - pf > 0 or w - pw > 0.0:
+                # per-node namespacing: two nodes hosting one model name
+                # stay separate entries in the epoch's UXCost
+                d = delta.model(f"n{node.node_id}.{name}")
+                d.frames = f - pf
+                d.violated = v - pv
+                d.energy_j = e - pe
+                d.worst_energy_j = w - pw
+            nf += f - pf
+            nv += v - pv
+        prev[node.node_id] = snap
+        node_frames[node.node_id] = nf
+        node_dlv[node.node_id] = nv / nf if nf > 0 else 0.0
+    frames = sum(st.frames for st in delta.per_model.values())
+    violated = sum(st.violated for st in delta.per_model.values())
+    return TelemetryWindow(
+        t0=float(epoch), t1=float(epoch + 1), frames=frames,
+        violated=violated,
+        dlv_rate=violated / frames if frames else 0.0,
+        uxcost=uxcost(delta), node_dlv=node_dlv, node_frames=node_frames,
+        backlog_p50=0.0, backlog_p90=0.0, backlog_max=0.0,
+        migrations=0, xfer_j=0.0, stream_uxcost={},
+        n_models=sum(1 for st in delta.per_model.values() if st.frames))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--duration", type=float, default=4.0)
     ap.add_argument("--policy", default="score",
-                    choices=("round_robin", "least_loaded", "score"))
+                    choices=("round_robin", "least_loaded", "score",
+                             "tuned_score"))
+    ap.add_argument("--epochs", type=int, default=0, help=(
+        "serving epochs (re-place + serve + feed telemetry); defaults to "
+        "3 for tuned_score, 1 otherwise"))
     args = ap.parse_args()
+    if args.epochs <= 0:
+        args.epochs = 3 if args.policy == "tuned_score" else 1
 
     # two nodes with different virtual hardware: a big/fast node and a
     # frugal node of small slices — the capacity heterogeneity the
@@ -119,54 +175,77 @@ def main() -> None:
     ]
 
     policy = make_policy(args.policy)
-    queues = {n.node_id: RequestQueue(clock=lambda: 0.0) for n in nodes}
-    placements = []
-    for i, stream in enumerate(streams):
-        nid = policy.place(stream, nodes)
-        node = next(n for n in nodes if n.node_id == nid)
-        node.assign(stream)
-        # one engine hosts at most one queue stream per model name
-        if stream.model not in queues[nid].streams:
-            queues[nid].add_stream(stream.model, fps=stream.fps, batch=1,
-                                   seq=stream.seq, vocab=128)
-        else:
-            st = queues[nid].streams[stream.model]
-            st["fps"] += stream.fps          # fold arrival rates, but keep
-            # the tightest *original* per-frame deadline — the summed rate
-            # is not a deadline
-            st["deadline"] = min(st["deadline"], 1.0 / stream.fps)
-        placements.append((i, stream.model, stream.fps, node.name))
+    rng = np.random.default_rng(0)           # tuner distant-sample stream
+    per_epoch_s = args.duration / args.epochs
+    prev: dict[int, tuple] = {}
+    print(f"[serve_fleet] policy={policy.name}, {args.epochs} epoch(s) x "
+          f"{per_epoch_s:.2f}s")
+    for epoch in range(args.epochs):
+        # each epoch re-places every stream with the router's current
+        # weights on fresh queues — the placement lever the tuner turns
+        for node in nodes:
+            node.streams = []
+            node.offered_s = 0.0
+        queues = {n.node_id: RequestQueue(clock=lambda: 0.0)
+                  for n in nodes}
+        placements = []
+        for i, stream in enumerate(streams):
+            nid = policy.place(stream, nodes)
+            node = next(n for n in nodes if n.node_id == nid)
+            node.assign(stream)
+            # one engine hosts at most one queue stream per model name
+            if stream.model not in queues[nid].streams:
+                queues[nid].add_stream(stream.model, fps=stream.fps,
+                                       batch=1, seq=stream.seq, vocab=128)
+            else:
+                st = queues[nid].streams[stream.model]
+                st["fps"] += stream.fps      # fold arrival rates, but keep
+                # the tightest *original* per-frame deadline — the summed
+                # rate is not a deadline
+                st["deadline"] = min(st["deadline"], 1.0 / stream.fps)
+            placements.append((i, stream.model, stream.fps, node.name))
 
-    print(f"[serve_fleet] policy={policy.name}")
-    for i, model, fps, where in placements:
-        print(f"[serve_fleet]   stream {i}: {model:>9s} @{fps:4.1f}fps "
-              f"-> node {where}")
+        for i, model, fps, where in placements:
+            print(f"[serve_fleet]   epoch {epoch} stream {i}: "
+                  f"{model:>9s} @{fps:4.1f}fps -> node {where}")
 
-    # drive every node's engine concurrently (one thread per node, like a
-    # real fleet): each thread owns exactly one engine + queue, so there is
-    # no shared mutable state between them; results are collected per node
-    # and merged in node order after the join, keeping output and fleet
-    # stats deterministic regardless of thread scheduling
-    active = [n for n in nodes if n.streams]
-    for node in nodes:
-        if node not in active:
-            print(f"[serve_fleet] node {node.name}: idle")
-    with ThreadPoolExecutor(max_workers=max(len(active), 1)) as pool:
-        futures = {
-            node.node_id: pool.submit(node.engine.run,
-                                      queues[node.node_id],
-                                      duration_s=args.duration)
-            for node in active
-        }
-        reports = {nid: fut.result() for nid, fut in futures.items()}
+        # drive every node's engine concurrently (one thread per node,
+        # like a real fleet): each thread owns exactly one engine + queue,
+        # so there is no shared mutable state between them; results are
+        # collected per node and merged in node order after the join,
+        # keeping output and fleet stats deterministic regardless of
+        # thread scheduling
+        active = [n for n in nodes if n.streams]
+        for node in nodes:
+            if node not in active:
+                print(f"[serve_fleet] node {node.name}: idle")
+        with ThreadPoolExecutor(max_workers=max(len(active), 1)) as pool:
+            futures = {
+                node.node_id: pool.submit(node.engine.run,
+                                          queues[node.node_id],
+                                          duration_s=per_epoch_s)
+                for node in active
+            }
+            reports = {nid: fut.result() for nid, fut in futures.items()}
+        for node in active:                   # node order: deterministic
+            print(f"[serve_fleet] node {node.name}: "
+                  f"{reports[node.node_id].summary()}")
+
+        win = epoch_window(epoch, nodes, prev)
+        on_window = getattr(policy, "on_window", None)
+        if on_window is not None:
+            on_window(win, rng)
+            print(f"[serve_fleet]   epoch {epoch}: DLV={win.dlv_rate:.3f} "
+                  f"-> weights "
+                  f"{[round(w, 3) for w in policy.weights]} "
+                  f"(commits={policy.probe.commits})")
+
     fleet_stats = WindowStats()
-    for node in active:                       # node order: deterministic
-        print(f"[serve_fleet] node {node.name}: "
-              f"{reports[node.node_id].summary()}")
+    for node in nodes:                        # node order: deterministic
         fleet_stats.merge(node.engine.stats)
     print(f"[serve_fleet] fleet UXCost = {uxcost(fleet_stats):.4f} over "
           f"{sum(st.frames for st in fleet_stats.per_model.values())} frames "
-          f"({len(active)} nodes in parallel)")
+          f"({len(nodes)} nodes, {args.epochs} epochs)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: compare CI sweep outputs against a committed
+baseline with a tolerance band.
+
+The CI benchmark smokes (``scripts/ci.sh``) write JSON artifacts whose
+headline metrics are improvement *ratios* — higher is better:
+
+  * ``rr_over_score``     — round-robin UXCost / score-routing UXCost
+                            (ci_fleet_sweep.json)
+  * ``whole_over_split``  — whole-pipeline UXCost / stage-split UXCost
+                            (ci_cascade_split.json)
+  * ``tuned_over_static`` — static-weights UXCost / online-tuned UXCost
+                            (ci_fleet_sweep.json, drift section)
+
+This script loads the artifacts, extracts those metrics, and fails (exit
+nonzero) when any falls below ``baseline * (1 - tolerance)``.  The CI
+runs are deterministic (fixed seeds, fixed configs), so drift within the
+band can only come from intentional code changes; the band exists so
+benign scheduler/router improvements that shuffle placements slightly do
+not demand a baseline refresh, while real regressions fail loudly.
+
+Improvements beyond the band are reported (not failed) with a reminder to
+refresh the baseline:
+
+    PYTHONPATH=src python scripts/check_bench.py [--artifacts DIR]
+    PYTHONPATH=src python scripts/check_bench.py --update   # refresh
+
+``--update`` rewrites the baseline from the current artifacts, preserving
+the configured tolerances.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks", "baselines",
+                                "ci_baseline.json")
+
+#: metric name -> (artifact file, path inside the artifact json)
+METRICS = {
+    "rr_over_score": ("ci_fleet_sweep.json", ("rr_over_score",)),
+    "whole_over_split": ("ci_cascade_split.json", ("whole_over_split",)),
+    "tuned_over_static": ("ci_fleet_sweep.json",
+                          ("drift", "tuned_over_static")),
+}
+
+
+def extract(artifacts_dir: str) -> dict[str, float]:
+    """Pull every gated metric out of the CI artifacts (all must exist)."""
+    out: dict[str, float] = {}
+    cache: dict[str, dict] = {}
+    for name, (fname, path) in METRICS.items():
+        fpath = os.path.join(artifacts_dir, fname)
+        if fname not in cache:
+            try:
+                with open(fpath) as f:
+                    cache[fname] = json.load(f)
+            except FileNotFoundError:
+                sys.exit(f"check_bench: missing artifact {fpath} — run the "
+                         "CI benchmark stages first (scripts/ci.sh)")
+        node = cache[fname]
+        for key in path:
+            if key not in node:
+                sys.exit(f"check_bench: {fname} has no {'.'.join(path)} — "
+                         "artifact predates this metric; re-run the sweep")
+            node = node[key]
+        out[name] = float(node)
+    return out
+
+
+def check(values: dict[str, float], baseline: dict) -> int:
+    """Compare values against the baseline; returns the exit code."""
+    base = baseline["metrics"]
+    tol = baseline["tolerance"]
+    failures = []
+    for name, value in sorted(values.items()):
+        if name not in base:
+            print(f"check_bench: NEW    {name} = {value:.4f} "
+                  "(not in baseline — run --update to start gating it)")
+            continue
+        b = float(base[name])
+        t = float(tol.get(name, baseline.get("default_tolerance", 0.1)))
+        floor = b * (1.0 - t)
+        if value < floor:
+            failures.append((name, value, b, floor))
+            print(f"check_bench: FAIL   {name} = {value:.4f} < floor "
+                  f"{floor:.4f} (baseline {b:.4f}, tolerance {t:.0%})")
+        elif value > b * (1.0 + t):
+            print(f"check_bench: BETTER {name} = {value:.4f} > baseline "
+                  f"{b:.4f} +{t:.0%} — consider refreshing the baseline "
+                  "(scripts/check_bench.py --update)")
+        else:
+            print(f"check_bench: ok     {name} = {value:.4f} "
+                  f"(baseline {b:.4f}, floor {floor:.4f})")
+    if failures:
+        names = ", ".join(f[0] for f in failures)
+        print(f"check_bench: {len(failures)} regression(s): {names}",
+              file=sys.stderr)
+        return 1
+    print(f"check_bench: ok — {len(values)} metrics within tolerance")
+    return 0
+
+
+def update(values: dict[str, float], baseline_path: str,
+           old: dict | None) -> None:
+    baseline = {
+        "description": ("CI benchmark baselines: improvement ratios from "
+                        "the fixed-seed CI sweeps; refreshed via "
+                        "scripts/check_bench.py --update"),
+        "metrics": {k: round(v, 6) for k, v in sorted(values.items())},
+        "tolerance": (old or {}).get("tolerance", {
+            name: 0.1 for name in METRICS}),
+    }
+    os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+    with open(baseline_path, "w") as f:
+        json.dump(baseline, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"check_bench: baseline updated -> {baseline_path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--artifacts", default="benchmarks/artifacts",
+                    help="directory holding the ci_*.json artifacts")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline json path")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from current artifacts")
+    args = ap.parse_args(argv)
+    values = extract(args.artifacts)
+    old = None
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            old = json.load(f)
+    if args.update:
+        update(values, args.baseline, old)
+        return 0
+    if old is None:
+        sys.exit(f"check_bench: no baseline at {args.baseline} — commit one "
+                 "via scripts/check_bench.py --update")
+    return check(values, old)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

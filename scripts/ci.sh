@@ -1,26 +1,101 @@
 #!/usr/bin/env bash
-# CI smoke entrypoint: tier-1 tests + one fast scenario-sweep benchmark.
-# Exits nonzero on any failure; suitable for any CI runner.
+# CI entrypoint: lint + tier-1 tests + docs checks + benchmark smokes with
+# regression gating, organized as named stages with per-stage wall times.
 #
 #   scripts/ci.sh [artifact-dir]
+#
+# Modes:
+#   CI_FAST=1 scripts/ci.sh    fast mode (PRs): lint + tests + docs checks
+#   scripts/ci.sh              full mode (main): + benchmark smokes + the
+#                              check_bench.py baseline comparison
+#
+# Exits nonzero on any failure; suitable for any CI runner.  Needs no
+# install step: the repo imports via PYTHONPATH (the `pip install -e .`
+# path works too, but CI stays install-free).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 ARTIFACTS="${1:-benchmarks/artifacts}"
 mkdir -p "$ARTIFACTS"
-
-# package import works either via `pip install -e .` or the PYTHONPATH hack;
-# CI uses the latter so it needs no install step
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1 tests ==="
-python -m pytest -x -q
+CI_FAST="${CI_FAST:-0}"
+STAGE_NAMES=()
+STAGE_TIMES=()
 
-echo "=== scenario sweep (fast) ==="
-python -m benchmarks.run --only scenario_sweep \
-    --seed 0 --duration 1.5 --json "$ARTIFACTS/ci_scenario_sweep.json"
+stage() {
+    local name="$1"
+    shift
+    echo
+    echo "=== ${name} ==="
+    local t0=$SECONDS
+    "$@"
+    local dt=$(( SECONDS - t0 ))
+    STAGE_NAMES+=("$name")
+    STAGE_TIMES+=("$dt")
+    echo "--- ${name}: ${dt}s"
+}
 
-python - "$ARTIFACTS/ci_scenario_sweep.json" <<'EOF'
+report() {
+    echo
+    echo "=== stage times ==="
+    local i
+    for i in "${!STAGE_NAMES[@]}"; do
+        printf '  %-18s %4ss\n' "${STAGE_NAMES[$i]}" "${STAGE_TIMES[$i]}"
+    done
+}
+trap report EXIT
+
+# ---------------------------------------------------------------- stages
+lint() {
+    # syntax/import rot fails fast, before the test stage
+    python -m compileall -q src benchmarks examples scripts tests
+    if python -c "import pyflakes" 2>/dev/null; then
+        # package __init__.py files re-export their submodule surface on
+        # purpose; every other pyflakes finding is a failure
+        local out
+        out=$(python -m pyflakes src benchmarks examples scripts tests \
+              | grep -v "__init__.py:.*imported but unused" || true)
+        if [ -n "$out" ]; then
+            echo "$out"
+            echo "lint: pyflakes findings above" >&2
+            return 1
+        fi
+        echo "lint: compileall + pyflakes ok"
+    else
+        echo "lint: compileall ok (pyflakes not installed, skipped)"
+    fi
+}
+
+tests() {
+    python -m pytest -x -q
+}
+
+docs_refs() {
+    python scripts/check_docs.py docs
+}
+
+pydoc_render() {
+    python - <<'EOF'
+import pydoc
+for mod in ("repro.cluster", "repro.cluster.fleet", "repro.cluster.router",
+            "repro.cluster.node", "repro.cluster.builder",
+            "repro.cluster.telemetry", "repro.cluster.trace",
+            "repro.scenarios", "repro.scenarios.builder",
+            "repro.scenarios.arrivals", "repro.scenarios.phases",
+            "repro.scenarios.trace", "repro.scenarios.registry",
+            "repro.scenarios.fuzzer", "repro.core.costmodel",
+            "repro.core.adaptivity"):
+    text = pydoc.plain(pydoc.render_doc(mod))  # raises on import failure
+    assert "NAME" in text and "DESCRIPTION" in text, mod
+print("pydoc: ok — all public modules render")
+EOF
+}
+
+scenario_sweep() {
+    python -m benchmarks.run --only scenario_sweep \
+        --seed 0 --duration 1.5 --json "$ARTIFACTS/ci_scenario_sweep.json"
+    python - "$ARTIFACTS/ci_scenario_sweep.json" <<'EOF'
 import json, sys
 d = json.load(open(sys.argv[1]))
 if d["failures"]:
@@ -30,9 +105,11 @@ if not sweep["all_replays_exact"]:
     sys.exit("trace replay determinism broken")
 print("ci: ok —", len(sweep["rows"]), "fuzzed scenarios, replays exact")
 EOF
+}
 
-echo "=== fleet sweep (fast, 4 nodes + churn) ==="
-python - "$ARTIFACTS/ci_fleet_sweep.json" <<'EOF'
+fleet_sweep() {
+    # 4 nodes + churn; includes the drift-tuner arm (8 nodes, CI-sized)
+    python - "$ARTIFACTS/ci_fleet_sweep.json" <<'EOF'
 import json, sys
 from benchmarks.fleet_sweep import run
 out = run(duration_s=1.5, seed=1, n_nodes=4, n_streams=28)
@@ -41,13 +118,22 @@ if not out["replay_exact"]:
     sys.exit("fleet trace replay determinism broken")
 if not out["score_beats_round_robin"]:
     sys.exit("score-driven routing did not beat round-robin")
+d = out["drift"]
+if not d["replay_exact"]:
+    sys.exit("tuned fleet trace replay determinism broken")
+if not d["tuned_beats_static"]:
+    sys.exit("online-tuned routing did worse than static score weights "
+             "on the drifting-workload fleet")
 print(f"ci: ok — {out['n_nodes']}-node fleet (+churn), "
       f"{out['n_streams']} streams, "
-      f"UXCost(rr)/UXCost(score)={out['rr_over_score']:.3f}, replay exact")
+      f"UXCost(rr)/UXCost(score)={out['rr_over_score']:.3f}, "
+      f"UXCost(static)/UXCost(tuned)={d['tuned_over_static']:.3f} "
+      f"({d['n_seeds']} drift seeds), replays exact")
 EOF
+}
 
-echo "=== cascade stage-split smoke (8 nodes + drain) ==="
-python - "$ARTIFACTS/ci_cascade_split.json" <<'EOF'
+cascade_split() {
+    python - "$ARTIFACTS/ci_cascade_split.json" <<'EOF'
 import json, sys
 from benchmarks.fleet_sweep import run_cascade
 # 8 nodes: stage-splitting needs node diversity — 4-node fleets leave too
@@ -64,21 +150,25 @@ print(f"ci: ok — cascade fleets ({out['n_seeds']} seeds), "
       f"UXCost(whole)/UXCost(split)={out['whole_over_split']:.3f}, "
       "replays exact")
 EOF
+}
 
-echo "=== docs cross-references ==="
-python scripts/check_docs.py docs
+bench_check() {
+    python scripts/check_bench.py --artifacts "$ARTIFACTS"
+}
 
-echo "=== pydoc render check (public fleet/scenario APIs) ==="
-python - <<'EOF'
-import pydoc
-for mod in ("repro.cluster", "repro.cluster.fleet", "repro.cluster.router",
-            "repro.cluster.node", "repro.cluster.builder",
-            "repro.cluster.trace", "repro.scenarios",
-            "repro.scenarios.builder", "repro.scenarios.arrivals",
-            "repro.scenarios.phases", "repro.scenarios.trace",
-            "repro.scenarios.registry", "repro.scenarios.fuzzer",
-            "repro.core.costmodel"):
-    text = pydoc.plain(pydoc.render_doc(mod))  # raises on import failure
-    assert "NAME" in text and "DESCRIPTION" in text, mod
-print("pydoc: ok — all public modules render")
-EOF
+# ------------------------------------------------------------------ plan
+stage lint           lint
+stage tests          tests
+stage docs_refs      docs_refs
+
+if [ "$CI_FAST" = "1" ]; then
+    echo
+    echo "ci: fast mode (CI_FAST=1) — benchmark smokes skipped"
+    exit 0
+fi
+
+stage pydoc_render   pydoc_render
+stage scenario_sweep scenario_sweep
+stage fleet_sweep    fleet_sweep
+stage cascade_split  cascade_split
+stage bench_check    bench_check

@@ -19,8 +19,10 @@ from .builder import (FleetEvent, FleetScenario, FleetScenarioBuilder,
 from .fleet import (FleetResult, FleetSimulator, StreamView,
                     canonical_stream_model, node_seed, run_fleet)
 from .node import FleetNode, NodeTelemetry, StreamCost
-from .router import (POLICIES, LeastLoadedRouter, RoundRobinRouter,
-                     RouterPolicy, ScoreDrivenRouter, make_policy)
+from .router import (POLICIES, STATIC_WEIGHTS, WEIGHT_NAMES,
+                     LeastLoadedRouter, RoundRobinRouter, RouterPolicy,
+                     ScoreDrivenRouter, TunedScoreRouter, make_policy)
+from .telemetry import FleetTelemetry, TelemetryWindow
 from .trace import (FLEET_EVENT_KINDS, FLEET_TRACE_VERSION, FleetTrace,
                     FleetTraceRecorder, dumps, load_trace, loads, save_trace)
 
@@ -30,8 +32,10 @@ __all__ = [
     "FleetResult", "FleetSimulator", "StreamView", "canonical_stream_model",
     "node_seed", "run_fleet",
     "FleetNode", "NodeTelemetry", "StreamCost",
-    "POLICIES", "LeastLoadedRouter", "RoundRobinRouter", "RouterPolicy",
-    "ScoreDrivenRouter", "make_policy",
+    "POLICIES", "STATIC_WEIGHTS", "WEIGHT_NAMES", "LeastLoadedRouter",
+    "RoundRobinRouter", "RouterPolicy", "ScoreDrivenRouter",
+    "TunedScoreRouter", "make_policy",
+    "FleetTelemetry", "TelemetryWindow",
     "FLEET_EVENT_KINDS", "FLEET_TRACE_VERSION", "FleetTrace",
     "FleetTraceRecorder", "dumps", "load_trace", "loads", "save_trace",
 ]

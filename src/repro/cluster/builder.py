@@ -1,8 +1,9 @@
 """Fleet scenarios: node membership + stream arrivals as declarative data.
 
 A :class:`FleetScenario` is an ordered list of timed fleet events — nodes
-joining/leaving/draining, streams arriving — exactly the external input a
-multi-node deployment sees.  The builder shards existing single-node
+joining/leaving/draining, streams arriving, fleet-level phase events
+(stream-addressed workload mutations such as diurnal load shifts) —
+exactly the external input a multi-node deployment sees.  The builder shards existing single-node
 workload definitions across the fleet: a registry scenario or a fuzzer
 sample splits into its independent pipelines (a head model plus its
 cascade children), each becoming one routable stream whose stages the
@@ -36,7 +37,7 @@ class FleetEvent:
     """One timed fleet-level event (serializable kind + payload)."""
 
     t: float
-    kind: str           # node_join | node_leave | node_drain | stream
+    kind: str   # node_join | node_leave | node_drain | stream | phase
     payload: dict
 
     def to_config(self) -> dict:
@@ -136,6 +137,44 @@ class FleetScenarioBuilder:
     def _check_node(self, node_id: int) -> None:
         if node_id not in self._node_ids:
             raise ScenarioError(f"unknown fleet node id {node_id}")
+
+    # ------------------------------------------------------------- phases
+    #: fleet-level phase-action kinds: mutations that apply uniformly to a
+    #: *stream* (every stage of it, wherever placed).  Model-addressed
+    #: actions (set_fps, set_trigger_prob, join, leave) stay node-local —
+    #: their model names are namespaced per placement, which a scenario
+    #: cannot know ahead of routing.
+    FLEET_PHASE_KINDS = ("scale_fps",)
+
+    def phase(self, action, at: float,
+              sids: "list[int] | None" = None) -> "FleetScenarioBuilder":
+        """A timed fleet-level workload mutation: apply ``action`` (a
+        ``repro.scenarios.phases.PhaseAction`` or its config dict) to the
+        streams in ``sids`` (None = every stream declared so far) at time
+        ``at``.  The fleet forwards the action to each targeted stream's
+        hosting node(s), re-arms the touched nodes' (alpha, beta) probes,
+        and — under a tuned router — re-arms the fleet weight tuner: a
+        phase event is a workload change by definition."""
+        cfg = action if isinstance(action, dict) else action.to_config()
+        if cfg.get("kind") not in self.FLEET_PHASE_KINDS:
+            raise ScenarioError(
+                f"fleet phase supports kinds {self.FLEET_PHASE_KINDS}, "
+                f"got {cfg.get('kind')!r}")
+        if cfg.get("models") is not None:
+            raise ScenarioError("fleet phase actions target streams via "
+                                "`sids`, not model names (placement "
+                                "namespacing owns the names)")
+        if sids is not None:
+            unknown = [s for s in sids if not 0 <= s < self._next_sid]
+            if unknown:
+                raise ScenarioError(f"phase targets unknown stream ids "
+                                    f"{unknown}")
+            sids = [int(s) for s in sids]
+        payload: dict = {"action": dict(cfg)}
+        if sids is not None:
+            payload["sids"] = sids
+        self._events.append(FleetEvent(float(at), "phase", payload))
+        return self
 
     # ----------------------------------------------------------- streams
     def add_stream(self, entries: "list[dict] | list[ModelEntry]",

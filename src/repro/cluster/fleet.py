@@ -47,6 +47,21 @@ Every placement-affecting event re-triggers the (alpha, beta) adaptivity
 probe on the touched nodes (``DreamScheduler.retrigger_probe``), mirroring
 the paper's workload-change response.
 
+Two adaptivity loops close over the fleet clock:
+
+  * **fleet phase events** (``FleetScenarioBuilder.phase``) are
+    stream-addressed workload mutations (e.g. diurnal ``scale_fps``
+    shifts) forwarded to the hosting nodes as node-local phase actions;
+    they re-arm the touched nodes' probes and update the stream's own
+    definition so later migrations re-place at the shifted rate.
+  * **tune ticks** (``tune_every_s``) close a fleet telemetry window
+    (:class:`~.telemetry.FleetTelemetry`) and feed it to the routing
+    policy's weight tuner when it has one (``tuned_score``): the
+    fleet-scale analogue of the per-node (alpha, beta) probe, re-armed on
+    membership churn and phase events.  Tuner decisions are recorded in
+    the trace, so replay installs the recorded weights and never
+    constructs telemetry or steps the probe.
+
 With ``record=True`` the run emits a :class:`~.trace.FleetTrace` capturing
 inputs *and* routing decisions (stage-level when splitting); constructing
 a FleetSimulator from that trace (``replay=...``) bypasses the router and
@@ -85,10 +100,13 @@ from repro.core.uxcost import (WindowStats, overall_dlv_rate,
                                overall_norm_energy, uxcost)
 from repro.scenarios.builder import ModelEntry
 
+from repro.scenarios.phases import PhaseAction
+
 from .builder import FleetScenario
 from .node import FleetNode, StreamCost
 from .router import (RouterPolicy, ScoreDrivenRouter, argmin_node,
                      make_policy)
+from .telemetry import FleetTelemetry
 from .trace import FleetTrace, FleetTraceRecorder
 
 #: domain-separation constant for stage-split cascade trigger draws
@@ -147,8 +165,11 @@ class StreamView:
 
     def __init__(self, sid: int, entry_cfgs: list[dict]):
         self.sid = sid
-        self.entry_cfgs = entry_cfgs
-        self.entries = [ModelEntry.from_config(c) for c in entry_cfgs]
+        # own the configs: phase events rescale them in place, and the
+        # originals belong to the scenario (shared across runs) and to the
+        # recorded trace (which must keep the admission-time workload)
+        self.entry_cfgs = copy.deepcopy(entry_cfgs)
+        self.entries = [ModelEntry.from_config(c) for c in self.entry_cfgs]
         self._graphs: Optional[list] = None
         self._cost_by_system: dict[object, StreamCost] = {}
         self._stage_graphs: Optional[list] = None
@@ -175,6 +196,20 @@ class StreamView:
     @property
     def head_period_s(self) -> float:
         return 1.0 / self.entries[0].fps
+
+    def rescale_fps(self, factor: float) -> None:
+        """Apply a fleet phase event's FPS rescale to the stream's *own*
+        definition, so later re-placements (drain/leave/rebalance
+        migrations) materialize specs at the shifted rate instead of
+        silently reverting to the admission-time load.  Cost caches that
+        embed rates are invalidated; cascade topology and per-stage graphs
+        (rate-independent) survive."""
+        for cfg in self.entry_cfgs:
+            cfg["fps"] = float(cfg["fps"]) * factor
+        self.entries = [ModelEntry.from_config(c) for c in self.entry_cfgs]
+        self._graphs = None
+        self._cost_by_system = {}
+        self._stage_cost = {}
 
     # ------------------------------------------------------ whole-stream
     def _graph_loads(self) -> list:
@@ -295,6 +330,10 @@ class FleetResult:
     stage_migrations: int = 0    # migrations that moved a single stage
     trigger_transfers: int = 0   # cascade triggers that crossed nodes
     xfer_energy_j: float = 0.0   # total transfer energy charged to UXCost
+    weights: Optional[tuple] = None   # final router weights (score family)
+    tuner_windows: int = 0       # telemetry windows the tuner consumed
+    tuner_commits: int = 0       # probe mini-cycles that moved the center
+    tuner_retriggers: int = 0    # tuner re-arms (churn + phase events)
 
     def summary(self) -> str:
         return (f"fleet[{self.policy:>11s}] nodes={self.n_nodes:<3d} "
@@ -321,6 +360,7 @@ class FleetSimulator:
         rebalance_hysteresis: float = 0.15,
         transfer: Optional[TransferModel] = None,
         split_stages: bool = False,
+        tune_every_s: Optional[float] = None,
     ):
         if (scenario is None) == (replay is None):
             raise ValueError("pass exactly one of scenario or replay")
@@ -333,6 +373,7 @@ class FleetSimulator:
             seed = int(meta["seed"])
             window_s = float(meta["window_s"])
             rebalance_every_s = None    # decisions come from the trace
+            tune_every_s = None         # recorded `tune` events carry them
             transfer = (TransferModel.from_config(meta["transfer"])
                         if "transfer" in meta else None)
             split_stages = bool(meta.get("split", False))
@@ -364,8 +405,18 @@ class FleetSimulator:
                     f"{self._scheduler_name!r})")
         if rebalance_every_s is not None and not rebalance_every_s > 0:
             raise ValueError("rebalance_every_s must be positive")
+        if tune_every_s is not None and not tune_every_s > 0:
+            raise ValueError("tune_every_s must be positive")
         self.rebalance_every_s = rebalance_every_s
         self.rebalance_hysteresis = rebalance_hysteresis
+        self.tune_every_s = tune_every_s
+        #: windowed fleet telemetry, fed at tune ticks (live runs only —
+        #: replay bypasses telemetry and tuner entirely)
+        self.telemetry = FleetTelemetry(canonical=canonical_stream_model)
+        #: dedicated RNG stream for the weight tuner's distant samples;
+        #: replay never draws from it (tune decisions come from the trace)
+        self._tuner_rng = np.random.default_rng([seed, 0x7D5E])
+        self.tuner_retriggers = 0
         self.nodes: dict[int, FleetNode] = {}
         self.streams: dict[int, StreamView] = {}
         self.stream_node: dict[int, int] = {}   # sid -> hosting node id
@@ -403,6 +454,10 @@ class FleetSimulator:
                 meta["transfer"] = self.transfer.to_config()
             if self.split:
                 meta["split"] = True
+            if self.tune_every_s is not None:
+                # documentation only: replay takes weights from the
+                # recorded `tune` events, never from a live tuner
+                meta["tune_every_s"] = self.tune_every_s
             self.recorder = FleetTraceRecorder(meta)
 
     # ---------------------------------------------------------- plumbing
@@ -633,6 +688,15 @@ class FleetSimulator:
             cands, lambda n: self._stage_score_full(sid, k, n, best_iso))
 
     # ------------------------------------------------------ event handlers
+    def _rearm_tuner(self) -> None:
+        """Membership churn / phase events re-arm the fleet weight tuner
+        (live runs only: replay installs recorded weights instead) — the
+        fleet-level mirror of each node's ``retrigger_probe``."""
+        rearm = getattr(self.policy, "rearm", None)
+        if self.replay is None and rearm is not None:
+            rearm()
+            self.tuner_retriggers += 1
+
     def _on_node_join(self, t: float, ev: dict) -> None:
         nid, system = int(ev["node"]), ev["system"]
         if nid in self.nodes:
@@ -644,6 +708,7 @@ class FleetSimulator:
             window_s=self.window_s, at_t=t)
         if self.recorder is not None:
             self.recorder.node_join(t, nid, system)
+        self._rearm_tuner()
 
     def _on_node_leave(self, t: float, ev: dict) -> None:
         node = self.nodes[int(ev["node"])]
@@ -652,6 +717,7 @@ class FleetSimulator:
         if self.replay is None:
             self._migrate_all_off(node, t)
         node.alive = False
+        self._rearm_tuner()
 
     def _on_node_drain(self, t: float, ev: dict) -> None:
         node = self.nodes[int(ev["node"])]
@@ -660,6 +726,73 @@ class FleetSimulator:
         node.draining = True
         if self.replay is None:
             self._migrate_all_off(node, t)
+        self._rearm_tuner()
+
+    def _on_phase(self, t: float, ev: dict) -> None:
+        """Fleet-level phase event: forward the (stream-addressed) action
+        to every targeted stream's hosting node(s) as a node-local phase
+        action on its namespaced model names.  Runs identically live and
+        in replay — placements at time ``t`` are identical, so the
+        forwarded node-local actions are too.  Streams that have not
+        arrived yet are skipped (a phase cannot retarget the future); the
+        touched nodes' (alpha, beta) probes re-arm, and so does the fleet
+        weight tuner."""
+        action_cfg = dict(ev["action"])
+        sids = ev.get("sids")
+        targets = (sorted(self.streams) if sids is None
+                   else [int(s) for s in sids])
+        for sid in targets:
+            sv = self.streams.get(sid)
+            if sv is None:
+                continue
+            by_node: dict[int, list[str]] = {}
+            if self.split:
+                for k in range(sv.n_stages):
+                    nid = self.stage_node.get((sid, k))
+                    if nid is not None:
+                        by_node.setdefault(nid, []).append(
+                            self.stage_name[(sid, k)])
+            else:
+                nid = self.stream_node.get(sid)
+                if nid is not None:
+                    by_node[nid] = list(self.nodes[nid].placements.get(
+                        sid, ()))
+            for nid in sorted(by_node):
+                node = self.nodes[nid]
+                if not node.alive or not by_node[nid]:
+                    continue
+                node.sim.apply_action(
+                    PhaseAction.from_config(
+                        dict(action_cfg, models=by_node[nid])), t)
+                node._recompute_offered()
+                node.retrigger_probe()
+            if action_cfg["kind"] == "scale_fps":
+                # keep the stream's own definition in sync so later
+                # migrations re-place at the shifted rate
+                sv.rescale_fps(float(action_cfg["factor"]))
+        if self.recorder is not None:
+            self.recorder.phase(t, action_cfg, sids)
+        self._rearm_tuner()
+
+    def _on_tune(self, t: float, ev: dict) -> None:
+        """Live: a synthetic tune tick — close a telemetry window and feed
+        it to the weight tuner, recording the committed weights.  Replay: a
+        recorded tuner decision — install the weights directly, bypassing
+        telemetry and probe entirely."""
+        if self.replay is not None:
+            set_weights = getattr(self.policy, "set_weights", None)
+            if set_weights is not None:
+                set_weights(ev["weights"])
+            return
+        win = self.telemetry.observe(t, self.nodes, self.migrations,
+                                     sum(self.xfer_energy.values()))
+        on_window = getattr(self.policy, "on_window", None)
+        if on_window is None:
+            return                      # telemetry-only tick
+        weights = on_window(win, self._tuner_rng)
+        if weights is not None and self.recorder is not None:
+            self.recorder.tune(t, list(weights), window_uxcost=win.uxcost,
+                               probing=self.policy.probe.probing)
 
     def _migrate_all_off(self, node: FleetNode, t: float) -> None:
         for key in sorted(node.placements):
@@ -816,14 +949,22 @@ class FleetSimulator:
     # ----------------------------------------------------------------- run
     def _event_stream(self) -> list[tuple[float, str, dict]]:
         events = list(self._events)
+        # synthetic tune ticks precede same-time rebalance ticks (appended
+        # first; the sort below is stable), so a rebalance always runs
+        # under the weights the tuner just committed
+        if self.tune_every_s is not None:
+            k = 1
+            while k * self.tune_every_s < self.duration_s:
+                events.append((k * self.tune_every_s, "tune", {"k": k}))
+                k += 1
         if self.rebalance_every_s is not None:
-            k, seq = 1, 0
+            k = 1
             while k * self.rebalance_every_s < self.duration_s:
                 events.append((k * self.rebalance_every_s,
                                "rebalance", {"k": k}))
                 k += 1
         # stable sort keeps same-time events in declaration/record order;
-        # synthetic rebalance ticks land after same-time scenario events
+        # synthetic ticks land after same-time scenario events
         return sorted(events, key=lambda e: e[0])
 
     def run(self) -> FleetResult:
@@ -835,6 +976,8 @@ class FleetSimulator:
             "place": self._on_place,
             "migrate": self._on_migrate,
             "rebalance": self._on_rebalance,
+            "phase": self._on_phase,
+            "tune": self._on_tune,
         }
         for t, kind, ev in self._event_stream():
             if t > self.duration_s:
@@ -911,6 +1054,11 @@ class FleetSimulator:
             stage_migrations=self.stage_migrations,
             trigger_transfers=self.trigger_transfers,
             xfer_energy_j=sum(self.xfer_energy.values()),
+            weights=getattr(self.policy, "weights", None),
+            tuner_windows=getattr(self.policy, "windows_seen", 0),
+            tuner_commits=getattr(
+                getattr(self.policy, "probe", None), "commits", 0),
+            tuner_retriggers=self.tuner_retriggers,
         )
 
 

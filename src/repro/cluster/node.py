@@ -26,7 +26,7 @@ Invariants:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Optional
 
 from repro.core.costmodel import build_cost_table
 from repro.core.simulator import SchedulerBase, SimResult, Simulator

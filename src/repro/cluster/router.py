@@ -14,6 +14,11 @@ Policies:
     combining load, hardware preference (how well the stream's models suit
     the node's WS/OS accelerator mix, weighted by deadline urgency) and the
     node's recent UXCost-window health.
+  * ``tuned_score``   — the same score with weights *learned online*: a
+    coordinate probe over weight multipliers, fed by fleet telemetry
+    windows (see ``repro.cluster.telemetry``), re-armed on membership
+    churn and phase events — the paper's tunable-parameter adaptivity
+    lifted to the fleet layer.
 
 Stage-level placement (``place_stages``) splits a cascade pipeline across
 nodes: the score policy places stages greedily in pipeline order, charging
@@ -29,7 +34,10 @@ though replay short-circuits routing entirely via recorded placements).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from collections import deque
+from typing import Callable, Optional, Sequence
+
+import numpy as np
 
 from .node import FleetNode, StreamCost
 
@@ -114,10 +122,40 @@ URGENCY_CAP = 4.0
 #: decisively larger than the wire bill
 W_XFER = 8.0
 
+#: the routing weight vector, in canonical order.  ``load`` multiplies the
+#: post-placement offered utilization (1.0 statically — the term every
+#: other weight is expressed relative to); the rest are the hand-fixed
+#: constants above.  ``TunedScoreRouter`` learns multipliers on this
+#: vector online from fleet telemetry.
+WEIGHT_NAMES = ("load", "backlog", "pref", "ux", "xfer")
+STATIC_WEIGHTS = (1.0, W_BACKLOG, W_PREF, W_UX, W_XFER)
+
 
 class ScoreDrivenRouter(RouterPolicy):
     name = "score"
     splits_stages = True
+
+    def __init__(self) -> None:
+        (self.w_load, self.w_backlog, self.w_pref, self.w_ux,
+         self.w_xfer) = STATIC_WEIGHTS
+
+    @property
+    def weights(self) -> tuple[float, ...]:
+        """The live weight vector, in ``WEIGHT_NAMES`` order."""
+        return (self.w_load, self.w_backlog, self.w_pref, self.w_ux,
+                self.w_xfer)
+
+    def set_weights(self, weights: Sequence[float]) -> None:
+        """Install a full weight vector (``WEIGHT_NAMES`` order).  Replay
+        applies recorded tuner decisions through this, bypassing the tuner."""
+        w = [float(x) for x in weights]
+        if len(w) != len(WEIGHT_NAMES):
+            raise ValueError(f"expected {len(WEIGHT_NAMES)} weights "
+                             f"{WEIGHT_NAMES}, got {len(w)}")
+        if any(not x >= 0.0 for x in w):
+            raise ValueError(f"score weights must be >= 0, got {w}")
+        (self.w_load, self.w_backlog, self.w_pref, self.w_ux,
+         self.w_xfer) = w
 
     def score(self, stream, node: FleetNode,
               best_iso: float) -> float:
@@ -125,16 +163,29 @@ class ScoreDrivenRouter(RouterPolicy):
         latency across all candidate nodes (preference normalizer)."""
         return self._score(stream.cost_on(node), node, best_iso)
 
-    def _score(self, cost: StreamCost, node: FleetNode,
-               best_iso: float) -> float:
-        tel = node.telemetry()
+    def score_terms(self, cost: StreamCost, node: FleetNode,
+                    best_iso: float,
+                    tel=None) -> tuple[float, float, float, float]:
+        """The weight-independent factors of the node score, in
+        ``WEIGHT_NAMES`` order (sans the transfer term): the score is
+        their dot product with the live weights, which is what lets the
+        tuner re-score a recorded decision under counterfactual weight
+        vectors without re-reading any node state.  ``tel`` lets a caller
+        that already snapshotted the node's telemetry avoid a second
+        walk of its live jobs."""
+        if tel is None:
+            tel = node.telemetry()
         load_after = tel.offered_util + cost.offered_s / tel.n_accs
         pref_penalty = (cost.iso_s / max(best_iso, 1e-12)) - 1.0
         urgency = min(cost.urgency, URGENCY_CAP)
-        return (load_after
-                + W_BACKLOG * tel.backlog_s / tel.n_accs
-                + W_PREF * pref_penalty * urgency
-                + W_UX * min(tel.window_dlv, 1.0))
+        return (load_after, tel.backlog_s / tel.n_accs,
+                pref_penalty * urgency, min(tel.window_dlv, 1.0))
+
+    def _score(self, cost: StreamCost, node: FleetNode,
+               best_iso: float) -> float:
+        t = self.score_terms(cost, node, best_iso)
+        return (self.w_load * t[0] + self.w_backlog * t[1]
+                + self.w_pref * t[2] + self.w_ux * t[3])
 
     def place(self, stream, nodes: Sequence[FleetNode]) -> int:
         best_iso = min(stream.cost_on(n).iso_s for n in nodes)
@@ -146,12 +197,12 @@ class ScoreDrivenRouter(RouterPolicy):
         """Score penalty for putting stage ``k`` on a different node than
         its parent: the per-trigger transfer latency of the parent's output
         activation, relative to the stage's period (how much of every frame
-        interval the wire eats), weighted by W_XFER.  Infinite when the
+        interval the wire eats), weighted by ``w_xfer``.  Infinite when the
         transfer model is absent or has zero bandwidth."""
         if transfer is None or not transfer.enabled:
             return float("inf")
         xfer_s = transfer.transfer_s(stream.act_bytes_into(k))
-        return W_XFER * xfer_s / max(stream.stage_period_s(k), 1e-9)
+        return self.w_xfer * xfer_s / max(stream.stage_period_s(k), 1e-9)
 
     def stage_score(self, stream, k: int, node: FleetNode, best_iso: float,
                     parent_nid: Optional[int], transfer) -> float:
@@ -199,11 +250,197 @@ class WholePipelineScoreRouter(ScoreDrivenRouter):
         return RouterPolicy.place_stages(self, stream, nodes, transfer)
 
 
+#: multiplier-space bounds of the tuned router's probe: the same
+#: constrained [0, 2] box the paper uses for (alpha, beta), applied per
+#: weight as a *multiplier* on its static value — so "1.0 everywhere" is
+#: exactly the hand-fixed ScoreDrivenRouter, and the tuner can at most
+#: double or silence a term.  The load multiplier is floored at 0.25:
+#: hindsight scoring rewards routing toward whatever nodes happened to be
+#: healthy, and a zero capacity term would let the probe collapse onto
+#: them — the floor keeps the static cost model load-bearing.
+TUNE_LO = (0.25, 0.0, 0.0, 0.0, 0.0)
+TUNE_HI = 2.0
+#: coordinate-probe order: the static-estimate term first — under drift
+#: the offline offered-load estimate is exactly the signal that goes
+#: stale, so rebalancing its weight against the live terms (backlog,
+#: health) is where the tuner finds most of its headroom — then hardware
+#: preference, the live signals, and the transfer penalty last.
+TUNE_AXIS_ORDER = (0, 2, 3, 1, 4)
+
+
+class TunedScoreRouter(ScoreDrivenRouter):
+    """Score-driven routing whose weights are *learned online* from fleet
+    telemetry — the fleet-scale analogue of the per-node (alpha, beta)
+    probe.
+
+    The weight vector is parameterized as multipliers on
+    ``STATIC_WEIGHTS`` searched over a constrained box by a
+    :class:`repro.core.adaptivity.CoordinateProbe`.  Candidates are scored
+    in *hindsight* against each telemetry window's realized outcomes: the
+    router records the weight-independent score terms of every placement
+    decision it makes (:meth:`ScoreDrivenRouter.score_terms`), and at each
+    window every candidate vector re-picks a node for every recorded
+    decision, paying the realized deadline-violation rate
+    (``TelemetryWindow.node_dlv`` — the DLV factor of the window's UXCost)
+    of the node it would have chosen.  All candidates are judged on the
+    *same* window, so cross-window drift cannot bias the comparison, and
+    the fleet never deploys an untested candidate — the live router always
+    runs the committed center.  The margin-gated best-wins commit
+    (``CoordinateProbe.step_batch``) moves the center only on a clear win.
+
+    Windows with zero frames, no recorded decisions, or no violations
+    anywhere carry no ranking signal: the router holds its committed
+    weights — a fresh tuner therefore behaves exactly like the static
+    ``ScoreDrivenRouter`` until telemetry says otherwise.
+
+    The fleet simulator drives the loop (``tune_every_s`` ticks) and
+    re-arms the probe on membership churn and phase events
+    (:meth:`rearm`), mirroring ``DreamScheduler.retrigger_probe``.  Tuner
+    decisions are recorded in the fleet trace so replay bypasses the tuner
+    entirely and stays bit-exact.
+    """
+
+    name = "tuned_score"
+    #: cap on retained decision contexts between windows — far above any
+    #: real window's placement count, it only guards the no-tune-ticks
+    #: usage from unbounded growth
+    MAX_DECISIONS = 4096
+
+    def __init__(self, radius: float = 0.5, r_min: float = 0.08,
+                 shrink: float = 0.7, margin: float = 0.3) -> None:
+        super().__init__()
+        from repro.core.adaptivity import CoordinateProbe
+        n = len(STATIC_WEIGHTS)
+        self.probe = CoordinateProbe(
+            center=np.ones(n), lo=np.asarray(TUNE_LO),
+            hi=np.full(n, TUNE_HI), radius=radius, r_min=r_min,
+            shrink=shrink, margin=margin, axis_order=TUNE_AXIS_ORDER)
+        self.windows_seen = 0
+        self.empty_windows = 0
+        self.held_windows = 0      # windows with no ranking signal
+        #: decision contexts recorded since the last window: (node ids,
+        #: terms matrix, marginal offered load per node) per placement
+        #: decision, consumed and cleared every window.  Bounded: a tuned
+        #: policy driven without tune ticks (tune_every_s unset — legal,
+        #: it behaves exactly like the static router) must not accumulate
+        #: contexts forever, so only the most recent window-scale batch
+        #: is retained.
+        self._decisions: "deque[tuple[list[int], np.ndarray, np.ndarray]]" \
+            = deque(maxlen=self.MAX_DECISIONS)
+
+    # ------------------------------------------------- decision recording
+    def place(self, stream, nodes: Sequence[FleetNode]) -> int:
+        """Same argmin as the static router, computed from one pass of
+        score terms per node — which then double as the recorded decision
+        context, so recording costs no extra node scans."""
+        best_iso = min(stream.cost_on(n).iso_s for n in nodes)
+        ids: list[int] = []
+        rows: list[tuple[float, float, float, float]] = []
+        marginal: list[float] = []
+        best_nid, best_key = nodes[0].node_id, None
+        for n in nodes:
+            cost = stream.cost_on(n)
+            tel = n.telemetry()
+            t = self.score_terms(cost, n, best_iso, tel=tel)
+            # same expression order as _score, so the argmin is
+            # bit-identical to ScoreDrivenRouter.place
+            s = (self.w_load * t[0] + self.w_backlog * t[1]
+                 + self.w_pref * t[2] + self.w_ux * t[3])
+            key = (s, n.node_id)
+            if best_key is None or key < best_key:
+                best_nid, best_key = n.node_id, key
+            ids.append(n.node_id)
+            rows.append(t)
+            marginal.append(cost.offered_s / tel.n_accs)
+        self._decisions.append((ids, np.asarray(rows),
+                                np.asarray(marginal)))
+        return best_nid
+
+    # --------------------------------------------------------- tuner loop
+    @property
+    def multipliers(self) -> np.ndarray:
+        """The live multiplier vector (weights / STATIC_WEIGHTS)."""
+        return np.asarray(self.weights) / np.asarray(STATIC_WEIGHTS)
+
+    def _apply(self, mult: np.ndarray) -> None:
+        self.set_weights([m * w for m, w in zip(mult, STATIC_WEIGHTS)])
+
+    #: predicted-overload knee of the hindsight cost: counterfactual
+    #: placements that push a node's accumulated offered utilization past
+    #: this are charged the excess, so a candidate cannot look good by
+    #: piling every decision onto whichever node happened to be healthy
+    OVERLOAD_KNEE = 1.0
+
+    def _hindsight_cost(self, decisions, node_dlv) -> "Callable":
+        """Cost function for the probe: replay the window's recorded
+        placement decisions under a candidate weight vector and charge,
+        per decision, the realized DLV rate of the node the candidate
+        would have picked — plus the predicted overload its *own*
+        counterfactual placements would cause.
+
+        The replay is sequential and capacity-aware: each counterfactual
+        placement adds the stream's marginal offered load to the chosen
+        node's load term for the window's later decisions (the same
+        feedback a deployed router would have had), which is what stops
+        hindsight-greedy candidates from concentrating on the one node
+        that happened to realize zero violations.  Terms matrices are
+        4-wide (no transfer term: whole-stream decisions never pay it);
+        weights are 5-wide."""
+        def cost_fn(mult: np.ndarray) -> float:
+            w = (np.asarray(mult) * np.asarray(STATIC_WEIGHTS))[:4]
+            extra: dict[int, float] = {}
+            total = 0.0
+            for ids, terms, marginal in decisions:
+                scores = terms @ w
+                if extra:
+                    scores = scores + w[0] * np.asarray(
+                        [extra.get(i, 0.0) for i in ids])
+                # ids are ascending, so argmin ties break to lower node id
+                k = int(np.argmin(scores))
+                nid = ids[k]
+                # terms[k,0] is the post-placement estimate (it already
+                # includes this decision's own marginal) — add only the
+                # load accumulated by *earlier* counterfactual placements
+                load_after = float(terms[k, 0]) + extra.get(nid, 0.0)
+                extra[nid] = extra.get(nid, 0.0) + float(marginal[k])
+                total += (node_dlv.get(nid, 0.0)
+                          + max(0.0, load_after - self.OVERLOAD_KNEE))
+            return total / len(decisions)
+        return cost_fn
+
+    def on_window(self, window, rng) -> "Optional[tuple[float, ...]]":
+        """Feed one telemetry window; returns the weight vector now live
+        (``None`` when the window carried no signal and weights held)."""
+        self.windows_seen += 1
+        decisions = list(self._decisions)
+        self._decisions.clear()
+        if window.empty:
+            # zero-length / frame-free window: no feedback signal — fall
+            # back to the committed weights rather than score a vacuous 0
+            self.empty_windows += 1
+            return None
+        if not decisions or not any(v > 0.0
+                                    for v in window.node_dlv.values()):
+            # nothing to re-score, or a violation-free fleet: every
+            # candidate would tie at zero — hold the committed weights
+            self.held_windows += 1
+            return None
+        self._apply(self.probe.step_batch(
+            self._hindsight_cost(decisions, window.node_dlv), rng))
+        return self.weights
+
+    def rearm(self) -> None:
+        """Membership churn / phase event: the workload changed, so the
+        committed weights may be stale — widen and restart the probe."""
+        self.probe.retrigger()
+
+
 POLICIES = {
     "round_robin": RoundRobinRouter,
     "least_loaded": LeastLoadedRouter,
     "score": ScoreDrivenRouter,
     "score_whole": WholePipelineScoreRouter,
+    "tuned_score": TunedScoreRouter,
 }
 
 

@@ -21,6 +21,20 @@ transfer model carry the exact charge the live run paid:
     {"type": "migrate", "t": 1.0, "sid": 3, "stage": 0, "from": 1, "to": 0,
      "gen": 1, "xfer_s": 0.0082, "xfer_j": 3.1e-4}
 
+Fleet phase events (workload mutations, e.g. diurnal load shifts) and
+online-tuner decisions are first-class records too:
+
+    {"type": "phase", "t": 1.2, "action": {"kind": "scale_fps",
+     "factor": 2.5, "models": null}, "sids": [0, 1, 2]}
+    {"type": "tune",  "t": 1.5, "weights": [1.0, 0.62, 0.2, 0.15, 8.0],
+     "window_uxcost": 41.2, "probing": true}
+
+Phase events are *inputs* — replay re-applies them to the hosting nodes.
+Tune events are recorded *decisions*: replay installs the recorded weight
+vector directly and never constructs telemetry or steps the probe, so a
+tuned run replays bit-exactly even though the tuner consumed an RNG
+stream live (see ``docs/traces.md``).
+
 The meta line carries ``"transfer"`` (the exact TransferModel parameters)
 and ``"split"`` when stage splitting was live; replay reconstructs the
 model from meta and re-derives every charge through the same code path,
@@ -45,7 +59,7 @@ from repro.scenarios import trace as base
 
 FLEET_TRACE_VERSION = 1
 FLEET_EVENT_KINDS = ("node_join", "node_leave", "node_drain",
-                     "stream", "place", "migrate")
+                     "stream", "place", "migrate", "phase", "tune")
 
 
 class FleetTrace(base.Trace):
@@ -109,6 +123,29 @@ class FleetTraceRecorder:
         if xfer_j is not None:
             ev["xfer_j"] = float(xfer_j)
         self.events.append(ev)
+
+    def phase(self, t: float, action: dict,
+              sids: "Optional[list[int]]" = None) -> None:
+        """A fleet-level phase event (workload mutation): the serialized
+        PhaseAction config plus the targeted stream ids (None = all)."""
+        ev: dict = {"type": "phase", "t": float(t), "action": dict(action)}
+        if sids is not None:
+            ev["sids"] = list(sids)
+        self.events.append(ev)
+
+    def tune(self, t: float, weights: "list[float]",
+             window_uxcost: float, probing: bool) -> None:
+        """A tuner decision: the full weight vector committed for the next
+        telemetry window (``repro.cluster.router.WEIGHT_NAMES`` order).
+        Replay installs these weights directly, bypassing telemetry and
+        probe entirely; ``window_uxcost`` (the measurement that produced
+        the decision) and ``probing`` document the tuner state."""
+        self.events.append({
+            "type": "tune", "t": float(t),
+            "weights": [float(w) for w in weights],
+            "window_uxcost": float(window_uxcost),
+            "probing": bool(probing),
+        })
 
     def trace(self) -> FleetTrace:
         return FleetTrace(meta=dict(self.meta), events=list(self.events))

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 

@@ -10,67 +10,48 @@ Configurations mirror the paper's Table 4:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
 
+from .adaptivity import PARAM_HI, PARAM_LO, ProbeSearch
 from .mapscore import MapScoreParams, mapscore
 from .simulator import Dispatch, Job, SchedulerBase, Simulator
 from .uxcost import WindowStats, overall_dlv_rate
 
-PARAM_LO, PARAM_HI = 0.0, 2.0  # the paper's constrained search range (§5.2)
+# the paper's constrained search range (§5.2) lives with the probe core in
+# repro.core.adaptivity; imported here so `scheduler.PARAM_LO/HI` keep
+# resolving for existing callers
+_ = (PARAM_LO, PARAM_HI)
 
 
 @dataclass
-class AdaptivityState:
+class AdaptivityState(ProbeSearch):
     """Radius-shrinking online search over (alpha, beta) — Section 3.6.
 
-    Continuously tests a small number of candidate pairs around the current
-    center, one per UXCost window, then moves to the point interpolated
-    between the two best candidates and shrinks the radius. Non-blocking:
-    scheduling always proceeds with whatever candidate is under test.
+    The probe state machine itself is the host-agnostic
+    :class:`repro.core.adaptivity.ProbeSearch` (also reused, in coordinate
+    form, by the fleet weight tuner); this subclass adds the per-node
+    workload-change *detector*: when the probe is parked, a DLV-rate shift
+    against an EMA re-arms it.  Non-blocking: scheduling always proceeds
+    with whatever candidate is under test.
     """
 
-    center: np.ndarray
-    radius: float = 0.5
-    r_min: float = 0.05
-    shrink: float = 0.6
-    probing: bool = True
-    candidates: list[np.ndarray] = field(default_factory=list)
-    results: list[tuple[float, np.ndarray]] = field(default_factory=list)
-    cand_idx: int = 0
     dlv_ema: Optional[float] = None
-
-    def _make_candidates(self, rng: np.random.Generator) -> None:
-        dirs = np.array([(1, 0), (-1, 0), (0, 1), (0, -1)], dtype=np.float64)
-        cands = [self.center.copy()]
-        cands += [np.clip(self.center + self.radius * d, PARAM_LO, PARAM_HI)
-                  for d in dirs]
-        # one distant sample (the paper samples neighboring *and* distant pairs)
-        cands.append(rng.uniform(PARAM_LO, PARAM_HI, size=2))
-        self.candidates = cands
-        self.results = []
-        self.cand_idx = 0
-
-    def current(self) -> np.ndarray:
-        if self.probing and self.candidates:
-            return self.candidates[self.cand_idx]
-        return self.center
 
     def retrigger(self, radius: float = 0.4) -> None:
         """Restart the (alpha, beta) probe from the current center — the
         response to an externally-signalled workload change (stream
         migration, node membership churn) rather than a detected DLV drift.
         Fresh candidates are drawn on the next window step."""
-        self.radius = max(self.radius, radius)
-        self.probing = True
-        self.candidates = []
-        self.results = []
-        self.cand_idx = 0
+        super().retrigger(radius)
         self.dlv_ema = None
 
-    def step(self, window_uxcost: float, window_dlv: float,
+    def _on_stop(self) -> None:
+        self.dlv_ema = None
+
+    def step(self, window_uxcost: float, window_dlv: float,  # type: ignore[override]
              rng: np.random.Generator) -> np.ndarray:
         """Advance one UXCost window; returns the params for the next window."""
         if not self.probing:
@@ -84,26 +65,7 @@ class AdaptivityState:
                 self.probing = True
                 self._make_candidates(rng)
             return self.center
-        if not self.candidates:
-            self._make_candidates(rng)
-            return self.candidates[0]
-        self.results.append((window_uxcost, self.candidates[self.cand_idx].copy()))
-        self.cand_idx += 1
-        if self.cand_idx < len(self.candidates):
-            return self.candidates[self.cand_idx]
-        # all candidates measured: interpolate between the two best
-        self.results.sort(key=lambda r: r[0])
-        (u1, p1), (u2, p2) = self.results[0], self.results[1]
-        w1, w2 = 1.0 / (u1 + 1e-9), 1.0 / (u2 + 1e-9)
-        self.center = np.clip((w1 * p1 + w2 * p2) / (w1 + w2), PARAM_LO, PARAM_HI)
-        self.radius *= self.shrink
-        if self.radius < self.r_min:
-            self.probing = False
-            self.dlv_ema = None
-            self.candidates = []
-            return self.center
-        self._make_candidates(rng)
-        return self.candidates[0]
+        return ProbeSearch.step(self, window_uxcost, rng)
 
 
 #: Dispatch-block cap (seconds): consecutive layers that keep preferring

@@ -30,7 +30,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from collections import deque
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Callable, Optional
 
 import numpy as np
@@ -411,6 +411,13 @@ class Simulator:
         Already-created jobs still execute and count toward stats."""
         del t  # takes effect immediately; kept for call-site symmetry
         self.active[self._index_of(name)] = False
+
+    def apply_action(self, action, t: float) -> None:
+        """Apply a phase action (``repro.scenarios.phases.PhaseAction``) on
+        behalf of an external driver — the fleet layer forwards fleet-level
+        phase events (e.g. load shifts) to the hosting nodes through this,
+        exactly as a node-local phase script would."""
+        self._apply_phase(action, t)
 
     def inject_arrival(self, name: str, t: float,
                        deadline_anchor: Optional[float] = None) -> None:

@@ -9,8 +9,8 @@ dependencies), and multi-accelerator systems built from weight-stationary
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field, replace
-from typing import Optional, Sequence
+from dataclasses import dataclass, replace
+from typing import Optional
 
 MiB = 1 << 20
 

@@ -13,7 +13,7 @@ restart point — required for exact checkpoint-resume equivalence.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ Softcap (gemma2's tanh logit cap) happens pre-max in fp32.
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional
 
 import jax

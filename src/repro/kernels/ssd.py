@@ -23,7 +23,6 @@ All math in fp32 (the recurrence is exp-weighted; bf16 decays drift).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -37,7 +37,6 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh, rules_for
 from repro.models import model as M
 from repro.training import TrainConfig, OptimConfig, build_train_step
-from repro.training import optim as opt_mod
 
 # TPU v5e hardware constants (roofline denominators)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip

@@ -11,7 +11,6 @@ annotations; the transformer layer passes the mesh-aware one.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Callable, Optional
 

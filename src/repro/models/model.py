@@ -16,7 +16,6 @@ API (all functional, params are plain dict pytrees):
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax

@@ -15,7 +15,7 @@ and is pure jnp (a single recurrence step is bandwidth-bound anyway).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

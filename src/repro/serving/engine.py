@@ -21,7 +21,6 @@ deployments plug in measured per-accelerator power).
 """
 from __future__ import annotations
 
-import heapq
 import itertools
 import time
 import zlib
@@ -36,7 +35,6 @@ import numpy as np
 from repro.configs import ArchConfig
 from repro.core.mapscore import MapScoreParams
 from repro.core.uxcost import WindowStats, uxcost
-from repro.models import model as M
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,4 @@
 """Launch-layer units that don't need the 512-device dry-run environment."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

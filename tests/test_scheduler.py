@@ -3,13 +3,12 @@ adaptivity convergence, baseline sanity, end-to-end simulator invariants."""
 import numpy as np
 import pytest
 
-from repro.core import (SYSTEMS, build_scenario, dream_full, dream_mapscore,
+from repro.core import (SYSTEMS, build_scenario, dream_full,
                         optimize_params, run_planaria, run_sim)
 from repro.core.baselines import (FCFSScheduler, StaticFCFSScheduler,
                                   VeltairLikeScheduler)
 from repro.core.costmodel import build_cost_table
 from repro.core.mapscore import MapScoreParams, mapscore
-from repro.core.scheduler import DreamScheduler
 from repro.core.types import Dataflow, Layer, ModelGraph, OpType
 from repro.core import zoo
 

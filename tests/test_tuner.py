@@ -1,0 +1,319 @@
+"""Online fleet-weight tuner: probe-core convergence, telemetry windows,
+fleet phase events, re-arming, hindsight scoring, replay bypass."""
+import numpy as np
+import pytest
+
+from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
+                          FleetTelemetry, STATIC_WEIGHTS, TelemetryWindow,
+                          TunedScoreRouter)
+from repro.cluster import trace as ftrace
+from repro.core.adaptivity import CoordinateProbe, ProbeSearch
+from repro.scenarios import ScenarioError
+from repro.scenarios.phases import scale_fps, set_fps
+
+SYSTEMS = ("4K_1WS2OS", "8K_2WS", "4K_2OS", "8K_1OS2WS")
+
+
+def drift_fleet(seed=2, n_nodes=4, n_streams=24, dur=1.5, churn=False,
+                phase=True):
+    b = FleetScenarioBuilder("tuner_fleet")
+    nids = [b.node(SYSTEMS[i % len(SYSTEMS)]) for i in range(n_nodes)]
+    if churn:
+        b.node("8K_1WS2OS", at=0.4 * dur)
+        b.node_drain(nids[1], at=0.5 * dur)
+    sids = b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=0.7 * dur,
+                          fps_scale=0.4, deterministic_arrivals=True)
+    if phase:
+        # half the population surges: the nodes hosting it degrade mid-run
+        b.phase(scale_fps(3.0), at=round(0.45 * dur, 6),
+                sids=sids[:len(sids) // 2])
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# probe core (host-agnostic, repro.core.adaptivity)
+# ---------------------------------------------------------------------------
+
+def test_coordinate_probe_converges_on_synthetic_cost():
+    """Batch-driven coordinate search finds the optimum of a convex cost
+    — the 'probe converges' contract, checked where it is deterministic."""
+    target = np.array([0.4, 1.6, 1.0])
+    probe = CoordinateProbe(center=np.ones(3), lo=np.zeros(3),
+                            hi=np.full(3, 2.0), radius=0.5, r_min=0.05,
+                            shrink=0.6, margin=0.02)
+    rng = np.random.default_rng(0)
+    cost = lambda p: float(np.sum((p - target) ** 2))
+    for _ in range(200):
+        if not probe.probing:
+            break
+        probe.step_batch(cost, rng)
+    assert not probe.probing                 # parked below r_min
+    assert probe.commits > 0
+    assert np.all(np.abs(probe.center - target) < 0.25)
+
+
+def test_coordinate_probe_sequential_driver():
+    """The deploy-and-measure driver: one candidate per window, commit at
+    the end of each mini-cycle, never returns out-of-bounds points."""
+    target = np.array([0.5, 1.5])
+    probe = CoordinateProbe(center=np.ones(2), lo=np.zeros(2),
+                            hi=np.full(2, 2.0), radius=0.5, margin=0.0)
+    rng = np.random.default_rng(1)
+    live = probe.current()
+    for _ in range(300):
+        if not probe.probing:
+            break
+        cost = float(np.sum((live - target) ** 2))
+        live = probe.step(cost, rng)
+        assert np.all(live >= 0.0) and np.all(live <= 2.0)
+    assert not probe.probing
+    assert float(np.sum((probe.center - target) ** 2)) < 0.5
+
+
+def test_coordinate_probe_margin_blocks_marginal_commits():
+    probe = CoordinateProbe(center=np.ones(1), lo=np.zeros(1),
+                            hi=np.full(1, 2.0), radius=0.5, margin=0.5)
+    rng = np.random.default_rng(0)
+    # candidate is 10% better than center: inside the 50% margin -> hold
+    probe.step_batch(lambda p: 1.0 - 0.1 * abs(float(p[0]) - 1.0), rng)
+    assert probe.commits == 0
+    assert probe.center[0] == 1.0
+
+
+def test_coordinate_probe_retrigger_restarts_pass():
+    probe = CoordinateProbe(center=np.ones(2), lo=np.zeros(2),
+                            hi=np.full(2, 2.0), radius=0.5, r_min=0.4,
+                            axis_order=(1, 0))
+    rng = np.random.default_rng(0)
+    probe.step_batch(lambda p: float(p[1]), rng)
+    assert probe.pass_pos == 1
+    probe.probing = False
+    probe.retrigger()
+    assert probe.probing
+    assert probe.pass_pos == 0 and probe.axis == 1
+    assert probe.radius >= 0.4
+    assert probe.retriggers == 1
+
+
+def test_probe_search_star_shape_matches_legacy_2d():
+    """ProbeSearch candidates in 2-D are the four axis neighbors + center
+    + one distant draw — the exact (alpha, beta) star of Section 3.6."""
+    ps = ProbeSearch(center=np.array([1.0, 1.0]), radius=0.5)
+    rng = np.random.default_rng(0)
+    first = ps.step(0.0, rng)                # makes candidates, returns c0
+    assert np.array_equal(first, np.array([1.0, 1.0]))
+    cands = np.asarray(ps.candidates)
+    assert cands.shape == (6, 2)
+    assert np.array_equal(cands[1], [1.5, 1.0])
+    assert np.array_equal(cands[2], [0.5, 1.0])
+    assert np.array_equal(cands[3], [1.0, 1.5])
+    assert np.array_equal(cands[4], [1.0, 0.5])
+
+
+# ---------------------------------------------------------------------------
+# fleet telemetry windows
+# ---------------------------------------------------------------------------
+
+def test_telemetry_windows_are_exact_deltas():
+    fscn = drift_fleet(phase=False)
+    fs = FleetSimulator(fscn, "score", duration_s=1.0, seed=2,
+                        tune_every_s=0.25)
+    r = fs.run()
+    wins = list(fs.telemetry.windows)        # snapshot: observe() appends
+    assert len(wins) == 3                    # ticks at 0.25/0.5/0.75
+    assert all(w.t1 - w.t0 == pytest.approx(0.25) for w in wins)
+    # a final snapshot accounts for everything since the last tick
+    # (windows count stats frames: completions AND drops, like UXCost)
+    final = fs.telemetry.observe(1.0, fs.nodes, fs.migrations,
+                                 sum(fs.xfer_energy.values()))
+    stat_frames = sum(st.frames for st in r.stats.per_model.values())
+    assert sum(w.frames for w in wins) + final.frames == stat_frames
+    for w in wins:
+        assert w.violated <= w.frames
+        assert set(w.node_dlv) == set(fs.nodes)
+        assert w.backlog_p50 <= w.backlog_p90 <= w.backlog_max
+        if w.frames:
+            assert w.n_models > 0 and w.norm_uxcost > 0.0
+            assert w.stream_uxcost            # per-stream deltas present
+
+
+def test_zero_length_window_is_empty_and_holds_static_weights():
+    tel = FleetTelemetry()
+    fscn = drift_fleet(phase=False)
+    fs = FleetSimulator(fscn, "tuned_score", duration_s=0.5, seed=2)
+    fs.run()
+    w1 = tel.observe(0.5, fs.nodes, 0, 0.0)
+    w2 = tel.observe(0.5, fs.nodes, 0, 0.0)  # zero-length: no progress
+    assert not w1.empty
+    assert w2.empty and w2.frames == 0 and w2.norm_uxcost == 0.0
+    pol = TunedScoreRouter()
+    rng = np.random.default_rng(0)
+    assert pol.on_window(w2, rng) is None    # held: no probe step
+    assert pol.probe.steps == 0
+    assert pol.weights == tuple(STATIC_WEIGHTS)
+
+
+def test_signal_free_window_holds_weights():
+    """A violation-free window cannot rank candidates: weights hold even
+    though decisions were recorded."""
+    pol = TunedScoreRouter()
+    pol._decisions.append(([0, 1], np.zeros((2, 4)), np.zeros(2)))
+    win = TelemetryWindow(
+        t0=0.0, t1=0.5, frames=10, violated=0, dlv_rate=0.0, uxcost=0.1,
+        node_dlv={0: 0.0, 1: 0.0}, node_frames={0: 5, 1: 5},
+        backlog_p50=0.0, backlog_p90=0.0, backlog_max=0.0,
+        migrations=0, xfer_j=0.0, stream_uxcost={}, n_models=2)
+    assert pol.on_window(win, np.random.default_rng(0)) is None
+    assert pol.held_windows == 1 and pol.probe.steps == 0
+    assert not pol._decisions                # consumed, not accumulated
+
+
+# ---------------------------------------------------------------------------
+# fleet phase events
+# ---------------------------------------------------------------------------
+
+def test_fleet_phase_validation():
+    b = FleetScenarioBuilder("bad_phase")
+    b.node("4K_2WS")
+    sid = b.fuzz_streams(1, seed=0)[0]
+    with pytest.raises(ScenarioError):       # model-addressed kinds stay
+        b.phase(set_fps("det", 30.0), at=0.5)       # node-local
+    with pytest.raises(ScenarioError):
+        b.phase(scale_fps(2.0, models=["det"]), at=0.5)
+    with pytest.raises(ScenarioError):
+        b.phase(scale_fps(2.0), at=0.5, sids=[sid + 7])
+    b.phase(scale_fps(2.0), at=0.5, sids=[sid])     # valid
+    assert b.build().events[-1].kind == "phase"
+
+
+def test_fleet_phase_shifts_load_and_retriggers():
+    """The phase event actually changes the hosted streams' FPS (frames go
+    up vs the unphased run) and re-arms node probes + the fleet tuner."""
+    base = FleetSimulator(drift_fleet(phase=False), "score",
+                          duration_s=1.5, seed=2).run()
+    fs = FleetSimulator(drift_fleet(phase=True), "score",
+                        duration_s=1.5, seed=2)
+    r = fs.run()
+    assert r.frames > base.frames * 1.2      # the surge really happened
+    # phase events are workload changes: the touched nodes' (alpha, beta)
+    # probes re-armed beyond the placement-churn retriggers
+    assert r.probe_retriggers > base.probe_retriggers
+
+
+def test_phase_event_scales_migrated_stream_at_drifted_rate():
+    """A stream migrated after a phase event keeps its drifted FPS: the
+    StreamView owns rescaled configs, not the scenario's originals."""
+    fscn = drift_fleet(phase=True)
+    fs = FleetSimulator(fscn, "score", duration_s=1.5, seed=2)
+    fs.run()
+    phased = {e.payload["sids"][0]
+              for e in fscn.events if e.kind == "phase"}
+    sid = next(iter(phased))
+    # the scenario's own entries are untouched...
+    orig = next(e.payload["entries"] for e in fscn.events
+                if e.kind == "stream" and e.payload["sid"] == sid)
+    sv = fs.streams[sid]
+    assert sv.entry_cfgs[0]["fps"] == pytest.approx(
+        float(orig[0]["fps"]) * 3.0)         # ...the view carries the x3
+    assert float(orig[0]["fps"]) != sv.entry_cfgs[0]["fps"]
+
+
+# ---------------------------------------------------------------------------
+# the tuner in the fleet loop
+# ---------------------------------------------------------------------------
+
+def test_tuner_consumes_windows_and_stays_in_bounds():
+    fscn = drift_fleet(phase=True)
+    fs = FleetSimulator(fscn, "tuned_score", duration_s=1.5, seed=2,
+                        tune_every_s=0.25, rebalance_every_s=0.5)
+    r = fs.run()
+    pol = fs.policy
+    assert pol.windows_seen == 5
+    assert pol.probe.steps > 0               # signal windows reached it
+    mult = pol.multipliers
+    assert np.all(mult >= pol.probe.lo) and np.all(mult <= pol.probe.hi)
+    assert r.weights == pol.weights
+    assert r.tuner_windows == pol.windows_seen
+
+
+def test_tuner_rearms_on_join_drain_and_phase():
+    fscn = drift_fleet(churn=True, phase=True)
+    fs = FleetSimulator(fscn, "tuned_score", duration_s=1.5, seed=2,
+                        tune_every_s=0.25)
+    r = fs.run()
+    # 4 initial joins + mid-run join + drain + phase event
+    assert fs.tuner_retriggers == 7
+    assert fs.policy.probe.retriggers == 7
+    assert r.tuner_retriggers == 7
+
+
+def test_tuner_without_commits_is_bit_identical_to_static():
+    """Hindsight scoring deploys no candidates: until the probe commits,
+    the tuned fleet must make exactly the static router's decisions."""
+    fscn = drift_fleet(phase=True)
+    static = FleetSimulator(fscn, "score", duration_s=1.5, seed=2,
+                            rebalance_every_s=0.5).run()
+    pol = TunedScoreRouter(margin=10.0)      # commit-proof margin
+    tuned = FleetSimulator(fscn, pol, duration_s=1.5, seed=2,
+                           rebalance_every_s=0.5, tune_every_s=0.25).run()
+    assert pol.probe.commits == 0
+    assert tuned.uxcost == static.uxcost
+    assert tuned.frames == static.frames
+    assert tuned.weights == tuple(STATIC_WEIGHTS)
+
+
+def test_tuner_commits_on_degrading_fleet():
+    """On a drifting fleet where some nodes degrade mid-run, the hindsight
+    probe finds and commits a weight vector away from the static center
+    (the seeded config is verified to produce a commit)."""
+    fscn = drift_fleet(seed=1, n_nodes=4, n_streams=24, phase=True)
+    fs = FleetSimulator(fscn, "tuned_score", duration_s=1.5, seed=1,
+                        tune_every_s=0.2, rebalance_every_s=0.4)
+    r = fs.run()
+    assert r.tuner_commits > 0
+    assert tuple(r.weights) != tuple(STATIC_WEIGHTS)
+
+
+def test_tuned_trace_replay_bitexact_with_tuner_bypassed():
+    fscn = drift_fleet(churn=True, phase=True)
+    live_fs = FleetSimulator(fscn, "tuned_score", duration_s=1.5, seed=2,
+                             tune_every_s=0.2, rebalance_every_s=0.5,
+                             record=True)
+    live = live_fs.run()
+    text = ftrace.dumps(live.trace)
+    assert text == ftrace.dumps(ftrace.loads(text))   # bytes-stable JSONL
+    rep_fs = FleetSimulator(replay=ftrace.loads(text))
+    rep = rep_fs.run()
+    assert rep.uxcost == live.uxcost
+    assert rep.frames == live.frames
+    assert rep.drops == live.drops
+    assert rep.migrations == live.migrations
+    assert rep.weights == live.weights       # recorded tune decisions land
+    # the tuner really was bypassed: no telemetry windows, no probe steps
+    assert rep_fs.telemetry.windows == []
+    assert rep_fs.policy.probe.steps == 0
+    assert rep.tuner_windows == 0
+
+
+def test_tune_records_only_on_signal_windows():
+    """Held windows (empty / signal-free) record no tune event — live and
+    replay agree on exactly which ticks committed weights."""
+    fscn = drift_fleet(phase=True)
+    live_fs = FleetSimulator(fscn, "tuned_score", duration_s=1.5, seed=2,
+                             tune_every_s=0.25, record=True)
+    live_fs.run()
+    pol = live_fs.policy
+    tunes = live_fs.trace.events_of("tune")
+    assert len(tunes) == (pol.windows_seen - pol.empty_windows
+                          - pol.held_windows)
+    for ev in tunes:
+        assert len(ev["weights"]) == len(STATIC_WEIGHTS)
+        assert "window_uxcost" in ev and "probing" in ev
+
+
+def test_set_weights_validation():
+    pol = TunedScoreRouter()
+    with pytest.raises(ValueError):
+        pol.set_weights([1.0, 2.0])          # wrong arity
+    with pytest.raises(ValueError):
+        pol.set_weights([1.0, -0.1, 0.2, 0.15, 8.0])
