@@ -24,13 +24,26 @@ stale when the load regime shifts; the tuner must recover at least that
 headroom, aggregated over ≥3 scenario seeds, and every tuned run must
 replay bit-exactly with the tuner bypassed.
 
+The lifecycle section exercises the *load-release* half of task-level
+dynamicity: streams arrive AND depart (half the population departs
+mid-run, some rejoin later) on top of a node drain, over
+contention-aware transfer links (finite shared per-node-pair bandwidth:
+concurrent migrations queue for the wire) — least-loaded vs score vs
+online-tuned routing on identical scenarios, with head-to-tail pipeline
+latency reported next to UXCost and an uncontended control run
+isolating the realized link-queueing cost.
+
 The headline claims, asserted by ``main()`` and the CI gate:
   * score-driven routing achieves lower fleet UXCost than round-robin;
   * stage-split routing achieves no worse fleet UXCost than whole-pipeline
     placement under the same (migration-inclusive) transfer model;
   * tuned routing achieves no worse fleet UXCost than static score
     routing on the drifting workload (tuned_over_static >= 1.0);
-  * all recorded fleet traces replay bit-exactly.
+  * score and tuned routing achieve no worse fleet UXCost than
+    least-loaded on the lifecycle-churn fleet (ll_over_score >= 1.0,
+    ll_over_tuned >= 1.0);
+  * all recorded fleet traces replay bit-exactly (departures, purges and
+    pipeline latencies included).
 """
 from __future__ import annotations
 
@@ -263,6 +276,140 @@ def run_drift(duration_s: float, seed: int, n_nodes: int = 8,
     }
 
 
+#: lifecycle fleet: same interleaved capacity/dataflow mix as the policy
+#: shootout at the ~50% utilization the score router is designed for —
+#: the variable under test is the *stream lifecycle* (arrivals AND
+#: departures/rejoins), not saturation
+LIFECYCLE_FPS_SCALE = 0.25
+#: half the streams depart mid-run; 40% of the departed rejoin later
+LIFECYCLE_DEPART_FRAC = 0.5
+LIFECYCLE_REJOIN_FRAC = 0.4
+#: finite shared per-node-pair link capacity: migration waves (the drain)
+#: and any concurrent transfers on one node pair queue for the wire
+LIFECYCLE_LINK_BW = 1.25e9
+
+
+def build_lifecycle_fleet(seed: int, n_nodes: int, n_streams: int,
+                          duration_s: float,
+                          churn: bool = True) -> FleetScenario:
+    b = FleetScenarioBuilder(f"lifecycle_sweep_{seed}")
+    nids = [b.node(SYSTEMS_MIX[i % len(SYSTEMS_MIX)])
+            for i in range(n_nodes)]
+    if churn:
+        # membership churn on top of lifecycle churn: the drain fires a
+        # migration wave into the contended links mid-departure-window
+        b.node_drain(nids[0], at=round(0.55 * duration_s, 6))
+    b.fuzz_streams(n_streams, seed=seed, t0=0.0,
+                   t1=round(0.5 * duration_s, 6),
+                   fps_scale=LIFECYCLE_FPS_SCALE,
+                   depart_frac=LIFECYCLE_DEPART_FRAC,
+                   rejoin_frac=LIFECYCLE_REJOIN_FRAC,
+                   t_depart0=round(0.35 * duration_s, 6),
+                   t_depart1=round(0.9 * duration_s, 6))
+    return b.build()
+
+
+def run_lifecycle(duration_s: float, seed: int, n_nodes: int = 16,
+                  n_streams: int = 128, churn: bool = True,
+                  n_seeds: int = 3, tune_every_s: float = 0.2,
+                  rebalance_every_s: float = 0.4) -> dict:
+    """Full-lifecycle churn (streams arrive *and* depart/rejoin) over
+    contention-aware transfer links: least-loaded vs score vs online-tuned
+    score routing on identical scenarios — placement policy is the only
+    variable; the load *releases* (departures purge backlogs, re-arm
+    probes and the fleet tuner) are what PR-2..4's accumulate-only sweeps
+    never exercised.  The score run repeats under an uncontended
+    (infinite link bandwidth) transfer model to isolate what realized
+    link queueing cost; score and tuned runs are recorded and replayed
+    as determinism self-checks.  Head-to-tail pipeline latency is
+    reported per policy next to UXCost/DLV."""
+    transfer = TransferModel(link_bandwidth_bytes_s=LIFECYCLE_LINK_BW)
+    uncontended = TransferModel()
+    rows = []
+    for s in range(seed, seed + n_seeds):
+        fscn = build_lifecycle_fleet(s, n_nodes, n_streams, duration_s,
+                                     churn=churn)
+        per_policy = {}
+        replays = {}
+        for policy in ("least_loaded", "score", "tuned_score"):
+            kw = dict(duration_s=duration_s, seed=s, transfer=transfer,
+                      rebalance_every_s=rebalance_every_s,
+                      record=policy != "least_loaded")
+            if policy == "tuned_score":
+                kw["tune_every_s"] = tune_every_s
+            r = FleetSimulator(fscn, policy, **kw).run()
+            per_policy[policy] = {
+                "uxcost": r.uxcost, "dlv_rate": r.dlv_rate,
+                "norm_energy": r.norm_energy, "frames": r.frames,
+                "migrations": r.migrations,
+                "departures": r.departures, "rejoins": r.rejoins,
+                "jobs_purged": r.jobs_purged,
+                "pipeline_latency_s": r.pipeline_latency_s,
+                "pipe_frames": r.pipe_frames,
+                "link_transfers": r.link_transfers,
+                "link_queued": r.link_queued,
+                "link_wait_s": r.link_wait_s,
+            }
+            if r.trace is not None:
+                rp = FleetSimulator(
+                    replay=ftrace.loads(ftrace.dumps(r.trace))).run()
+                replays[policy] = (rp.uxcost == r.uxcost
+                                   and rp.frames == r.frames
+                                   and rp.departures == r.departures
+                                   and rp.jobs_purged == r.jobs_purged
+                                   and rp.pipeline_latency_s
+                                   == r.pipeline_latency_s)
+        unc = FleetSimulator(fscn, "score", duration_s=duration_s, seed=s,
+                             transfer=uncontended,
+                             rebalance_every_s=rebalance_every_s).run()
+        per_policy["score_uncontended"] = {
+            "uxcost": unc.uxcost, "dlv_rate": unc.dlv_rate,
+            "frames": unc.frames,
+            "pipeline_latency_s": unc.pipeline_latency_s,
+        }
+        rows.append({
+            "seed": s,
+            "policies": per_policy,
+            "ll_over_score": (per_policy["least_loaded"]["uxcost"]
+                              / max(per_policy["score"]["uxcost"], 1e-12)),
+            "ll_over_tuned": (per_policy["least_loaded"]["uxcost"]
+                              / max(per_policy["tuned_score"]["uxcost"],
+                                    1e-12)),
+            "contended_over_uncontended": (
+                per_policy["score"]["uxcost"]
+                / max(per_policy["score_uncontended"]["uxcost"], 1e-12)),
+            "replay_exact": all(replays.values()) and len(replays) == 2,
+        })
+    ll_total = sum(r["policies"]["least_loaded"]["uxcost"] for r in rows)
+    score_total = sum(r["policies"]["score"]["uxcost"] for r in rows)
+    tuned_total = sum(r["policies"]["tuned_score"]["uxcost"] for r in rows)
+    unc_total = sum(r["policies"]["score_uncontended"]["uxcost"]
+                    for r in rows)
+    return {
+        "n_nodes": n_nodes, "n_streams": n_streams, "churn": churn,
+        "n_seeds": n_seeds, "fps_scale": LIFECYCLE_FPS_SCALE,
+        "depart_frac": LIFECYCLE_DEPART_FRAC,
+        "rejoin_frac": LIFECYCLE_REJOIN_FRAC,
+        "transfer": transfer.to_config(),
+        "rows": rows,
+        "ll_uxcost_total": ll_total,
+        "score_uxcost_total": score_total,
+        "tuned_uxcost_total": tuned_total,
+        "uncontended_uxcost_total": unc_total,
+        "departures": sum(r["policies"]["score"]["departures"]
+                          for r in rows),
+        "rejoins": sum(r["policies"]["score"]["rejoins"] for r in rows),
+        "link_queued": sum(r["policies"]["score"]["link_queued"]
+                           for r in rows),
+        "ll_over_score": ll_total / max(score_total, 1e-12),
+        "ll_over_tuned": ll_total / max(tuned_total, 1e-12),
+        "contended_over_uncontended": score_total / max(unc_total, 1e-12),
+        "score_beats_ll": score_total <= ll_total,
+        "tuned_beats_ll": tuned_total <= ll_total,
+        "replay_exact": all(r["replay_exact"] for r in rows),
+    }
+
+
 def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
         n_streams: int = 200, churn: bool = True) -> dict:
     fscn = build_fleet(seed, n_nodes, n_streams, duration_s, churn=churn)
@@ -278,6 +425,8 @@ def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
             "drops": r.drops, "migrations": r.migrations,
             "probe_retriggers": r.probe_retriggers,
             "n_nodes": r.n_nodes, "n_streams": r.n_streams,
+            "pipeline_latency_s": r.pipeline_latency_s,
+            "pipe_frames": r.pipe_frames,
         }
         if policy == "score":
             score_trace = r.trace
@@ -305,6 +454,9 @@ def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
                   run_drift(duration_s, seed, n_nodes=8, n_streams=48,
                             churn=churn, tune_every_s=0.15,
                             rebalance_every_s=0.3)),
+        # full stream lifecycle: arrivals AND departures/rejoins over
+        # contention-aware links (validated at both CI and full durations)
+        "lifecycle": run_lifecycle(duration_s, seed, churn=churn),
     }
     save_artifact("fleet_sweep", out)
     return out
@@ -349,6 +501,25 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
               f"commits={tw['tuner_commits']} replay={r['replay_exact']}")
     print(f"  aggregate UXCost(static)/UXCost(tuned) = "
           f"{d['tuned_over_static']:.3f}   replay_exact={d['replay_exact']}")
+    lf = out["lifecycle"]
+    print(f"lifecycle sweep: {lf['n_nodes']} nodes x {lf['n_seeds']} seeds, "
+          f"{lf['n_streams']} streams arriving AND departing "
+          f"({lf['departures']} departures, {lf['rejoins']} rejoins), "
+          f"contended links ({lf['link_queued']} queued transfers)")
+    for r in lf["rows"]:
+        p = r["policies"]
+        print(f"  seed {r['seed']}: ll={p['least_loaded']['uxcost']:9.2f}  "
+              f"score={p['score']['uxcost']:9.2f}  "
+              f"tuned={p['tuned_score']['uxcost']:9.2f}  "
+              f"ll/score={r['ll_over_score']:5.3f} "
+              f"ll/tuned={r['ll_over_tuned']:5.3f} "
+              f"pipe_lat={p['score']['pipeline_latency_s']*1e3:6.2f}ms "
+              f"replay={r['replay_exact']}")
+    print(f"  aggregate UXCost(ll)/UXCost(score) = {lf['ll_over_score']:.3f}"
+          f"  UXCost(ll)/UXCost(tuned) = {lf['ll_over_tuned']:.3f}"
+          f"  contended/uncontended = "
+          f"{lf['contended_over_uncontended']:.3f}"
+          f"  replay_exact={lf['replay_exact']}")
     if not out["score_beats_round_robin"]:
         raise SystemExit("score-driven routing did not beat round-robin")
     if not out["replay_exact"]:
@@ -364,6 +535,15 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
                          "weights on the drifting-workload fleet")
     if not d["replay_exact"]:
         raise SystemExit("tuned fleet trace replay mismatch — "
+                         "determinism broken")
+    if not lf["score_beats_ll"]:
+        raise SystemExit("score routing did worse than least-loaded on the "
+                         "lifecycle-churn fleet")
+    if not lf["tuned_beats_ll"]:
+        raise SystemExit("tuned routing did worse than least-loaded on the "
+                         "lifecycle-churn fleet")
+    if not lf["replay_exact"]:
+        raise SystemExit("lifecycle fleet trace replay mismatch — "
                          "determinism broken")
 
 

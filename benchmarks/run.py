@@ -39,6 +39,33 @@ def _filter_kwargs(fn, **kw) -> dict:
     return {k: v for k, v in kw.items() if k in params and v is not None}
 
 
+def git_provenance() -> dict:
+    """Git identity of the tree that produced an artifact: {"sha": ...,
+    "dirty": ...} — CI uploads these files as a trend series, so every
+    point must be traceable to the exact commit (and flag uncommitted
+    local edits).  The BENCH trajectory (appended by every
+    ``scripts/check_bench.py`` run, which CI executes *before* this) is
+    a runtime log, not a source edit, so it is excluded from the dirty
+    computation — otherwise every nightly point would read dirty on a
+    clean checkout.  Degrades to nulls outside a git checkout (e.g. a
+    source tarball).  Shared with ``scripts/check_bench.py``."""
+    import os
+    import subprocess
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain", "--", ".",
+             ":(exclude)benchmarks/baselines/trajectory.json"],
+            cwd=root, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip() != ""
+        return {"sha": sha, "dirty": dirty}
+    except Exception:  # noqa: BLE001 — provenance must never fail a run
+        return {"sha": None, "dirty": None}
+
+
 def _describe(modname: str) -> str:
     """One-line benchmark description: the first line of the module's
     docstring, read via ``ast`` so --list stays instant (no benchmark
@@ -116,6 +143,7 @@ def main() -> None:
         print(f"  [{tag}] {wall_s[tag]:.1f}s", flush=True)
     if args.json is not None:
         out = {"seed": args.seed, "duration_s": args.duration,
+               "git": git_provenance(),
                "failures": failures, "wall_s": wall_s,
                "results": payloads}
         with open(args.json, "w") as f:

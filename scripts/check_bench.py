@@ -11,9 +11,21 @@ headline metrics are improvement *ratios* — higher is better:
                             (ci_cascade_split.json)
   * ``tuned_over_static`` — static-weights UXCost / online-tuned UXCost
                             (ci_fleet_sweep.json, drift section)
+  * ``ll_over_score_lifecycle`` / ``ll_over_tuned_lifecycle`` —
+                            least-loaded UXCost / score (resp. tuned)
+                            UXCost on the lifecycle-churn fleet (streams
+                            arrive AND depart; contended links)
+  * ``contended_over_uncontended`` — score-routing UXCost under finite
+                            shared-link bandwidth / under an uncontended
+                            link (same scenarios).  Tracked *two-sided*:
+                            this ratio is a determinism-sensitive
+                            stability metric, not a higher-is-better one,
+                            so drift in either direction past the band
+                            fails.
 
 This script loads the artifacts, extracts those metrics, and fails (exit
-nonzero) when any falls below ``baseline * (1 - tolerance)``.  The CI
+nonzero) when any falls below ``baseline * (1 - tolerance)`` (or, for
+two-sided metrics, outside ``baseline * (1 ± tolerance)``).  The CI
 runs are deterministic (fixed seeds, fixed configs), so drift within the
 band can only come from intentional code changes; the band exists so
 benign scheduler/router improvements that shuffle placements slightly do
@@ -27,17 +39,24 @@ refresh the baseline:
 
 ``--update`` rewrites the baseline from the current artifacts, preserving
 the configured tolerances.
+
+Every non-``--update`` run also appends its extracted ratios (stamped
+with the git SHA + dirty flag) to ``benchmarks/baselines/trajectory.json``
+— the BENCH trend series the nightly CI lane uploads; disable with
+``--no-trajectory``.
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
 import sys
 
-DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), os.pardir,
-                                "benchmarks", "baselines",
-                                "ci_baseline.json")
+_BASELINE_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "benchmarks", "baselines")
+DEFAULT_BASELINE = os.path.join(_BASELINE_DIR, "ci_baseline.json")
+DEFAULT_TRAJECTORY = os.path.join(_BASELINE_DIR, "trajectory.json")
 
 #: metric name -> (artifact file, path inside the artifact json)
 METRICS = {
@@ -45,6 +64,12 @@ METRICS = {
     "whole_over_split": ("ci_cascade_split.json", ("whole_over_split",)),
     "tuned_over_static": ("ci_fleet_sweep.json",
                           ("drift", "tuned_over_static")),
+    "ll_over_score_lifecycle": ("ci_fleet_sweep.json",
+                                ("lifecycle", "ll_over_score")),
+    "ll_over_tuned_lifecycle": ("ci_fleet_sweep.json",
+                                ("lifecycle", "ll_over_tuned")),
+    "contended_over_uncontended": (
+        "ci_fleet_sweep.json", ("lifecycle", "contended_over_uncontended")),
 }
 
 
@@ -75,6 +100,7 @@ def check(values: dict[str, float], baseline: dict) -> int:
     """Compare values against the baseline; returns the exit code."""
     base = baseline["metrics"]
     tol = baseline["tolerance"]
+    two_sided = set(baseline.get("two_sided", ()))
     failures = []
     for name, value in sorted(values.items()):
         if name not in base:
@@ -84,11 +110,19 @@ def check(values: dict[str, float], baseline: dict) -> int:
         b = float(base[name])
         t = float(tol.get(name, baseline.get("default_tolerance", 0.1)))
         floor = b * (1.0 - t)
+        ceiling = b * (1.0 + t)
         if value < floor:
             failures.append((name, value, b, floor))
             print(f"check_bench: FAIL   {name} = {value:.4f} < floor "
                   f"{floor:.4f} (baseline {b:.4f}, tolerance {t:.0%})")
-        elif value > b * (1.0 + t):
+        elif value > ceiling and name in two_sided:
+            # stability metric, not higher-is-better: drift past the
+            # band in either direction is a failure, not an improvement
+            failures.append((name, value, b, ceiling))
+            print(f"check_bench: FAIL   {name} = {value:.4f} > ceiling "
+                  f"{ceiling:.4f} (two-sided; baseline {b:.4f}, "
+                  f"tolerance {t:.0%})")
+        elif value > ceiling:
             print(f"check_bench: BETTER {name} = {value:.4f} > baseline "
                   f"{b:.4f} +{t:.0%} — consider refreshing the baseline "
                   "(scripts/check_bench.py --update)")
@@ -104,6 +138,49 @@ def check(values: dict[str, float], baseline: dict) -> int:
     return 0
 
 
+def _git_stamp() -> dict:
+    """{"sha", "dirty"} of the repo producing this run (nulls outside
+    git) — makes every trajectory point provenance-traceable.  One
+    implementation, shared with ``benchmarks.run --json``."""
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), os.pardir))
+    from benchmarks.run import git_provenance
+    return git_provenance()
+
+
+def append_trajectory(values: dict[str, float], path: str) -> None:
+    """Append one {timestamp, git, metrics} point to the BENCH trend
+    series (a JSON object with a ``runs`` list).  The nightly CI lane
+    uploads this file with the sweep artifacts, so concatenating the
+    per-run uploads yields the benchmark trajectory over time."""
+    series = {"description": ("BENCH trajectory: one point per "
+                              "check_bench.py run (ratios + provenance), "
+                              "appended automatically; uploaded by the "
+                              "nightly CI lane as a trend series"),
+              "runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded.get("runs"), list):
+                series = loaded
+        except (OSError, ValueError):
+            print(f"check_bench: warning — unreadable trajectory at "
+                  f"{path}; starting fresh", file=sys.stderr)
+    series["runs"].append({
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "git": _git_stamp(),
+        "metrics": {k: round(v, 6) for k, v in sorted(values.items())},
+    })
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(series, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"check_bench: trajectory point appended -> {path} "
+          f"({len(series['runs'])} runs)")
+
+
 def update(values: dict[str, float], baseline_path: str,
            old: dict | None) -> None:
     baseline = {
@@ -113,6 +190,8 @@ def update(values: dict[str, float], baseline_path: str,
         "metrics": {k: round(v, 6) for k, v in sorted(values.items())},
         "tolerance": (old or {}).get("tolerance", {
             name: 0.1 for name in METRICS}),
+        "two_sided": (old or {}).get("two_sided",
+                                     ["contended_over_uncontended"]),
     }
     os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
     with open(baseline_path, "w") as f:
@@ -129,6 +208,10 @@ def main(argv=None) -> int:
                     help="baseline json path")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from current artifacts")
+    ap.add_argument("--trajectory", default=DEFAULT_TRAJECTORY,
+                    help="BENCH trend-series json to append each run to")
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="skip the trajectory append")
     args = ap.parse_args(argv)
     values = extract(args.artifacts)
     old = None
@@ -138,6 +221,9 @@ def main(argv=None) -> int:
     if args.update:
         update(values, args.baseline, old)
         return 0
+    if not args.no_trajectory:
+        # append before gating: the trend series wants regressions too
+        append_trajectory(values, args.trajectory)
     if old is None:
         sys.exit(f"check_bench: no baseline at {args.baseline} — commit one "
                  "via scripts/check_bench.py --update")

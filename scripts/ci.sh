@@ -5,7 +5,8 @@
 #   scripts/ci.sh [artifact-dir]
 #
 # Modes:
-#   CI_FAST=1 scripts/ci.sh    fast mode (PRs): lint + tests + docs checks
+#   CI_FAST=1 scripts/ci.sh    fast mode (PRs): lint + coverage-gated
+#                              tests + docs checks
 #   scripts/ci.sh              full mode (main): + benchmark smokes + the
 #                              check_bench.py baseline comparison
 #
@@ -22,6 +23,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 CI_FAST="${CI_FAST:-0}"
 STAGE_NAMES=()
 STAGE_TIMES=()
+
+# Coverage gate (fast lane): pytest-cov over the scheduling stack the
+# tier-1 suite exercises end-to-end (core + cluster + scenarios +
+# serving; the jax model/kernel stack has its own tests but is gated by
+# them, not by line coverage).  The committed threshold is a ratchet
+# floor — raise it when coverage rises, never lower it to make a PR
+# pass.  Skipped gracefully when pytest-cov is not installed (local
+# runs); CI always installs it, so the gate is real there.
+COV_MIN="${COV_MIN:-80}"
+COV_PKGS=(--cov=repro.core --cov=repro.cluster --cov=repro.scenarios
+          --cov=repro.serving)
+COV_TOTAL="not measured (pytest-cov not installed)"
 
 stage() {
     local name="$1"
@@ -43,6 +56,7 @@ report() {
     for i in "${!STAGE_NAMES[@]}"; do
         printf '  %-18s %4ss\n' "${STAGE_NAMES[$i]}" "${STAGE_TIMES[$i]}"
     done
+    printf '  %-18s %s (gate: >= %s%%)\n' coverage "$COV_TOTAL" "$COV_MIN"
 }
 trap report EXIT
 
@@ -68,7 +82,15 @@ lint() {
 }
 
 tests() {
-    python -m pytest -x -q
+    if python -c "import pytest_cov" 2>/dev/null; then
+        python -m pytest -x -q "${COV_PKGS[@]}" \
+            --cov-report=term --cov-fail-under="$COV_MIN"
+        COV_TOTAL="$(python -m coverage report --format=total 2>/dev/null \
+                     || echo '?')%"
+    else
+        echo "tests: pytest-cov not installed — coverage gate skipped"
+        python -m pytest -x -q
+    fi
 }
 
 docs_refs() {
@@ -124,11 +146,26 @@ if not d["replay_exact"]:
 if not d["tuned_beats_static"]:
     sys.exit("online-tuned routing did worse than static score weights "
              "on the drifting-workload fleet")
+lf = out["lifecycle"]
+if not lf["replay_exact"]:
+    sys.exit("lifecycle fleet trace replay determinism broken")
+if not lf["score_beats_ll"]:
+    sys.exit("score routing did worse than least-loaded on the "
+             "lifecycle-churn fleet")
+if not lf["tuned_beats_ll"]:
+    sys.exit("tuned routing did worse than least-loaded on the "
+             "lifecycle-churn fleet")
 print(f"ci: ok — {out['n_nodes']}-node fleet (+churn), "
       f"{out['n_streams']} streams, "
       f"UXCost(rr)/UXCost(score)={out['rr_over_score']:.3f}, "
       f"UXCost(static)/UXCost(tuned)={d['tuned_over_static']:.3f} "
-      f"({d['n_seeds']} drift seeds), replays exact")
+      f"({d['n_seeds']} drift seeds); lifecycle "
+      f"({lf['departures']} departures, {lf['rejoins']} rejoins, "
+      f"{lf['link_queued']} link-queued transfers): "
+      f"UXCost(ll)/UXCost(score)={lf['ll_over_score']:.3f}, "
+      f"UXCost(ll)/UXCost(tuned)={lf['ll_over_tuned']:.3f}, "
+      f"contended/uncontended={lf['contended_over_uncontended']:.3f}; "
+      "replays exact")
 EOF
 }
 

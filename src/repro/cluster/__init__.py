@@ -12,7 +12,7 @@ stage independently, cross-node triggers pay explicit activation-transfer
 latency/energy, and migrations charge state-transfer cost into the fleet
 UXCost — see ``docs/architecture.md`` and ``docs/scheduling.md``.
 """
-from repro.core.costmodel import TransferModel
+from repro.core.costmodel import ContendedLinks, TransferModel
 
 from .builder import (FleetEvent, FleetScenario, FleetScenarioBuilder,
                       split_pipelines)
@@ -27,7 +27,7 @@ from .trace import (FLEET_EVENT_KINDS, FLEET_TRACE_VERSION, FleetTrace,
                     FleetTraceRecorder, dumps, load_trace, loads, save_trace)
 
 __all__ = [
-    "TransferModel",
+    "ContendedLinks", "TransferModel",
     "FleetEvent", "FleetScenario", "FleetScenarioBuilder", "split_pipelines",
     "FleetResult", "FleetSimulator", "StreamView", "canonical_stream_model",
     "node_seed", "run_fleet",

@@ -1,8 +1,10 @@
 """Fleet scenarios: node membership + stream arrivals as declarative data.
 
 A :class:`FleetScenario` is an ordered list of timed fleet events — nodes
-joining/leaving/draining, streams arriving, fleet-level phase events
-(stream-addressed workload mutations such as diurnal load shifts) —
+joining/leaving/draining, streams arriving, *departing and rejoining*
+(the full task lifecycle: RTMM tasks stop when the user's context
+changes, not only start), fleet-level phase events (stream-addressed
+workload mutations such as diurnal load shifts) —
 exactly the external input a multi-node deployment sees.  The builder shards existing single-node
 workload definitions across the fleet: a registry scenario or a fuzzer
 sample splits into its independent pipelines (a head model plus its
@@ -37,7 +39,8 @@ class FleetEvent:
     """One timed fleet-level event (serializable kind + payload)."""
 
     t: float
-    kind: str   # node_join | node_leave | node_drain | stream | phase
+    #: node_join | node_leave | node_drain | stream | depart | rejoin | phase
+    kind: str
     payload: dict
 
     def to_config(self) -> dict:
@@ -176,6 +179,33 @@ class FleetScenarioBuilder:
         self._events.append(FleetEvent(float(at), "phase", payload))
         return self
 
+    # --------------------------------------------------- stream lifecycle
+    def depart(self, sid: int, at: float) -> "FleetScenarioBuilder":
+        """Stream ``sid`` departs at ``at`` — the load-release half of
+        task-level dynamicity: the user's context changed and the task
+        stopped.  The fleet evicts the stream from its hosting node(s),
+        purges its queued (not-yet-running) frames from the backlog
+        without counting them against UXCost, and re-arms the touched
+        nodes' probes and the fleet weight tuner.  ``build()`` validates
+        ordering: a depart must follow the stream's arrival (and any
+        earlier depart must have been rejoined)."""
+        self._check_sid(sid)
+        self._events.append(FleetEvent(float(at), "depart", {"sid": sid}))
+        return self
+
+    def rejoin(self, sid: int, at: float) -> "FleetScenarioBuilder":
+        """A departed stream returns at ``at`` with its recorded pipeline
+        definition: the router re-places it (fresh placement generation)
+        exactly like a new arrival.  Must follow a ``depart`` of the same
+        stream (validated by ``build()``)."""
+        self._check_sid(sid)
+        self._events.append(FleetEvent(float(at), "rejoin", {"sid": sid}))
+        return self
+
+    def _check_sid(self, sid: int) -> None:
+        if not 0 <= sid < self._next_sid:
+            raise ScenarioError(f"unknown stream id {sid}")
+
     # ----------------------------------------------------------- streams
     def add_stream(self, entries: "list[dict] | list[ModelEntry]",
                    at: float = 0.0) -> int:
@@ -207,7 +237,10 @@ class FleetScenarioBuilder:
                      t1: float = 1.0, max_pipelines: int = 1,
                      fps_scale: float = 1.0, cascade_prob: float = 0.5,
                      max_depth: int = 2, cascades_only: bool = False,
-                     deterministic_arrivals: bool = False) -> list[int]:
+                     deterministic_arrivals: bool = False,
+                     depart_frac: float = 0.0, rejoin_frac: float = 0.0,
+                     t_depart0: "float | None" = None,
+                     t_depart1: "float | None" = None) -> list[int]:
         """Seeded stream population: fuzzer-sampled pipelines with arrival
         times uniform over [t0, t1).  Deterministic at build time, so the
         resulting FleetScenario needs no runtime randomness.
@@ -229,12 +262,25 @@ class FleetScenarioBuilder:
         RNG in event order, so their realizations depend on which streams
         share a node — pinning them makes the offered workload identical
         across placement policies, which is what a fair routing comparison
-        (e.g. whole-pipeline vs stage-split) needs."""
+        (e.g. whole-pipeline vs stage-split) needs.
+
+        ``depart_frac`` makes the population *lifecycle-churned*: that
+        fraction of streams departs mid-run, each at a time uniform over
+        [``t_depart0``, ``t_depart1``) (defaulting to [t1, 2*t1) — after
+        the arrival window), and ``rejoin_frac`` of the departed streams
+        rejoins later, uniform over (depart time, ``t_depart1``).
+        Lifecycle draws come from a dedicated RNG stream, so populations
+        with ``depart_frac=0`` reproduce their historical arrivals
+        bit-for-bit."""
         if cascades_only and not cascade_prob > 0.0:
             raise ScenarioError("cascades_only with cascade_prob=0 can "
                                 "never admit a stream")
+        if not 0.0 <= depart_frac <= 1.0 or not 0.0 <= rejoin_frac <= 1.0:
+            raise ScenarioError("depart_frac / rejoin_frac must be in "
+                                f"[0, 1], got {depart_frac}/{rejoin_frac}")
         rng = np.random.default_rng([seed, 0xF1EE7])
         sids: list[int] = []
+        arrivals: list[float] = []
         k = 0
         while len(sids) < n_streams:
             b = fuzz_scenario(seed * 100_003 + k, max_pipelines=max_pipelines,
@@ -254,6 +300,24 @@ class FleetScenarioBuilder:
                                           "phase_frac": round(phase, 6)}
                 t = round(float(rng.uniform(t0, t1)), 6)
                 sids.append(self.add_stream(pipe, at=t))
+                arrivals.append(t)
+        if depart_frac > 0.0:
+            # dedicated stream: lifecycle draws must not perturb the
+            # arrival/pipeline draws above for depart_frac=0 populations
+            lrng = np.random.default_rng([seed, 0xDE9A27])
+            d0 = t1 if t_depart0 is None else float(t_depart0)
+            d1 = 2.0 * t1 if t_depart1 is None else float(t_depart1)
+            n_depart = int(round(depart_frac * len(sids)))
+            leavers = sorted(lrng.choice(len(sids), size=n_depart,
+                                         replace=False).tolist())
+            for i in leavers:
+                # clamp to the arrival: 6-decimal rounding of a draw near
+                # the window edge must not put a depart before its stream
+                td = max(round(float(lrng.uniform(d0, d1)), 6), arrivals[i])
+                self.depart(sids[i], at=td)
+                if lrng.random() < rejoin_frac and td < d1:
+                    self.rejoin(sids[i],
+                                at=round(float(lrng.uniform(td, d1)), 6))
         return sids
 
     # ------------------------------------------------------------- build
@@ -266,6 +330,9 @@ class FleetScenarioBuilder:
                          key=lambda p: (p[1].t, p[0]))
         events = tuple(e for _, e in indexed)
         joined: set[int] = set()            # temporal consistency check
+        #: per-stream lifecycle state: absent -> present -> departed -> ...
+        present: set[int] = set()
+        departed: set[int] = set()
         for e in events:
             if e.kind == "node_join":
                 joined.add(e.payload["node"])
@@ -274,4 +341,24 @@ class FleetScenarioBuilder:
                     raise ScenarioError(
                         f"{e.kind} of node {e.payload['node']} at t={e.t} "
                         "precedes its join")
+            elif e.kind == "stream":
+                present.add(e.payload["sid"])
+            elif e.kind == "depart":
+                sid = e.payload["sid"]
+                if sid not in present:
+                    raise ScenarioError(
+                        f"depart of stream {sid} at t={e.t} precedes its "
+                        "arrival" if sid not in departed else
+                        f"stream {sid} departs twice without a rejoin "
+                        f"(second depart at t={e.t})")
+                present.discard(sid)
+                departed.add(sid)
+            elif e.kind == "rejoin":
+                sid = e.payload["sid"]
+                if sid not in departed:
+                    raise ScenarioError(
+                        f"rejoin of stream {sid} at t={e.t} has no "
+                        "preceding depart")
+                departed.discard(sid)
+                present.add(sid)
         return FleetScenario(name=self.name, events=events)

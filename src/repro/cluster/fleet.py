@@ -35,6 +35,25 @@ Elastic membership is first-class:
     queue but accepts no new placements.
   * ``node_leave`` — abrupt: streams migrate, jobs in flight are lost.
 
+And so is the *stream lifecycle* — the load-release half of the paper's
+task-level dynamicity:
+
+  * ``depart`` — a stream stops mid-run: it is evicted from its hosting
+    node(s), its queued (not-yet-running) frames are purged without
+    counting against UXCost, the touched nodes' probes re-arm, and so
+    does the fleet weight tuner.  Frames served while the stream was
+    present stay in the UXCost merge.
+  * ``rejoin`` — a departed stream returns: the router re-places its
+    recorded definition under a fresh placement generation, exactly like
+    a new arrival.
+
+Transfers (migrations *and* cross-node cascade triggers) are realized
+over shared per-node-pair links (:class:`repro.core.costmodel.ContendedLinks`):
+with a finite ``link_bandwidth_bytes_s`` concurrent transfers on one
+node pair queue FIFO for the wire, so ``W_XFER`` penalties and migration
+delays reflect load-dependent realized times; the default (infinite link
+bandwidth) is uncontended and bit-identical to the historical model.
+
 Under a ``TransferModel``, every migration (drain/leave/rebalance) charges
 the moved model state exactly once: the re-placement is delayed by the
 state-transfer latency and the link energy is added to the moved model's
@@ -92,12 +111,13 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.costmodel import (TransferModel, activation_bytes,
-                                  model_state_bytes)
+from repro.core.costmodel import (ContendedLinks, TransferModel,
+                                  activation_bytes, model_state_bytes)
 from repro.core.scheduler import dream_full
 from repro.core.simulator import SchedulerBase
 from repro.core.uxcost import (WindowStats, overall_dlv_rate,
-                               overall_norm_energy, uxcost)
+                               overall_norm_energy,
+                               overall_pipeline_latency, uxcost)
 from repro.scenarios.builder import ModelEntry
 
 from repro.scenarios.phases import PhaseAction
@@ -334,6 +354,14 @@ class FleetResult:
     tuner_windows: int = 0       # telemetry windows the tuner consumed
     tuner_commits: int = 0       # probe mini-cycles that moved the center
     tuner_retriggers: int = 0    # tuner re-arms (churn + phase events)
+    pipeline_latency_s: float = 0.0  # mean head-to-tail latency, wire incl.
+    pipe_frames: int = 0         # pipelines completed head-to-tail
+    departures: int = 0          # stream depart events applied
+    rejoins: int = 0             # stream rejoin events applied
+    jobs_purged: int = 0         # queued jobs discarded by departures
+    link_transfers: int = 0      # transfers routed over shared links
+    link_queued: int = 0         # of which waited on a busy link
+    link_wait_s: float = 0.0     # total link queueing delay experienced
 
     def summary(self) -> str:
         return (f"fleet[{self.policy:>11s}] nodes={self.n_nodes:<3d} "
@@ -417,10 +445,23 @@ class FleetSimulator:
         #: replay never draws from it (tune decisions come from the trace)
         self._tuner_rng = np.random.default_rng([seed, 0x7D5E])
         self.tuner_retriggers = 0
+        #: realized transfer times over shared per-node-pair links —
+        #: uncontended (infinite link bandwidth) unless the TransferModel
+        #: says otherwise; replay reconstructs it from the trace meta and
+        #: re-derives identical queueing because the fleet clock totally
+        #: orders transfer requests
+        self.links = ContendedLinks(transfer) if transfer is not None else None
         self.nodes: dict[int, FleetNode] = {}
         self.streams: dict[int, StreamView] = {}
         self.stream_node: dict[int, int] = {}   # sid -> hosting node id
         self.gen: dict[int, int] = {}           # sid -> placement generation
+        #: streams currently departed (lifecycle released); a rejoin
+        #: removes the sid again.  Departed streams keep their StreamView
+        #: (the rejoin re-places from it) but hold no placements.
+        self.departed: set[int] = set()
+        self.departures = 0
+        self.rejoins = 0
+        self.jobs_purged = 0
         # stage-split bookkeeping, keyed by (sid, stage)
         self.stage_node: dict[tuple[int, int], int] = {}
         self.stage_gen: dict[tuple[int, int], int] = {}
@@ -522,7 +563,7 @@ class FleetSimulator:
         pend = node.sim.pending_completions
         node.sim.pending_completions = []
         pushes: list[tuple[float, int]] = []
-        for name, tc in pend:
+        for name, tc, origin in pend:
             key = self._name_stage.get(name)
             if key is None:
                 continue
@@ -537,9 +578,12 @@ class FleetSimulator:
                 t_inj = tc
                 if dst != node.node_id:
                     nbytes = sv.act_bytes_into(ck)
-                    t_inj = tc + self.transfer.transfer_s(nbytes)
-                    self._charge(f"s{sid}." + sv.stage_base(ck),
-                                 self.transfer.transfer_j(nbytes))
+                    # shared-link realization: a trigger behind another
+                    # transfer on the same node pair queues for the wire
+                    xfer_s, xfer_j = self.links.transfer(
+                        node.node_id, dst, nbytes, tc)
+                    t_inj = tc + xfer_s
+                    self._charge(f"s{sid}." + sv.stage_base(ck), xfer_j)
                     self.trigger_transfers += 1
                 # a freshly-migrated child serves nothing until its weight
                 # state lands; early triggers queue until residency (the
@@ -547,7 +591,8 @@ class FleetSimulator:
                 # wait eats real slack)
                 t_inj = max(t_inj, self.stage_ready.get((sid, ck), t_inj))
                 self.nodes[dst].sim.inject_arrival(
-                    self.stage_name[(sid, ck)], t_inj, deadline_anchor=tc)
+                    self.stage_name[(sid, ck)], t_inj, deadline_anchor=tc,
+                    origin=origin)
                 pushes.append((t_inj, dst))
         return pushes
 
@@ -590,9 +635,11 @@ class FleetSimulator:
         if self.transfer is not None:
             sv = self.streams[sid]
             total = sum(sv.state_bytes(k) for k in range(sv.n_stages))
-            xfer_s = (self.transfer.transfer_s(total)
-                      if self.transfer.enabled else 0.0)
-            xfer_j = self.transfer.transfer_j(total)
+            if self.transfer.enabled:
+                xfer_s, xfer_j = self.links.transfer(src, dst, total, t)
+            else:
+                # air-gapped: weights reload from node-local storage
+                xfer_s, xfer_j = 0.0, self.transfer.transfer_j(total)
             t_place = t + xfer_s
             for k in range(sv.n_stages):
                 self._charge(f"s{sid}." + sv.stage_base(k),
@@ -629,9 +676,10 @@ class FleetSimulator:
         self.nodes[src].evict((sid, k), t)
         sv = self.streams[sid]
         nbytes = sv.state_bytes(k)
-        xfer_s = (self.transfer.transfer_s(nbytes)
-                  if self.transfer.enabled else 0.0)
-        xfer_j = self.transfer.transfer_j(nbytes)
+        if self.transfer.enabled:
+            xfer_s, xfer_j = self.links.transfer(src, dst, nbytes, t)
+        else:
+            xfer_s, xfer_j = 0.0, self.transfer.transfer_j(nbytes)
         self._charge(f"s{sid}." + sv.stage_base(k), xfer_j)
         self._place_stage(sid, k, dst, t + xfer_s, gen)
         self.migrations += 1
@@ -743,7 +791,10 @@ class FleetSimulator:
                    else [int(s) for s in sids])
         for sid in targets:
             sv = self.streams.get(sid)
-            if sv is None:
+            if sv is None or sid in self.departed:
+                # a phase cannot retarget the future (stream not arrived)
+                # or the absent (departed; it rejoins at its last-seen
+                # definition) — identical live and in replay
                 continue
             by_node: dict[int, list[str]] = {}
             if self.split:
@@ -785,7 +836,8 @@ class FleetSimulator:
                 set_weights(ev["weights"])
             return
         win = self.telemetry.observe(t, self.nodes, self.migrations,
-                                     sum(self.xfer_energy.values()))
+                                     sum(self.xfer_energy.values()),
+                                     departures=self.departures)
         on_window = getattr(self.policy, "on_window", None)
         if on_window is None:
             return                      # telemetry-only tick
@@ -842,6 +894,74 @@ class FleetSimulator:
             self._place(sid, nid, t, gen=0)
             if self.recorder is not None:
                 self.recorder.place(t, sid, nid, 0)
+
+    def _on_depart(self, t: float, ev: dict) -> None:
+        """Stream departure — the load-release half of task dynamicity.
+        Runs identically live and in replay (placements at ``t`` are
+        identical, so the eviction and purge are too): the stream is
+        evicted from its hosting node(s), its queued-but-not-running
+        frames are purged without counting against UXCost (the user
+        walked away; jobs already executing finish and count), the
+        touched nodes' (alpha, beta) probes re-arm via the eviction path,
+        and the fleet weight tuner re-arms — less offered load is as much
+        a workload change as more."""
+        sid = int(ev["sid"])
+        sv = self.streams.get(sid)
+        if sv is None or sid in self.departed:
+            raise ValueError(f"depart of stream {sid} at t={t}: stream "
+                             "is not present (bad scenario or trace)")
+        purged = 0
+        if self.split:
+            for k in range(sv.n_stages):
+                nid = self.stage_node.pop((sid, k), None)
+                if nid is not None and self.nodes[nid].alive:
+                    purged += self.nodes[nid].release((sid, k), t)
+                self.stage_ready.pop((sid, k), None)
+        else:
+            nid = self.stream_node.pop(sid, None)
+            if nid is not None and self.nodes[nid].alive:
+                purged += self.nodes[nid].release(sid, t)
+        self.departed.add(sid)
+        self.departures += 1
+        self.jobs_purged += purged
+        if self.recorder is not None:
+            self.recorder.depart(t, sid, purged)
+        self._rearm_tuner()
+
+    def _on_rejoin(self, t: float, ev: dict) -> None:
+        """A departed stream returns: the router re-places its recorded
+        pipeline definition under a fresh placement generation, exactly
+        like a new arrival (replay: the recorded ``place`` events
+        follow).  The sudden load is a workload change, so the fleet
+        tuner re-arms here too."""
+        sid = int(ev["sid"])
+        if sid not in self.departed:
+            raise ValueError(f"rejoin of stream {sid} at t={t} without a "
+                             "preceding depart (bad scenario or trace)")
+        self.departed.discard(sid)
+        self.rejoins += 1
+        if self.recorder is not None:
+            self.recorder.rejoin(t, sid)
+        self._rearm_tuner()
+        if self.replay is not None:
+            return                       # recorded `place` events follow
+        cands = self._candidates()
+        if not cands:
+            raise RuntimeError(f"stream {sid} rejoined with no live nodes")
+        sv = self.streams[sid]
+        if self.split:
+            nids = self.policy.place_stages(sv, cands, self.transfer)
+            for k, nid in enumerate(nids):
+                gen = self.stage_gen[(sid, k)] + 1
+                self._place_stage(sid, k, nid, t, gen=gen)
+                if self.recorder is not None:
+                    self.recorder.place(t, sid, nid, gen, stage=k)
+        else:
+            nid = self.policy.place(sv, cands)
+            gen = self.gen[sid] + 1
+            self._place(sid, nid, t, gen=gen)
+            if self.recorder is not None:
+                self.recorder.place(t, sid, nid, gen)
 
     def _on_place(self, t: float, ev: dict) -> None:       # replay only
         if "stage" in ev:
@@ -973,6 +1093,8 @@ class FleetSimulator:
             "node_leave": self._on_node_leave,
             "node_drain": self._on_node_drain,
             "stream": self._on_stream,
+            "depart": self._on_depart,
+            "rejoin": self._on_rejoin,
             "place": self._on_place,
             "migrate": self._on_migrate,
             "rebalance": self._on_rebalance,
@@ -1059,6 +1181,15 @@ class FleetSimulator:
             tuner_commits=getattr(
                 getattr(self.policy, "probe", None), "commits", 0),
             tuner_retriggers=self.tuner_retriggers,
+            pipeline_latency_s=overall_pipeline_latency(fleet_stats),
+            pipe_frames=sum(st.pipe_frames
+                            for st in fleet_stats.per_model.values()),
+            departures=self.departures,
+            rejoins=self.rejoins,
+            jobs_purged=self.jobs_purged,
+            link_transfers=(self.links.n_transfers if self.links else 0),
+            link_queued=(self.links.n_queued if self.links else 0),
+            link_wait_s=(self.links.queued_s if self.links else 0.0),
         )
 
 

@@ -144,6 +144,16 @@ class FleetNode:
         self._recompute_offered()
         self.retrigger_probe()
 
+    def release(self, key: object, t: float) -> int:
+        """Departure eviction: evict the placement *and* purge its queued
+        (not-yet-running) jobs — the stream left, so its backlog vanishes
+        with it instead of counting as violations (migration eviction, by
+        contrast, lets queued jobs finish: the stream still exists, only
+        elsewhere).  Returns the number of jobs purged."""
+        names = list(self.placements.get(key, ()))
+        self.evict(key, t)
+        return sum(self.sim.purge_model(name) for name in names)
+
     def _recompute_offered(self) -> None:
         live = {n for names in self.placements.values() for n in names}
         total = 0.0

@@ -70,6 +70,9 @@ class TelemetryWindow:
     xfer_j: float                     # transfer energy charged in the window
     stream_uxcost: dict[str, float]   # per-stream ("s<sid>") UXCost delta
     n_models: int = 0                 # models that completed frames
+    pipe_frames: int = 0              # pipelines completed head-to-tail
+    pipe_latency_s: float = 0.0       # summed head-to-tail latency (s)
+    departures: int = 0               # stream departures in the window
 
     @property
     def norm_uxcost(self) -> float:
@@ -87,6 +90,14 @@ class TelemetryWindow:
         if self.n_models == 0:
             return 0.0
         return self.uxcost / float(self.n_models) ** 2
+
+    @property
+    def mean_pipeline_latency_s(self) -> float:
+        """Mean head-to-tail pipeline latency over the window's completed
+        pipelines (0 when none completed) — the end-to-end metric next to
+        the per-model DLV rates."""
+        return self.pipe_latency_s / self.pipe_frames if self.pipe_frames \
+            else 0.0
 
     @property
     def empty(self) -> bool:
@@ -115,19 +126,21 @@ class FleetTelemetry:
         self.canonical = canonical or (lambda name: name)
         self.windows: list[TelemetryWindow] = []
         self._t_last = 0.0
-        self._last: dict[str, tuple[int, int, float, float]] = {}
+        #: per canonical model: (frames, violated, energy, worst_energy,
+        #: pipe_frames, pipe_latency_s) cumulative at the last snapshot
+        self._last: dict[str, tuple] = {}
         self._last_by_node: dict[int, tuple[int, int]] = {}
         self._last_migrations = 0
         self._last_xfer_j = 0.0
+        self._last_departures = 0
 
     # ------------------------------------------------------------ snapshot
     def _cumulative(self, nodes: dict) -> tuple[
-            dict[str, tuple[int, int, float, float]],
-            dict[int, tuple[int, int]]]:
+            dict[str, tuple], dict[int, tuple[int, int]]]:
         """Fleet-cumulative per-canonical-model stats and per-node frame
         counters.  Reads each node's merged global stats plus the open
         UXCost window, so tune ticks need not align with node windows."""
-        per_model: dict[str, tuple[int, int, float, float]] = {}
+        per_model: dict[str, tuple] = {}
         per_node: dict[int, tuple[int, int]] = {}
         for nid in sorted(nodes):
             node = nodes[nid]
@@ -135,27 +148,35 @@ class FleetTelemetry:
             for stats in (node.sim.global_stats, node.sim.window_stats):
                 for name, st in stats.per_model.items():
                     cname = self.canonical(name)
-                    f, v, e, w = per_model.get(cname, (0, 0, 0.0, 0.0))
+                    f, v, e, w, qf, ql = per_model.get(
+                        cname, (0, 0, 0.0, 0.0, 0, 0.0))
                     per_model[cname] = (f + st.frames, v + st.violated,
                                         e + st.energy_j,
-                                        w + st.worst_energy_j)
+                                        w + st.worst_energy_j,
+                                        qf + st.pipe_frames,
+                                        ql + st.pipe_latency_s)
                     nf += st.frames
                     nv += st.violated
             per_node[nid] = (nf, nv)
         return per_model, per_node
 
     def observe(self, t: float, nodes: dict, migrations: int,
-                xfer_energy_j: float) -> TelemetryWindow:
-        """Close the current window at fleet time ``t`` and return it."""
+                xfer_energy_j: float,
+                departures: int = 0) -> TelemetryWindow:
+        """Close the current window at fleet time ``t`` and return it.
+        ``departures`` is the fleet's cumulative stream-departure counter
+        (the window reports the delta, like migrations)."""
         cum, by_node = self._cumulative(nodes)
         delta = WindowStats()
         for cname in sorted(cum):
-            f, v, e, w = cum[cname]
-            pf, pv, pe, pw = self._last.get(cname, (0, 0, 0.0, 0.0))
+            f, v, e, w, qf, ql = cum[cname]
+            pf, pv, pe, pw, pqf, pql = self._last.get(
+                cname, (0, 0, 0.0, 0.0, 0, 0.0))
             if f - pf > 0 or w - pw > 0.0:
                 delta.per_model[cname] = ModelWindowStats(
                     frames=f - pf, violated=v - pv, energy_j=e - pe,
-                    worst_energy_j=w - pw)
+                    worst_energy_j=w - pw, pipe_frames=qf - pqf,
+                    pipe_latency_s=ql - pql)
         node_dlv: dict[int, float] = {}
         node_frames: dict[int, int] = {}
         for nid in sorted(by_node):
@@ -191,6 +212,11 @@ class FleetTelemetry:
             stream_uxcost=stream_ux,
             n_models=sum(1 for st in delta.per_model.values()
                          if st.frames > 0),
+            pipe_frames=sum(st.pipe_frames
+                            for st in delta.per_model.values()),
+            pipe_latency_s=sum(st.pipe_latency_s
+                               for st in delta.per_model.values()),
+            departures=departures - self._last_departures,
         )
         self.windows.append(win)
         self._t_last = t
@@ -198,4 +224,5 @@ class FleetTelemetry:
         self._last_by_node = by_node
         self._last_migrations = migrations
         self._last_xfer_j = xfer_energy_j
+        self._last_departures = departures
         return win

@@ -11,7 +11,17 @@ trace records, in processing order:
     {"type": "place",      "t": 0.3, "sid": 4, "node": 2, "gen": 0}
     {"type": "node_drain", "t": 1.0, "node": 1}
     {"type": "migrate",    "t": 1.0, "sid": 3, "from": 1, "to": 0, "gen": 1}
+    {"type": "depart",     "t": 1.2, "sid": 4, "purged": 3}
+    {"type": "rejoin",     "t": 1.4, "sid": 4}
+    {"type": "place",      "t": 1.4, "sid": 4, "node": 0, "gen": 1}
     {"type": "node_leave", "t": 1.5, "node": 3}
+
+Stream lifecycle records: ``depart`` is an *input* (re-applied on replay
+— the eviction and backlog purge re-derive identically; the recorded
+``purged`` count only documents what the live run discarded), and
+``rejoin`` is an input whose re-placement *decisions* follow as ordinary
+generation-bumped ``place`` records, so replay bypasses the router for
+rejoins exactly as it does for arrivals.
 
 Stage-split runs (``FleetSimulator(split_stages=True)``) additionally carry
 a ``"stage"`` index on ``place``/``migrate`` events, and migrations under a
@@ -59,7 +69,8 @@ from repro.scenarios import trace as base
 
 FLEET_TRACE_VERSION = 1
 FLEET_EVENT_KINDS = ("node_join", "node_leave", "node_drain",
-                     "stream", "place", "migrate", "phase", "tune")
+                     "stream", "depart", "rejoin",
+                     "place", "migrate", "phase", "tune")
 
 
 class FleetTrace(base.Trace):
@@ -101,6 +112,18 @@ class FleetTraceRecorder:
     def stream(self, t: float, sid: int, entries: list[dict]) -> None:
         self.events.append({"type": "stream", "t": float(t), "sid": sid,
                             "entries": entries})
+
+    def depart(self, t: float, sid: int, purged: int) -> None:
+        """A stream departing (load release).  ``purged`` documents how
+        many queued jobs the departure discarded; replay re-derives the
+        purge through the same eviction path and ignores the field."""
+        self.events.append({"type": "depart", "t": float(t), "sid": sid,
+                            "purged": int(purged)})
+
+    def rejoin(self, t: float, sid: int) -> None:
+        """A departed stream returning; the re-placement decisions follow
+        as ordinary ``place`` records (generation-bumped)."""
+        self.events.append({"type": "rejoin", "t": float(t), "sid": sid})
 
     def place(self, t: float, sid: int, node: int, gen: int,
               stage: Optional[int] = None) -> None:

@@ -1,11 +1,12 @@
 """DREAM core: the paper's scheduler, metrics, workloads and simulator."""
 from .types import (Accelerator, Dataflow, Layer, ModelGraph, ModelSpec, OpType,
                     Scenario, SYSTEMS, HETERO_SYSTEMS, HOMO_SYSTEMS)
-from .costmodel import (CostTable, TransferModel, activation_bytes,
-                        build_cost_table, build_tables, layer_energy_j,
-                        layer_latency_s, model_state_bytes)
+from .costmodel import (ContendedLinks, CostTable, TransferModel,
+                        activation_bytes, build_cost_table, build_tables,
+                        layer_energy_j, layer_latency_s, model_state_bytes)
 from .mapscore import MapScoreParams, mapscore, togo_seconds, min_togo_seconds
-from .uxcost import WindowStats, uxcost, rate_dlv, norm_energy
+from .uxcost import (WindowStats, uxcost, rate_dlv, norm_energy,
+                     overall_pipeline_latency)
 from .simulator import Dispatch, Job, SchedulerBase, SimResult, Simulator, run_sim
 from .scheduler import (DreamScheduler, dream_mapscore, dream_smartdrop,
                         dream_full, AdaptivityState)
@@ -17,10 +18,12 @@ from .workloads import SCENARIOS, build_scenario
 __all__ = [
     "Accelerator", "Dataflow", "Layer", "ModelGraph", "ModelSpec", "OpType",
     "Scenario", "SYSTEMS", "HETERO_SYSTEMS", "HOMO_SYSTEMS",
-    "CostTable", "TransferModel", "activation_bytes", "build_cost_table",
+    "ContendedLinks", "CostTable", "TransferModel", "activation_bytes",
+    "build_cost_table",
     "build_tables", "layer_energy_j", "layer_latency_s", "model_state_bytes",
     "MapScoreParams", "mapscore", "togo_seconds",
     "min_togo_seconds", "WindowStats", "uxcost", "rate_dlv", "norm_energy",
+    "overall_pipeline_latency",
     "Dispatch", "Job", "SchedulerBase", "SimResult", "Simulator", "run_sim",
     "DreamScheduler", "dream_mapscore", "dream_smartdrop", "dream_full",
     "AdaptivityState", "FCFSScheduler", "StaticFCFSScheduler",

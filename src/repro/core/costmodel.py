@@ -286,6 +286,15 @@ XFER_ENERGY_PER_BYTE_J = 30e-12   # NIC + switch energy per byte moved
 class TransferModel:
     """Inter-node state-transfer cost: latency + energy per moved byte.
 
+    ``bandwidth_bytes_s`` is the *per-transfer* (endpoint/NIC) rate — what
+    a single transfer achieves with the fabric to itself.
+    ``link_bandwidth_bytes_s`` is the capacity of the **shared wire**
+    between any one node pair: when finite, concurrent transfers on the
+    same pair contend (see :class:`ContendedLinks`); the default of
+    ``inf`` models an uncontended fabric, in which every transfer takes
+    exactly ``transfer_s(nbytes)`` regardless of what else is in flight —
+    the historical (PR-3) behavior, reproduced bit-exactly.
+
     ``bandwidth_bytes_s == 0`` models an air-gapped fleet: every transfer
     takes infinite time, so stage-split placement degenerates to
     whole-pipeline placement (the router can never justify a cross-node
@@ -295,30 +304,104 @@ class TransferModel:
     bandwidth_bytes_s: float = XFER_BANDWIDTH_BYTES_S
     base_latency_s: float = XFER_BASE_LATENCY_S
     energy_per_byte_j: float = XFER_ENERGY_PER_BYTE_J
+    link_bandwidth_bytes_s: float = math.inf
 
     @property
     def enabled(self) -> bool:
         """Whether cross-node transfers can complete in finite time."""
         return self.bandwidth_bytes_s > 0.0
 
+    @property
+    def contended(self) -> bool:
+        """Whether per-node-pair links have finite shared capacity."""
+        return math.isfinite(self.link_bandwidth_bytes_s)
+
+    @property
+    def wire_bandwidth_bytes_s(self) -> float:
+        """Rate one transfer realizes on the shared wire: the endpoint
+        rate capped by the link capacity."""
+        return min(self.bandwidth_bytes_s, self.link_bandwidth_bytes_s)
+
     def transfer_s(self, nbytes: float) -> float:
-        """Wall-clock seconds to move ``nbytes`` between two nodes."""
+        """Wall-clock seconds to move ``nbytes`` between two nodes when
+        the pair's link is idle (the uncontended lower bound; realized
+        times come from :class:`ContendedLinks`)."""
         if not self.enabled:
             return math.inf
-        return self.base_latency_s + float(nbytes) / self.bandwidth_bytes_s
+        return (self.base_latency_s
+                + float(nbytes) / self.wire_bandwidth_bytes_s)
 
     def transfer_j(self, nbytes: float) -> float:
         """Link energy (J) to move ``nbytes`` between two nodes."""
         return float(nbytes) * self.energy_per_byte_j
 
     def to_config(self) -> dict:
-        return {"bandwidth_bytes_s": self.bandwidth_bytes_s,
-                "base_latency_s": self.base_latency_s,
-                "energy_per_byte_j": self.energy_per_byte_j}
+        cfg = {"bandwidth_bytes_s": self.bandwidth_bytes_s,
+               "base_latency_s": self.base_latency_s,
+               "energy_per_byte_j": self.energy_per_byte_j}
+        if self.contended:
+            # only serialized when finite: keeps uncontended trace metas
+            # byte-identical to the PR-3 format (and JSON has no inf)
+            cfg["link_bandwidth_bytes_s"] = self.link_bandwidth_bytes_s
+        return cfg
 
     @classmethod
     def from_config(cls, cfg: dict) -> "TransferModel":
         return cls(**cfg)
+
+
+class ContendedLinks:
+    """Realized transfer times over shared per-node-pair links.
+
+    One instance tracks the live occupancy of every inter-node link of a
+    fleet run.  The contention law is FIFO service on the shared wire:
+    transfers between one (unordered) node pair are serviced in request
+    order at ``wire_bandwidth_bytes_s``; a transfer requested while the
+    pair's wire is still busy waits for it (the queueing delay), then
+    occupies it for ``nbytes / wire_bandwidth`` — so two concurrent
+    migrations on one link finish strictly later than either would
+    alone, while transfers on *different* node pairs never interact.
+    ``base_latency_s`` (NIC + RPC + hop setup) is charged per transfer
+    but does not occupy the wire.
+
+    With ``link_bandwidth_bytes_s == inf`` (the default TransferModel)
+    the wire is never a bottleneck: no state is kept and every transfer
+    takes exactly ``TransferModel.transfer_s(nbytes)`` — bit-identical
+    to the historical uncontended model.
+
+    Deterministic by construction: realized times depend only on the
+    request sequence, which the fleet clock totally orders — so trace
+    replay re-derives identical charges through this same class.
+    """
+
+    def __init__(self, model: TransferModel):
+        self.model = model
+        #: unordered node pair -> time its wire is busy until
+        self._busy_until: dict[tuple[int, int], float] = {}
+        self.n_transfers = 0
+        self.n_queued = 0           # transfers that waited on a busy wire
+        self.queued_s = 0.0         # total queueing delay experienced
+
+    def transfer(self, a: int, b: int, nbytes: float,
+                 t: float) -> tuple[float, float]:
+        """Request moving ``nbytes`` between nodes ``a`` and ``b`` at time
+        ``t``; returns ``(realized wall-clock seconds, energy J)`` and
+        books the wire occupancy."""
+        m = self.model
+        if not m.enabled:
+            return math.inf, m.transfer_j(nbytes)
+        if not m.contended:
+            return m.transfer_s(nbytes), m.transfer_j(nbytes)
+        pair = (a, b) if a <= b else (b, a)
+        start = max(t, self._busy_until.get(pair, t))
+        service = float(nbytes) / m.wire_bandwidth_bytes_s
+        self._busy_until[pair] = start + service
+        wait = start - t
+        self.n_transfers += 1
+        if wait > 0.0:
+            self.n_queued += 1
+            self.queued_s += wait
+        return wait + m.base_latency_s + service, m.transfer_j(nbytes)
 
 
 def model_state_bytes(graph: ModelGraph) -> float:

@@ -37,7 +37,8 @@ import numpy as np
 
 from .costmodel import CostTable, E_DRAM, build_tables, effective_deadline
 from .types import Accelerator, ModelGraph, ModelSpec, Scenario, SYSTEMS
-from .uxcost import WindowStats, uxcost, overall_dlv_rate, overall_norm_energy
+from .uxcost import (WindowStats, uxcost, overall_dlv_rate,
+                     overall_norm_energy, overall_pipeline_latency)
 
 ARRIVAL, DONE, WINDOW, PHASE, INJECT = 0, 1, 2, 3, 4
 
@@ -60,6 +61,10 @@ class Job:
     cum_min: np.ndarray         # suffix sums of lat_min over path (min_to_go)
     arrival: float
     deadline: float
+    #: pipeline origin: the head frame's arrival time, inherited down the
+    #: cascade (and across nodes, wire time included) — tail completions
+    #: record ``t - origin`` as head-to-tail pipeline latency
+    origin: float = 0.0
     pos: int = 0
     t_cmpl: float = 0.0         # last layer completion (Alg.1 T_cmpl)
     running: bool = False
@@ -141,6 +146,7 @@ class SimResult:
     windows: list[tuple[float, float, float, float]]  # (t, uxcost, alpha, beta)
     acc_utilization: list[float]
     trace: Optional[object] = None      # recorded Trace when record=True
+    pipeline_latency_s: float = 0.0     # mean head-to-tail latency (s)
 
     def summary(self) -> str:
         return (f"{self.scenario:>14s} {self.system:>10s} {self.scheduler:>16s} "
@@ -247,7 +253,8 @@ class Simulator:
         #: drain and forward; both stay empty in single-node runs, so the
         #: engine's behavior and RNG consumption are untouched
         self.export_completions: set[str] = set()
-        self.pending_completions: list[tuple[str, float]] = []
+        #: (model name, completion time, pipeline origin) triples
+        self.pending_completions: list[tuple[str, float, float]] = []
         self._arrival_procs = [self._materialize_arrival(s.arrival)
                                for s in self.specs]
         #: per-stream time origin: arrival processes run in stream-local
@@ -412,6 +419,22 @@ class Simulator:
         del t  # takes effect immediately; kept for call-site symmetry
         self.active[self._index_of(name)] = False
 
+    def purge_model(self, name: str) -> int:
+        """Discard every not-yet-running job of ``name`` without touching
+        the stats — the load-release half of a stream *departure*: the
+        stream's user walked away, so its queued frames stop mattering and
+        must not count as violations or drops.  Jobs currently executing
+        finish normally (an accelerator cannot abandon a launched layer)
+        and still count.  Returns the number of jobs purged."""
+        idx = self._index_of(name)
+        gone = [j for j in self.jobs.values()
+                if j.model_idx == idx and not j.running]
+        for j in gone:
+            j.done = True
+            self.ready.pop(j.jid, None)
+            self.jobs.pop(j.jid, None)
+        return len(gone)
+
     def apply_action(self, action, t: float) -> None:
         """Apply a phase action (``repro.scenarios.phases.PhaseAction``) on
         behalf of an external driver — the fleet layer forwards fleet-level
@@ -420,17 +443,22 @@ class Simulator:
         self._apply_phase(action, t)
 
     def inject_arrival(self, name: str, t: float,
-                       deadline_anchor: Optional[float] = None) -> None:
+                       deadline_anchor: Optional[float] = None,
+                       origin: Optional[float] = None) -> None:
         """Queue one externally-triggered frame of ``name`` at time ``t``
         (the fleet layer forwards cross-node cascade triggers through this).
         ``deadline_anchor`` backdates the deadline clock — a trigger that
         spent transfer latency on the wire arrives at ``t`` but its deadline
         anchors at the parent's completion time, so cross-node latency eats
-        real slack.  The injected frame schedules no follow-up arrival."""
-        self._push(t, INJECT, (self._index_of(name), deadline_anchor))
+        real slack.  ``origin`` carries the pipeline's head arrival time
+        (defaults to ``t``) so tail completions can report head-to-tail
+        pipeline latency.  The injected frame schedules no follow-up
+        arrival."""
+        self._push(t, INJECT, (self._index_of(name), deadline_anchor, origin))
 
     # --------------------------------------------------------------- jobs
-    def _create_job(self, model_idx: int, t: float) -> Job:
+    def _create_job(self, model_idx: int, t: float,
+                    origin: Optional[float] = None) -> Job:
         spec = self.specs[model_idx]
         graph = spec.model
         table = self.tables[graph.name]
@@ -450,6 +478,7 @@ class Simulator:
             cum_min=cum_min,
             arrival=t,
             deadline=t + self.deadlines[graph.name],
+            origin=t if origin is None else origin,
             t_cmpl=t,
             worst_energy=float(table.en_max[path].sum()),
             is_tail=self._is_chain_tail(model_idx),
@@ -490,15 +519,22 @@ class Simulator:
         if len(hist) > self.drop_window:
             hist.pop(0)
         if not dropped:
-            # trigger control-dependent models (cascade) on completion
+            # a completed tail (no dependents, local or remote) closes its
+            # pipeline: record head-arrival -> tail-completion latency
+            if job.is_tail:
+                st.pipe_frames += 1
+                st.pipe_latency_s += t - job.origin
+            # trigger control-dependent models (cascade) on completion;
+            # children inherit the pipeline origin
             for dep_idx in self._dependents_of(job.base_name):
                 spec = self.specs[dep_idx]
                 if self.rng.random() < spec.trigger_prob:
-                    self._create_job(dep_idx, t)
+                    self._create_job(dep_idx, t, origin=job.origin)
             # remote dependents (pipeline stages on other fleet nodes):
             # report the completion; the fleet clock drains and forwards
             if job.base_name in self.export_completions:
-                self.pending_completions.append((job.base_name, t))
+                self.pending_completions.append((job.base_name, t,
+                                                 job.origin))
 
     def deadline_of(self, job: Job) -> float:
         return job.deadline
@@ -643,9 +679,9 @@ class Simulator:
                 self._schedule_stream_arrival(idx, after_t=t)
             # an inactive (left) stream dies at its pending arrival
         elif kind == INJECT:
-            idx, anchor = arg  # type: ignore[misc]
+            idx, anchor, origin = arg  # type: ignore[misc]
             if self.active[idx]:
-                job = self._create_job(idx, t)
+                job = self._create_job(idx, t, origin=origin)
                 if anchor is not None:
                     name = self.specs[idx].model.name
                     job.deadline = anchor + self.deadlines[name]
@@ -690,6 +726,7 @@ class Simulator:
             windows=self.windows,
             acc_utilization=util,
             trace=self.trace,
+            pipeline_latency_s=overall_pipeline_latency(self.global_stats),
         )
 
     def _current_params(self) -> tuple[float, float]:

@@ -22,12 +22,21 @@ class ModelWindowStats:
     violated: int = 0
     energy_j: float = 0.0
     worst_energy_j: float = 0.0
+    #: head-to-tail pipeline latency, recorded at *tail* completions only
+    #: (models with live dependents record nothing): the time from the
+    #: pipeline's head frame arrival to this completion, wire/queue time
+    #: included.  ``pipe_frames`` counts the recorded completions;
+    #: ``pipe_latency_s`` sums their latencies (mean = sum / count).
+    pipe_frames: int = 0
+    pipe_latency_s: float = 0.0
 
     def merge(self, other: "ModelWindowStats") -> None:
         self.frames += other.frames
         self.violated += other.violated
         self.energy_j += other.energy_j
         self.worst_energy_j += other.worst_energy_j
+        self.pipe_frames += other.pipe_frames
+        self.pipe_latency_s += other.pipe_latency_s
 
 
 @dataclass
@@ -71,6 +80,15 @@ def overall_dlv_rate(stats: WindowStats) -> float:
     frames = sum(st.frames for st in stats.per_model.values())
     viol = sum(st.violated for st in stats.per_model.values())
     return viol / frames if frames else 0.0
+
+
+def overall_pipeline_latency(stats: WindowStats) -> float:
+    """Mean head-to-tail pipeline latency (s) over every recorded tail
+    completion in the window — the end-to-end metric next to per-model
+    DLV (0.0 when no pipeline completed head-to-tail)."""
+    n = sum(st.pipe_frames for st in stats.per_model.values())
+    total = sum(st.pipe_latency_s for st in stats.per_model.values())
+    return total / n if n else 0.0
 
 
 def overall_norm_energy(stats: WindowStats) -> float:
