@@ -410,6 +410,141 @@ def run_lifecycle(duration_s: float, seed: int, n_nodes: int = 16,
     }
 
 
+#: overload fleet: the SLO subsystem's proving ground.  A base wave puts
+#: the fleet near its comfortable operating point; a second, equal-sized
+#: wave then arrives mid-run and departs again late — a fleet-level
+#: two-regime (MMPP-style) load burst that roughly DOUBLES offered load
+#: while it lasts.  Arrivals are deterministic so the SLO-aware and
+#: SLO-unaware arms face an identical offered workload.
+OVERLOAD_FPS_SCALE = 0.55
+#: tier mix of the population: 20% guaranteed / 40% standard / 40%
+#: best-effort — enough tier-0 mass to measure flatness, enough
+#: best-effort mass for the ladder and the reject gate to act on
+OVERLOAD_TIER_MIX = (1.0, 2.0, 2.0)
+#: every 2nd stream head is re-headed onto the OFA supernet, so the
+#: degradation ladder has variant rungs across most of the population
+OVERLOAD_SUPERNET_FRAC = 0.5
+#: the benchmark's deployment-tuned admission thresholds: degrade early
+#: and widely (the fleet's mean utilization understates per-node hotspots
+#: at this scale), shed best-effort arrivals well before saturation
+OVERLOAD_SLO = {"t_degrade": 0.50, "t_promote": 0.35, "t_reject": 0.62,
+                "max_actions": 6, "admit_level": 2}
+#: tier-0 flatness slack: the guaranteed tier's DLV under the 2x burst may
+#: exceed its calm-reference DLV by at most this much per seed.  The
+#: per-node scheduler is tier-blind (tiers act at admission / ladder
+#: granularity), so a guaranteed stream sharing a briefly-saturated node
+#: still pays a bounded residual before the ladder relieves its hosts
+OVERLOAD_TIER0_EPS = 0.12
+
+
+def build_overload_fleet(seed: int, n_nodes: int, n_streams: int,
+                         duration_s: float, burst: bool = True
+                         ) -> FleetScenario:
+    b = FleetScenarioBuilder(f"overload_sweep_{seed}")
+    for i in range(n_nodes):
+        b.node(SYSTEMS_MIX[i % len(SYSTEMS_MIX)])
+    kw = dict(fps_scale=OVERLOAD_FPS_SCALE, tier_mix=OVERLOAD_TIER_MIX,
+              supernet_frac=OVERLOAD_SUPERNET_FRAC,
+              deterministic_arrivals=True)
+    b.fuzz_streams(n_streams, seed=seed, t0=0.0,
+                   t1=round(0.35 * duration_s, 6), **kw)
+    if burst:
+        # the burst wave: a second full population arrives mid-run and
+        # departs entirely before the end — offered load doubles, then
+        # releases (the promote-back half of the ladder's hysteresis)
+        b.fuzz_streams(n_streams, seed=seed + 50_021,
+                       t0=round(0.45 * duration_s, 6),
+                       t1=round(0.7 * duration_s, 6),
+                       depart_frac=1.0,
+                       t_depart0=round(0.72 * duration_s, 6),
+                       t_depart1=round(0.9 * duration_s, 6), **kw)
+    return b.build()
+
+
+def run_overload(duration_s: float, seed: int, n_nodes: int = 8,
+                 n_streams: int = 40, n_seeds: int = 3,
+                 slo_every_s: float = 0.15) -> dict:
+    """SLO-aware vs SLO-unaware routing under a 2x load burst — identical
+    tiered scenarios per seed (deterministic arrivals), score policy; the
+    only variable is whether the admission controller + degradation
+    ladder are live.  A calm reference (base wave only, controller live)
+    anchors the tier-0 flatness gate: the guaranteed tier's violation
+    rate under the burst must stay within ``OVERLOAD_TIER0_EPS`` of its
+    calm value while the lower tiers absorb the degradation.  Every
+    SLO-aware run is recorded and replayed (controller bypassed, swap/
+    reject records applied as inputs) as a determinism self-check."""
+    rows = []
+    for s in range(seed, seed + n_seeds):
+        burst_scn = build_overload_fleet(s, n_nodes, n_streams, duration_s,
+                                         burst=True)
+        calm_scn = build_overload_fleet(s, n_nodes, n_streams, duration_s,
+                                        burst=False)
+        unaware = FleetSimulator(burst_scn, "score", duration_s=duration_s,
+                                 seed=s).run()
+        aware = FleetSimulator(burst_scn, "score", duration_s=duration_s,
+                               seed=s, slo=OVERLOAD_SLO,
+                               slo_every_s=slo_every_s, record=True).run()
+        replayed = FleetSimulator(
+            replay=ftrace.loads(ftrace.dumps(aware.trace))).run()
+        calm = FleetSimulator(calm_scn, "score", duration_s=duration_s,
+                              seed=s, slo=OVERLOAD_SLO,
+                              slo_every_s=slo_every_s).run()
+        t0_burst = aware.tier_dlv.get(0, 0.0)
+        t0_calm = calm.tier_dlv.get(0, 0.0)
+        rows.append({
+            "seed": s,
+            "unaware": {"uxcost": unaware.uxcost,
+                        "dlv_rate": unaware.dlv_rate,
+                        "frames": unaware.frames,
+                        "tier_dlv": unaware.tier_dlv},
+            "aware": {"uxcost": aware.uxcost, "dlv_rate": aware.dlv_rate,
+                      "frames": aware.frames,
+                      "tier_frames": aware.tier_frames,
+                      "tier_dlv": aware.tier_dlv,
+                      "swaps": aware.swaps,
+                      "promotions": aware.promotions,
+                      "rejections": aware.rejections,
+                      "reject_frames": aware.reject_frames},
+            "calm_tier0_dlv": t0_calm,
+            "tier0_dlv": t0_burst,
+            "tier0_flat": t0_burst <= t0_calm + OVERLOAD_TIER0_EPS,
+            "slo_over_unaware": unaware.uxcost / max(aware.uxcost, 1e-12),
+            "replay_exact": (replayed.uxcost == aware.uxcost
+                             and replayed.frames == aware.frames
+                             and replayed.swaps == aware.swaps
+                             and replayed.rejections == aware.rejections
+                             and replayed.reject_frames
+                             == aware.reject_frames
+                             and replayed.tier_dlv == aware.tier_dlv),
+        })
+    unaware_total = sum(r["unaware"]["uxcost"] for r in rows)
+    aware_total = sum(r["aware"]["uxcost"] for r in rows)
+    t0_frames = sum(r["aware"]["tier_frames"].get(0, 0) for r in rows)
+    t0_viol = sum(round(r["aware"]["tier_dlv"].get(0, 0.0)
+                        * r["aware"]["tier_frames"].get(0, 0))
+                  for r in rows)
+    return {
+        "n_nodes": n_nodes, "n_streams": n_streams, "n_seeds": n_seeds,
+        "fps_scale": OVERLOAD_FPS_SCALE, "tier_mix": OVERLOAD_TIER_MIX,
+        "supernet_frac": OVERLOAD_SUPERNET_FRAC,
+        "slo_every_s": slo_every_s, "tier0_eps": OVERLOAD_TIER0_EPS,
+        "rows": rows,
+        "unaware_uxcost_total": unaware_total,
+        "aware_uxcost_total": aware_total,
+        "swaps": sum(r["aware"]["swaps"] for r in rows),
+        "promotions": sum(r["aware"]["promotions"] for r in rows),
+        "rejections": sum(r["aware"]["rejections"] for r in rows),
+        #: aggregate tier-0 (guaranteed) DLV across the SLO-aware burst
+        #: runs — the two-sided stability metric of the CI gate
+        "tier0_dlv_overload": t0_viol / t0_frames if t0_frames else 0.0,
+        "slo_over_unaware": unaware_total / max(aware_total, 1e-12),
+        "slo_over_unaware_min": min(r["slo_over_unaware"] for r in rows),
+        "tier0_flat": all(r["tier0_flat"] for r in rows),
+        "slo_beats_unaware": aware_total <= unaware_total,
+        "replay_exact": all(r["replay_exact"] for r in rows),
+    }
+
+
 def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
         n_streams: int = 200, churn: bool = True) -> dict:
     fscn = build_fleet(seed, n_nodes, n_streams, duration_s, churn=churn)
@@ -457,6 +592,9 @@ def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
         # full stream lifecycle: arrivals AND departures/rejoins over
         # contention-aware links (validated at both CI and full durations)
         "lifecycle": run_lifecycle(duration_s, seed, churn=churn),
+        # SLO subsystem under a 2x burst: tiered admission + variant
+        # degradation vs an SLO-unaware control on identical arrivals
+        "overload": run_overload(duration_s, seed),
     }
     save_artifact("fleet_sweep", out)
     return out
@@ -520,6 +658,24 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
           f"  contended/uncontended = "
           f"{lf['contended_over_uncontended']:.3f}"
           f"  replay_exact={lf['replay_exact']}")
+    ov = out["overload"]
+    print(f"overload sweep: {ov['n_nodes']} nodes x {ov['n_seeds']} seeds, "
+          f"{ov['n_streams']}-stream base wave + equal 2x burst wave, "
+          f"tiers {ov['tier_mix']}, slo_every={ov['slo_every_s']}s")
+    for r in ov["rows"]:
+        a = r["aware"]
+        print(f"  seed {r['seed']}: unaware={r['unaware']['uxcost']:9.2f} "
+              f"(DLV={r['unaware']['dlv_rate']:5.3f})  "
+              f"aware={a['uxcost']:9.2f} (DLV={a['dlv_rate']:5.3f})  "
+              f"ratio={r['slo_over_unaware']:5.3f} "
+              f"swaps={a['swaps']} rej={a['rejections']} "
+              f"promo={a['promotions']} "
+              f"t0={r['tier0_dlv']:5.3f}/calm={r['calm_tier0_dlv']:5.3f} "
+              f"replay={r['replay_exact']}")
+    print(f"  aggregate UXCost(unaware)/UXCost(aware) = "
+          f"{ov['slo_over_unaware']:.3f}  tier0_dlv={ov['tier0_dlv_overload']:.3f}"
+          f"  tier0_flat={ov['tier0_flat']}"
+          f"  replay_exact={ov['replay_exact']}")
     if not out["score_beats_round_robin"]:
         raise SystemExit("score-driven routing did not beat round-robin")
     if not out["replay_exact"]:
@@ -545,6 +701,18 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
     if not lf["replay_exact"]:
         raise SystemExit("lifecycle fleet trace replay mismatch — "
                          "determinism broken")
+    if ov["slo_over_unaware_min"] < 1.0:
+        raise SystemExit("SLO-aware admission did worse than the unaware "
+                         "control on at least one overload seed")
+    if not ov["tier0_flat"]:
+        raise SystemExit("tier-0 violation rate was not flat under the 2x "
+                         "burst — guaranteed tier leaked degradation")
+    if ov["swaps"] + ov["rejections"] == 0:
+        raise SystemExit("overload arm exercised neither the degradation "
+                         "ladder nor the reject gate — scenario too calm")
+    if not ov["replay_exact"]:
+        raise SystemExit("SLO fleet trace replay mismatch — recorded "
+                         "swap/reject decisions did not reproduce the run")
 
 
 if __name__ == "__main__":

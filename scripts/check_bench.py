@@ -22,6 +22,16 @@ headline metrics are improvement *ratios* — higher is better:
                             stability metric, not a higher-is-better one,
                             so drift in either direction past the band
                             fails.
+  * ``slo_over_unaware``  — SLO-unaware UXCost / SLO-aware UXCost under
+                            the 2x overload burst (ci_fleet_sweep.json,
+                            overload section): what tiered admission +
+                            variant degradation buy back.
+  * ``tier0_dlv_overload`` — aggregate tier-0 (guaranteed) deadline-
+                            violation rate of the SLO-aware overload
+                            runs.  Two-sided: it must stay *flat* — a
+                            drop can mean the burst stopped biting, a
+                            rise that the guaranteed tier leaked
+                            degradation.
 
 This script loads the artifacts, extracts those metrics, and fails (exit
 nonzero) when any falls below ``baseline * (1 - tolerance)`` (or, for
@@ -70,6 +80,10 @@ METRICS = {
                                 ("lifecycle", "ll_over_tuned")),
     "contended_over_uncontended": (
         "ci_fleet_sweep.json", ("lifecycle", "contended_over_uncontended")),
+    "slo_over_unaware": ("ci_fleet_sweep.json",
+                         ("overload", "slo_over_unaware")),
+    "tier0_dlv_overload": ("ci_fleet_sweep.json",
+                           ("overload", "tier0_dlv_overload")),
 }
 
 
@@ -191,7 +205,8 @@ def update(values: dict[str, float], baseline_path: str,
         "tolerance": (old or {}).get("tolerance", {
             name: 0.1 for name in METRICS}),
         "two_sided": (old or {}).get("two_sided",
-                                     ["contended_over_uncontended"]),
+                                     ["contended_over_uncontended",
+                                      "tier0_dlv_overload"]),
     }
     os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
     with open(baseline_path, "w") as f:

@@ -97,6 +97,30 @@ docs_refs() {
     python scripts/check_docs.py docs
 }
 
+slo_smoke() {
+    # fast-lane SLO gate: a small overloaded tiered fleet must trigger the
+    # admission controller (swaps and/or rejections) and replay bit-exactly
+    # with the controller bypassed (recorded decisions applied as inputs)
+    python - <<'EOF'
+import sys
+from benchmarks.fleet_sweep import build_overload_fleet, OVERLOAD_SLO
+from repro.cluster import FleetSimulator
+from repro.cluster import trace as ftrace
+scn = build_overload_fleet(3, 4, 24, 1.0, burst=True)
+r = FleetSimulator(scn, "score", duration_s=1.0, seed=3, slo=OVERLOAD_SLO,
+                   slo_every_s=0.1, record=True).run()
+rep = FleetSimulator(replay=ftrace.loads(ftrace.dumps(r.trace))).run()
+if r.swaps + r.rejections == 0:
+    sys.exit("slo smoke: controller never acted on an overloaded fleet")
+if (rep.uxcost, rep.frames, rep.swaps, rep.rejections, rep.tier_dlv) != \
+        (r.uxcost, r.frames, r.swaps, r.rejections, r.tier_dlv):
+    sys.exit("slo smoke: SLO trace replay mismatch")
+print(f"ci: ok — slo smoke: {r.swaps} swaps, {r.rejections} rejections, "
+      f"tier_dlv={{{', '.join(f'{k}: {v:.3f}' for k, v in r.tier_dlv.items())}}}, "
+      "replay exact")
+EOF
+}
+
 pydoc_render() {
     python - <<'EOF'
 import pydoc
@@ -155,6 +179,17 @@ if not lf["score_beats_ll"]:
 if not lf["tuned_beats_ll"]:
     sys.exit("tuned routing did worse than least-loaded on the "
              "lifecycle-churn fleet")
+ov = out["overload"]
+if not ov["replay_exact"]:
+    sys.exit("SLO fleet trace replay determinism broken")
+if ov["slo_over_unaware_min"] < 1.0:
+    sys.exit("SLO-aware admission did worse than the unaware control on "
+             "at least one overload seed")
+if not ov["tier0_flat"]:
+    sys.exit("tier-0 violation rate not flat under the 2x overload burst")
+if ov["swaps"] + ov["rejections"] == 0:
+    sys.exit("overload arm exercised neither the degradation ladder nor "
+             "the reject gate")
 print(f"ci: ok — {out['n_nodes']}-node fleet (+churn), "
       f"{out['n_streams']} streams, "
       f"UXCost(rr)/UXCost(score)={out['rr_over_score']:.3f}, "
@@ -165,6 +200,9 @@ print(f"ci: ok — {out['n_nodes']}-node fleet (+churn), "
       f"UXCost(ll)/UXCost(score)={lf['ll_over_score']:.3f}, "
       f"UXCost(ll)/UXCost(tuned)={lf['ll_over_tuned']:.3f}, "
       f"contended/uncontended={lf['contended_over_uncontended']:.3f}; "
+      f"overload ({ov['swaps']} swaps, {ov['rejections']} rejections): "
+      f"UXCost(unaware)/UXCost(aware)={ov['slo_over_unaware']:.3f}, "
+      f"tier0_dlv={ov['tier0_dlv_overload']:.3f}, tier0_flat; "
       "replays exact")
 EOF
 }
@@ -197,6 +235,7 @@ bench_check() {
 stage lint           lint
 stage tests          tests
 stage docs_refs      docs_refs
+stage slo_smoke      slo_smoke
 
 if [ "$CI_FAST" = "1" ]; then
     echo

@@ -11,6 +11,12 @@ Placement is stream- or *stage*-granular: with ``split_stages=True`` and a
 stage independently, cross-node triggers pay explicit activation-transfer
 latency/energy, and migrations charge state-transfer cost into the fleet
 UXCost — see ``docs/architecture.md`` and ``docs/scheduling.md``.
+
+Overload is a managed regime: the SLO subsystem (:mod:`.slo`) gives every
+stream a service tier, gates admission (admit / degrade onto a cheaper
+supernet variant / reject with explicit UXCost accounting), and walks a
+hysteresis-banded degradation ladder over placed streams — all recorded
+in the trace so replay bypasses the controller bit-exactly.
 """
 from repro.core.costmodel import ContendedLinks, TransferModel
 
@@ -22,6 +28,10 @@ from .node import FleetNode, NodeTelemetry, StreamCost
 from .router import (POLICIES, STATIC_WEIGHTS, WEIGHT_NAMES,
                      LeastLoadedRouter, RoundRobinRouter, RouterPolicy,
                      ScoreDrivenRouter, TunedScoreRouter, make_policy)
+from .slo import (DEFAULT_SLO, TIER_BEST_EFFORT, TIER_DEFAULTS,
+                  TIER_GUARANTEED, TIER_STANDARD, AdmissionController,
+                  LoadEstimator, SLOClass, SLOError, StreamState,
+                  slo_from_config)
 from .telemetry import FleetTelemetry, TelemetryWindow
 from .trace import (FLEET_EVENT_KINDS, FLEET_TRACE_VERSION, FleetTrace,
                     FleetTraceRecorder, dumps, load_trace, loads, save_trace)
@@ -35,6 +45,9 @@ __all__ = [
     "POLICIES", "STATIC_WEIGHTS", "WEIGHT_NAMES", "LeastLoadedRouter",
     "RoundRobinRouter", "RouterPolicy", "ScoreDrivenRouter",
     "TunedScoreRouter", "make_policy",
+    "DEFAULT_SLO", "TIER_BEST_EFFORT", "TIER_DEFAULTS", "TIER_GUARANTEED",
+    "TIER_STANDARD", "AdmissionController", "LoadEstimator", "SLOClass",
+    "SLOError", "StreamState", "slo_from_config",
     "FleetTelemetry", "TelemetryWindow",
     "FLEET_EVENT_KINDS", "FLEET_TRACE_VERSION", "FleetTrace",
     "FleetTraceRecorder", "dumps", "load_trace", "loads", "save_trace",

@@ -33,6 +33,8 @@ import numpy as np
 from repro.scenarios.builder import ModelEntry, ScenarioBuilder, ScenarioError
 from repro.scenarios.fuzzer import fuzz_scenario
 
+from .slo import slo_from_config
+
 
 @dataclass(frozen=True)
 class FleetEvent:
@@ -208,9 +210,13 @@ class FleetScenarioBuilder:
 
     # ----------------------------------------------------------- streams
     def add_stream(self, entries: "list[dict] | list[ModelEntry]",
-                   at: float = 0.0) -> int:
+                   at: float = 0.0, slo: "int | dict | None" = None) -> int:
         """One routable stream: a pipeline of ModelEntry configs (head
-        first).  Returns the stream id."""
+        first).  ``slo`` optionally declares the stream's service tier (a
+        bare tier number or an SLO config dict — see
+        :mod:`repro.cluster.slo`); validated here, carried in the event
+        payload, and omitted entirely for tierless streams so legacy
+        scenarios and traces stay byte-stable.  Returns the stream id."""
         cfgs = []
         for e in entries:
             cfg = e.to_config() if isinstance(e, ModelEntry) else dict(e)
@@ -224,8 +230,10 @@ class FleetScenarioBuilder:
             raise ScenarioError("fleet stream must start with a head entry")
         sid = self._next_sid
         self._next_sid += 1
-        self._events.append(FleetEvent(float(at), "stream",
-                                       {"sid": sid, "entries": cfgs}))
+        payload: dict = {"sid": sid, "entries": cfgs}
+        if slo is not None:
+            payload["slo"] = slo_from_config(slo).to_config()
+        self._events.append(FleetEvent(float(at), "stream", payload))
         return sid
 
     def add_scenario(self, builder: ScenarioBuilder,
@@ -240,7 +248,9 @@ class FleetScenarioBuilder:
                      deterministic_arrivals: bool = False,
                      depart_frac: float = 0.0, rejoin_frac: float = 0.0,
                      t_depart0: "float | None" = None,
-                     t_depart1: "float | None" = None) -> list[int]:
+                     t_depart1: "float | None" = None,
+                     tier_mix: "tuple[float, float, float] | None" = None,
+                     supernet_frac: float = 0.0) -> list[int]:
         """Seeded stream population: fuzzer-sampled pipelines with arrival
         times uniform over [t0, t1).  Deterministic at build time, so the
         resulting FleetScenario needs no runtime randomness.
@@ -271,13 +281,31 @@ class FleetScenarioBuilder:
         rejoins later, uniform over (depart time, ``t_depart1``).
         Lifecycle draws come from a dedicated RNG stream, so populations
         with ``depart_frac=0`` reproduce their historical arrivals
-        bit-for-bit."""
+        bit-for-bit.
+
+        ``tier_mix`` declares an SLO-tiered population: per-stream tiers
+        (guaranteed / standard / best-effort) drawn with the given weights
+        from a dedicated RNG stream, so tierless populations (``None``)
+        reproduce their historical draws bit-for-bit.  ``supernet_frac``
+        swaps that fraction of stream heads (index-strided, no RNG) onto
+        the OFA supernet so the SLO degradation ladder has variant rungs
+        to act on."""
         if cascades_only and not cascade_prob > 0.0:
             raise ScenarioError("cascades_only with cascade_prob=0 can "
                                 "never admit a stream")
         if not 0.0 <= depart_frac <= 1.0 or not 0.0 <= rejoin_frac <= 1.0:
             raise ScenarioError("depart_frac / rejoin_frac must be in "
                                 f"[0, 1], got {depart_frac}/{rejoin_frac}")
+        if not 0.0 <= supernet_frac <= 1.0:
+            raise ScenarioError(
+                f"supernet_frac must be in [0, 1], got {supernet_frac}")
+        if tier_mix is not None:
+            if len(tier_mix) != 3 or any(w < 0 for w in tier_mix) \
+                    or not sum(tier_mix) > 0:
+                raise ScenarioError(
+                    "tier_mix must be three non-negative weights "
+                    f"(tier-0, tier-1, best-effort), got {tier_mix!r}")
+        stride = int(round(1.0 / supernet_frac)) if supernet_frac > 0 else 0
         rng = np.random.default_rng([seed, 0xF1EE7])
         sids: list[int] = []
         arrivals: list[float] = []
@@ -298,9 +326,29 @@ class FleetScenarioBuilder:
                         phase = ((len(sids) * 7919) % 97) / 97.0
                         cfg["arrival"] = {"kind": "periodic",
                                           "phase_frac": round(phase, 6)}
+                if stride and len(sids) % stride == 0:
+                    # re-head this stream onto the OFA supernet (keeping the
+                    # sampled instance name and FPS) so the degradation
+                    # ladder has variant rungs in the population
+                    pipe[0]["model"] = {"builder": "ofa",
+                                        "name": pipe[0]["model"]["name"],
+                                        "kwargs": {}}
                 t = round(float(rng.uniform(t0, t1)), 6)
                 sids.append(self.add_stream(pipe, at=t))
                 arrivals.append(t)
+        if tier_mix is not None:
+            # dedicated stream: tier draws must not perturb the arrival/
+            # pipeline draws above for tierless populations
+            trng = np.random.default_rng([seed, 0x510C1A55])
+            total = float(sum(tier_mix))
+            c0 = tier_mix[0] / total
+            c1 = c0 + tier_mix[1] / total
+            payloads = {e.payload["sid"]: e.payload for e in self._events
+                        if e.kind == "stream" and e.payload["sid"] in sids}
+            for sid in sids:
+                u = float(trng.random())
+                tier = 0 if u < c0 else (1 if u < c1 else 2)
+                payloads[sid]["slo"] = slo_from_config(tier).to_config()
         if depart_frac > 0.0:
             # dedicated stream: lifecycle draws must not perturb the
             # arrival/pipeline draws above for depart_frac=0 populations

@@ -47,6 +47,22 @@ task-level dynamicity:
     recorded definition under a fresh placement generation, exactly like
     a new arrival.
 
+Overload is a managed regime (the SLO subsystem, :mod:`.slo`): streams
+declare service tiers, and with ``slo=True`` (or a config) an
+:class:`~.slo.AdmissionController` gates every arrival/rejoin — admit,
+admit one supernet-variant level down, or **reject** (a first-class
+outcome: the refused head frames accrue as deadline violations in the
+fleet UXCost merge, never a silent drop).  ``slo_every_s`` ticks walk the
+degradation ladder over placed streams: under sustained pressure the
+weakest tiers pin to cheaper supernet variants
+(``Simulator.swap_variant``), and they promote back one level per tick
+once pressure falls below the hysteresis band.  Tier-0 ("guaranteed")
+streams are never degraded or rejected.  Every controller decision is
+recorded (``swap`` / ``reject`` trace records), so replay applies them as
+inputs and bypasses the controller bit-exactly; runs without a controller
+never touch the variant plumbing and stay bit-identical to pre-SLO
+builds.
+
 Transfers (migrations *and* cross-node cascade triggers) are realized
 over shared per-node-pair links (:class:`repro.core.costmodel.ContendedLinks`):
 with a finite ``link_bandwidth_bytes_s`` concurrent transfers on one
@@ -106,7 +122,7 @@ from __future__ import annotations
 import copy
 import heapq
 import re
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import numpy as np
@@ -126,6 +142,8 @@ from .builder import FleetScenario
 from .node import FleetNode, StreamCost
 from .router import (RouterPolicy, ScoreDrivenRouter, argmin_node,
                      make_policy)
+from .slo import (DEFAULT_SLO, AdmissionController, StreamState,
+                  slo_from_config)
 from .telemetry import FleetTelemetry
 from .trace import FleetTrace, FleetTraceRecorder
 
@@ -362,6 +380,14 @@ class FleetResult:
     link_transfers: int = 0      # transfers routed over shared links
     link_queued: int = 0         # of which waited on a busy link
     link_wait_s: float = 0.0     # total link queueing delay experienced
+    slo_enabled: bool = False    # an admission controller gated this run
+    rejections: int = 0          # streams refused admission
+    swaps: int = 0               # SLO variant-level changes applied
+    promotions: int = 0          # of which promoted back toward quality
+    reject_frames: int = 0       # pseudo-frames charged for rejections
+    #: frames / DLV rate per SLO tier (tierless streams count as tier 1)
+    tier_frames: dict = field(default_factory=dict)
+    tier_dlv: dict = field(default_factory=dict)
 
     def summary(self) -> str:
         return (f"fleet[{self.policy:>11s}] nodes={self.n_nodes:<3d} "
@@ -389,6 +415,8 @@ class FleetSimulator:
         transfer: Optional[TransferModel] = None,
         split_stages: bool = False,
         tune_every_s: Optional[float] = None,
+        slo: "bool | dict | AdmissionController | None" = None,
+        slo_every_s: Optional[float] = None,
     ):
         if (scenario is None) == (replay is None):
             raise ValueError("pass exactly one of scenario or replay")
@@ -405,6 +433,8 @@ class FleetSimulator:
             transfer = (TransferModel.from_config(meta["transfer"])
                         if "transfer" in meta else None)
             split_stages = bool(meta.get("split", False))
+            slo = None              # recorded swap/reject events carry them
+            slo_every_s = None
             self._events = [(e["t"], e["type"], e) for e in replay.events]
         else:
             self.name = scenario.name
@@ -435,9 +465,25 @@ class FleetSimulator:
             raise ValueError("rebalance_every_s must be positive")
         if tune_every_s is not None and not tune_every_s > 0:
             raise ValueError("tune_every_s must be positive")
+        if slo_every_s is not None and not slo_every_s > 0:
+            raise ValueError("slo_every_s must be positive")
         self.rebalance_every_s = rebalance_every_s
         self.rebalance_hysteresis = rebalance_hysteresis
         self.tune_every_s = tune_every_s
+        #: SLO admission controller (live runs only — replay applies the
+        #: recorded swap/reject decisions and never runs the controller);
+        #: ``slo_every_s`` paces the degradation-ladder ticks (None = gate
+        #: arrivals only, no periodic ladder)
+        self.slo = AdmissionController.make(slo)
+        self.slo_every_s = slo_every_s
+        if self.slo is None and slo_every_s is not None:
+            raise ValueError("slo_every_s requires an admission controller "
+                             "(pass slo=True or a config)")
+        #: dedicated telemetry aggregator for the controller: windows are
+        #: snapshot deltas, so sharing the tuner's instance would perturb
+        #: the tuner's feedback whenever the tick cadences differ
+        self._slo_tel = (FleetTelemetry(canonical=canonical_stream_model)
+                         if self.slo is not None else None)
         #: windowed fleet telemetry, fed at tune ticks (live runs only —
         #: replay bypasses telemetry and tuner entirely)
         self.telemetry = FleetTelemetry(canonical=canonical_stream_model)
@@ -462,6 +508,26 @@ class FleetSimulator:
         self.departures = 0
         self.rejoins = 0
         self.jobs_purged = 0
+        # ---- SLO state, maintained identically live and in replay (live
+        # decisions come from the controller, replayed ones from the trace)
+        #: sid -> declared SLO class (absent = legacy tierless stream)
+        self.stream_slo: dict[int, "object"] = {}
+        #: sid -> current degradation-ladder level; presence (even at level
+        #: 0) marks a stream the controller has touched — never-touched
+        #: streams skip the variant plumbing entirely, which is what keeps
+        #: a controller-free run bit-identical to the pre-SLO simulator
+        self.slo_level: dict[int, int] = {}
+        #: streams refused admission (cleared again by a depart)
+        self.rejected: set[int] = set()
+        #: sid -> (reject time, head fps) while the rejection span is open
+        self._reject_open: dict[int, tuple[float, float]] = {}
+        #: sid -> refused head frames accumulated over closed spans
+        self._reject_frames: dict[int, float] = {}
+        #: sid -> variant-ladder depth (max over stages), memoized
+        self._ladder_cache: dict[int, int] = {}
+        self.rejections = 0
+        self.swaps = 0
+        self.promotions = 0
         # stage-split bookkeeping, keyed by (sid, stage)
         self.stage_node: dict[tuple[int, int], int] = {}
         self.stage_gen: dict[tuple[int, int], int] = {}
@@ -499,6 +565,13 @@ class FleetSimulator:
                 # documentation only: replay takes weights from the
                 # recorded `tune` events, never from a live tuner
                 meta["tune_every_s"] = self.tune_every_s
+            if self.slo is not None:
+                # documentation only, like tune_every_s: replay applies the
+                # recorded swap/reject decisions, never the controller —
+                # and SLO-free runs keep their meta byte-identical
+                meta["slo"] = self.slo.to_config()
+                if self.slo_every_s is not None:
+                    meta["slo_every_s"] = self.slo_every_s
             self.recorder = FleetTraceRecorder(meta)
 
     # ---------------------------------------------------------- plumbing
@@ -624,6 +697,13 @@ class FleetSimulator:
         self.nodes[nid].place(sid, specs, names, t)
         self.stream_node[sid] = nid
         self.gen[sid] = gen
+        # re-materialize the stream's SLO ladder level on the (possibly
+        # new) host: every re-placement mints generation-fresh names, so
+        # the variant pin must follow the stream.  No-op for streams the
+        # controller never touched (the bit-identical inert path).
+        level = self.slo_level.get(sid)
+        if level is not None:
+            self.nodes[nid].swap_level(names, level, t)
 
     def _migrate(self, sid: int, src: int, dst: int, t: float,
                  gen: int) -> tuple[Optional[float], Optional[float]]:
@@ -666,6 +746,11 @@ class FleetSimulator:
         self.stage_name[(sid, k)] = name
         self.stage_ready[(sid, k)] = t   # migrations pass t + transfer_s
         self._name_stage[name] = (sid, k)
+        # the SLO variant pin follows the stage across re-placements (see
+        # _place); stage granularity, so sibling stages are untouched
+        level = self.slo_level.get(sid)
+        if level is not None:
+            node.swap_level([name], level, t)
 
     def _migrate_stage(self, sid: int, k: int, src: int, dst: int, t: float,
                        gen: int) -> tuple[float, float]:
@@ -791,10 +876,12 @@ class FleetSimulator:
                    else [int(s) for s in sids])
         for sid in targets:
             sv = self.streams.get(sid)
-            if sv is None or sid in self.departed:
+            if sv is None or sid in self.departed or sid in self.rejected:
                 # a phase cannot retarget the future (stream not arrived)
                 # or the absent (departed; it rejoins at its last-seen
-                # definition) — identical live and in replay
+                # definition — and a rejected stream is not serving, so
+                # there is nothing to mutate) — identical live and in
+                # replay, since rejections are replayed as inputs
                 continue
             by_node: dict[int, list[str]] = {}
             if self.split:
@@ -837,7 +924,9 @@ class FleetSimulator:
             return
         win = self.telemetry.observe(t, self.nodes, self.migrations,
                                      sum(self.xfer_energy.values()),
-                                     departures=self.departures)
+                                     departures=self.departures,
+                                     rejections=self.rejections,
+                                     swaps=self.swaps)
         on_window = getattr(self.policy, "on_window", None)
         if on_window is None:
             return                      # telemetry-only tick
@@ -872,17 +961,164 @@ class FleetSimulator:
                     self.recorder.migrate(t, sid, node.node_id, dst, gen,
                                           xfer_s=xfer_s, xfer_j=xfer_j)
 
+    # ------------------------------------------------------ SLO subsystem
+    def _ladder_depth(self, sid: int) -> int:
+        """Degradation-ladder depth of a stream: the deepest supernet
+        variant ladder over its stages (0 = no variants, nothing to swap)."""
+        d = self._ladder_cache.get(sid)
+        if d is None:
+            sv = self.streams[sid]
+            d = max((len(sv.stage_graph(k).variants)
+                     for k in range(sv.n_stages)), default=0)
+            self._ladder_cache[sid] = d
+        return d
+
+    def _live_utils(self, cands: list[FleetNode]) -> list[float]:
+        """Per-candidate offered utilization right now — the U(t) input of
+        the admission law."""
+        return [n.offered_s / len(n.sim.accs) for n in cands]
+
+    def _apply_level(self, sid: int, t: float) -> None:
+        """Materialize stream ``sid``'s current ladder level on its hosting
+        node(s).  Streams the controller never touched return immediately,
+        keeping the controller-free path bit-identical to pre-SLO runs."""
+        level = self.slo_level.get(sid)
+        if level is None:
+            return
+        sv = self.streams[sid]
+        if self.split:
+            for k in range(sv.n_stages):
+                nid = self.stage_node.get((sid, k))
+                if nid is not None and self.nodes[nid].alive:
+                    self.nodes[nid].swap_level(
+                        [self.stage_name[(sid, k)]], level, t)
+        else:
+            nid = self.stream_node.get(sid)
+            if nid is not None and self.nodes[nid].alive:
+                names = list(self.nodes[nid].placements.get(sid, ()))
+                if names:
+                    self.nodes[nid].swap_level(names, level, t)
+
+    def _apply_level_change(self, sid: int, level: int, t: float) -> None:
+        """One degradation-ladder move (live decision or replayed ``swap``
+        record): update the level, swap the hosted variants, re-arm the
+        fleet tuner — a quality change shifts offered load, which is as
+        much a workload change as churn is."""
+        prev = self.slo_level.get(sid, 0)
+        if level == prev:
+            return
+        self.swaps += 1
+        if level < prev:
+            self.promotions += 1
+        self.slo_level[sid] = level
+        self._apply_level(sid, t)
+        self._rearm_tuner()
+
+    def _reject_stream(self, t: float, sid: int) -> None:
+        """Refuse a stream admission (live verdict or replayed ``reject``
+        record): no placement happens; the refused head frames accrue as
+        deadline violations until the stream departs (or the run ends), so
+        a rejection is a first-class UXCost outcome, never a silent drop."""
+        sv = self.streams[sid]
+        self.rejected.add(sid)
+        self._reject_open[sid] = (t, sv.entries[0].fps)
+        self.rejections += 1
+        if self.recorder is not None:
+            tier = self.stream_slo.get(sid, DEFAULT_SLO).tier
+            self.recorder.reject(t, sid, tier,
+                                 pressure=self.slo.last_pressure
+                                 if self.slo is not None else None)
+
+    def _close_reject(self, sid: int, t: float) -> None:
+        t0_fps = self._reject_open.pop(sid, None)
+        if t0_fps is None:
+            return
+        t0, fps = t0_fps
+        t1 = min(t, self.duration_s)
+        if t1 > t0:
+            self._reject_frames[sid] = (self._reject_frames.get(sid, 0.0)
+                                        + (t1 - t0) * fps)
+
+    def _on_swap(self, t: float, ev: dict) -> None:      # replay only
+        self._apply_level_change(int(ev["sid"]), int(ev["level"]), t)
+
+    def _on_reject(self, t: float, ev: dict) -> None:    # replay only
+        self._reject_stream(t, int(ev["sid"]))
+
+    def _on_slo_tick(self, t: float, ev: dict) -> None:  # live only
+        """Controller tick: close an SLO telemetry window, update the
+        pressure, and walk the degradation ladder — degrade the weakest
+        placed streams under sustained pressure, promote them back (one
+        level per tick) once pressure clears the hysteresis band."""
+        cands = self._candidates()
+        win = self._slo_tel.observe(t, self.nodes, self.migrations,
+                                    sum(self.xfer_energy.values()),
+                                    departures=self.departures,
+                                    rejections=self.rejections,
+                                    swaps=self.swaps)
+        self.slo.on_window(win, self._live_utils(cands))
+        states = []
+        for sid in sorted(self.streams):
+            if sid in self.departed or sid in self.rejected:
+                continue
+            depth = self._ladder_depth(sid)
+            if depth == 0:
+                continue
+            slo = self.stream_slo.get(sid, DEFAULT_SLO)
+            # local pressure: the hosting node's window DLV (max across
+            # stages for split placements) — the ladder degrades victims
+            # on the hottest nodes first, where the swap relieves the
+            # pressured tier-0 neighbours
+            if self.split:
+                nids = [self.stage_node.get((sid, k))
+                        for k in range(self.streams[sid].n_stages)]
+            else:
+                nids = [self.stream_node.get(sid)]
+            load = max((win.node_dlv.get(nid, 0.0)
+                        for nid in nids if nid is not None), default=0.0)
+            states.append(StreamState(
+                sid=sid, tier=slo.tier, priority=slo.priority,
+                level=self.slo_level.get(sid, 0), max_level=depth,
+                load=load))
+        for sid, level in self.slo.plan(states):
+            self._apply_level_change(sid, level, t)
+            if self.recorder is not None:
+                self.recorder.swap(t, sid, level,
+                                   pressure=self.slo.last_pressure)
+
     def _on_stream(self, t: float, ev: dict) -> None:
         sid = int(ev["sid"])
         self.streams[sid] = StreamView(sid, ev["entries"])
+        slo_cfg = ev.get("slo")
+        if slo_cfg is not None:
+            self.stream_slo[sid] = slo_from_config(slo_cfg)
         if self.recorder is not None:
-            self.recorder.stream(t, sid, ev["entries"])
+            self.recorder.stream(t, sid, ev["entries"], slo=slo_cfg)
         if self.replay is not None:
             return                       # recorded `place` events follow
         cands = self._candidates()
         if not cands:
             raise RuntimeError(f"stream {sid} arrived with no live nodes")
         sv = self.streams[sid]
+        level = 0
+        if self.slo is not None:
+            slo = self.stream_slo.get(sid, DEFAULT_SLO)
+            self.slo.register(sid, slo, sv.head_period_s)
+            verdict, level = self.slo.admit(
+                slo, self._ladder_depth(sid), self._live_utils(cands))
+            if verdict == "reject":
+                self._reject_stream(t, sid)
+                return
+        if level > 0:
+            # degraded admission: the level is set (and the swap recorded)
+            # BEFORE placement so the trailing re-pin in _place applies the
+            # variant ahead of the stream's first frame — replay interleaves
+            # a node advance between the place and any later record, so a
+            # swap recorded after placement would miss same-time arrivals
+            self._apply_level_change(sid, level, t)
+            if self.recorder is not None:
+                self.recorder.swap(t, sid, level,
+                                   pressure=self.slo.last_pressure)
         if self.split:
             nids = self.policy.place_stages(sv, cands, self.transfer)
             for k, nid in enumerate(nids):
@@ -910,6 +1146,13 @@ class FleetSimulator:
         if sv is None or sid in self.departed:
             raise ValueError(f"depart of stream {sid} at t={t}: stream "
                              "is not present (bad scenario or trace)")
+        if sid in self.rejected:
+            # a refused stream departing closes its rejection span: frames
+            # it would have offered stop accruing as violations
+            self.rejected.discard(sid)
+            self._close_reject(sid, t)
+        if self.slo is not None:
+            self.slo.forget(sid)
         purged = 0
         if self.split:
             for k in range(sv.n_stages):
@@ -949,16 +1192,34 @@ class FleetSimulator:
         if not cands:
             raise RuntimeError(f"stream {sid} rejoined with no live nodes")
         sv = self.streams[sid]
+        level = 0
+        if self.slo is not None:
+            # a rejoin is an arrival for admission purposes: the returning
+            # load faces the same gate (and may be refused again)
+            slo = self.stream_slo.get(sid, DEFAULT_SLO)
+            self.slo.register(sid, slo, sv.head_period_s)
+            verdict, level = self.slo.admit(
+                slo, self._ladder_depth(sid), self._live_utils(cands))
+            if verdict == "reject":
+                self._reject_stream(t, sid)
+                return
+        if level > 0:
+            # swap-before-place, for the same replay-ordering reason as at
+            # first arrival (see _on_stream)
+            self._apply_level_change(sid, level, t)
+            if self.recorder is not None:
+                self.recorder.swap(t, sid, level,
+                                   pressure=self.slo.last_pressure)
         if self.split:
             nids = self.policy.place_stages(sv, cands, self.transfer)
             for k, nid in enumerate(nids):
-                gen = self.stage_gen[(sid, k)] + 1
+                gen = self.stage_gen.get((sid, k), -1) + 1
                 self._place_stage(sid, k, nid, t, gen=gen)
                 if self.recorder is not None:
                     self.recorder.place(t, sid, nid, gen, stage=k)
         else:
             nid = self.policy.place(sv, cands)
-            gen = self.gen[sid] + 1
+            gen = self.gen.get(sid, -1) + 1
             self._place(sid, nid, t, gen=gen)
             if self.recorder is not None:
                 self.recorder.place(t, sid, nid, gen)
@@ -1077,6 +1338,14 @@ class FleetSimulator:
             while k * self.tune_every_s < self.duration_s:
                 events.append((k * self.tune_every_s, "tune", {"k": k}))
                 k += 1
+        # SLO controller ticks follow same-time tune ticks (fresh tuner
+        # weights first) and precede same-time rebalance ticks (a stream
+        # degrades before it is considered for migration)
+        if self.slo is not None and self.slo_every_s is not None:
+            k = 1
+            while k * self.slo_every_s < self.duration_s:
+                events.append((k * self.slo_every_s, "slo", {"k": k}))
+                k += 1
         if self.rebalance_every_s is not None:
             k = 1
             while k * self.rebalance_every_s < self.duration_s:
@@ -1100,6 +1369,9 @@ class FleetSimulator:
             "rebalance": self._on_rebalance,
             "phase": self._on_phase,
             "tune": self._on_tune,
+            "slo": self._on_slo_tick,
+            "swap": self._on_swap,
+            "reject": self._on_reject,
         }
         for t, kind, ev in self._event_stream():
             if t > self.duration_s:
@@ -1154,6 +1426,40 @@ class FleetSimulator:
                 if cands:
                     target = cands[0]
             fleet_stats.model(target).energy_j += self.xfer_energy[name]
+        # rejection accounting: every head frame a refused stream would
+        # have offered while rejected counts as a deadline violation (a
+        # pseudo model entry with zero energy: RateDLV contributes 1.0,
+        # NormEnergy nothing) — overload is *managed*, never free
+        for sid in sorted(self._reject_open):
+            self._close_reject(sid, self.duration_s)
+        self._reject_open.clear()
+        reject_frames = 0
+        for sid in sorted(self._reject_frames):
+            sv = self.streams[sid]
+            n = max(1, int(round(self._reject_frames[sid])))
+            st = fleet_stats.model(f"s{sid}." + sv.stage_base(0))
+            st.frames += n
+            st.violated += n
+            reject_frames += n
+        # per-tier breakdown (tierless streams are tier-1 "standard"):
+        # the overload gate asserts tier-0 stays flat while lower tiers
+        # absorb the degradation
+        tier_frames: dict[int, int] = {}
+        tier_viol: dict[int, int] = {}
+        for name, st in fleet_stats.per_model.items():
+            dot = name.find(".")
+            if not name.startswith("s") or dot < 2:
+                continue
+            try:
+                sid = int(name[1:dot])
+            except ValueError:
+                continue
+            slo = self.stream_slo.get(sid, DEFAULT_SLO)
+            tier_frames[slo.tier] = tier_frames.get(slo.tier, 0) + st.frames
+            tier_viol[slo.tier] = tier_viol.get(slo.tier, 0) + st.violated
+        tier_dlv = {tr: (tier_viol[tr] / tier_frames[tr]
+                         if tier_frames[tr] else 0.0)
+                    for tr in sorted(tier_frames)}
         if self.recorder is not None:
             self.trace = self.recorder.trace()
         return FleetResult(
@@ -1190,6 +1496,15 @@ class FleetSimulator:
             link_transfers=(self.links.n_transfers if self.links else 0),
             link_queued=(self.links.n_queued if self.links else 0),
             link_wait_s=(self.links.queued_s if self.links else 0.0),
+            slo_enabled=(self.slo is not None
+                         or (self.replay is not None
+                             and "slo" in self.replay.meta)),
+            rejections=self.rejections,
+            swaps=self.swaps,
+            promotions=self.promotions,
+            reject_frames=reject_frames,
+            tier_frames=dict(sorted(tier_frames.items())),
+            tier_dlv=tier_dlv,
         )
 
 

@@ -89,6 +89,10 @@ class FleetNode:
         #: declare a local dependency)
         self._load_weights: dict[str, float] = {}
         self.probe_retriggers = 0
+        #: SLO degradation pins: model name -> currently-active variant
+        #: graph (the original graph when promoted back), so offered-load
+        #: telemetry reflects what a degraded stream actually costs
+        self._active_graph: dict[str, ModelGraph] = {}
         #: DLV rate over the most recent advance span (not run-cumulative,
         #: so a node is not penalized forever for early violations)
         self.recent_dlv = 0.0
@@ -139,6 +143,7 @@ class FleetNode:
             # every re-placement mints a generation-fresh name, so a
             # weight kept past eviction would never be read again
             self._load_weights.pop(name, None)
+            self._active_graph.pop(name, None)
         # offered load is recomputed from scratch on eviction: the spec
         # objects are gone, so track via the remaining placements instead
         self._recompute_offered()
@@ -154,6 +159,17 @@ class FleetNode:
         self.evict(key, t)
         return sum(self.sim.purge_model(name) for name in names)
 
+    def swap_level(self, names: "list[str]", level: int, t: float) -> None:
+        """Apply an SLO degradation-ladder level to the placed models in
+        ``names``: pin each onto its ``level``-th supernet variant (0 =
+        original quality; models without variants are untouched), then
+        refresh offered-load telemetry and re-arm the (alpha, beta) probe —
+        a quality swap is a workload change by definition."""
+        for name in names:
+            self._active_graph[name] = self.sim.swap_variant(name, level, t)
+        self._recompute_offered()
+        self.retrigger_probe()
+
     def _recompute_offered(self) -> None:
         live = {n for names in self.placements.values() for n in names}
         total = 0.0
@@ -162,7 +178,8 @@ class FleetNode:
                 w = self._load_weights.get(
                     spec.model.name,
                     1.0 if spec.depends_on is None else spec.trigger_prob)
-                total += w * spec.fps * self._iso_best(spec.model)
+                g = self._active_graph.get(spec.model.name, spec.model)
+                total += w * spec.fps * self._iso_best(g)
         self.offered_s = total
 
     def retrigger_probe(self) -> None:

@@ -165,21 +165,23 @@ class ScoreDrivenRouter(RouterPolicy):
 
     def score_terms(self, cost: StreamCost, node: FleetNode,
                     best_iso: float,
-                    tel=None) -> tuple[float, float, float, float]:
-        """The weight-independent factors of the node score, in
-        ``WEIGHT_NAMES`` order (sans the transfer term): the score is
-        their dot product with the live weights, which is what lets the
-        tuner re-score a recorded decision under counterfactual weight
-        vectors without re-reading any node state.  ``tel`` lets a caller
-        that already snapshotted the node's telemetry avoid a second
-        walk of its live jobs."""
+                    tel=None) -> tuple[float, float, float, float, float]:
+        """The weight-independent factors of the node score, in full
+        ``WEIGHT_NAMES`` order: the score is their dot product with the
+        live weights, which is what lets the tuner re-score a recorded
+        decision under counterfactual weight vectors without re-reading
+        any node state.  The transfer column is 0 here — whole-stream
+        placements never pay it; stage-level recording fills it with
+        :meth:`transfer_term`.  ``tel`` lets a caller that already
+        snapshotted the node's telemetry avoid a second walk of its live
+        jobs."""
         if tel is None:
             tel = node.telemetry()
         load_after = tel.offered_util + cost.offered_s / tel.n_accs
         pref_penalty = (cost.iso_s / max(best_iso, 1e-12)) - 1.0
         urgency = min(cost.urgency, URGENCY_CAP)
         return (load_after, tel.backlog_s / tel.n_accs,
-                pref_penalty * urgency, min(tel.window_dlv, 1.0))
+                pref_penalty * urgency, min(tel.window_dlv, 1.0), 0.0)
 
     def _score(self, cost: StreamCost, node: FleetNode,
                best_iso: float) -> float:
@@ -203,6 +205,18 @@ class ScoreDrivenRouter(RouterPolicy):
             return float("inf")
         xfer_s = transfer.transfer_s(stream.act_bytes_into(k))
         return self.w_xfer * xfer_s / max(stream.stage_period_s(k), 1e-9)
+
+    def transfer_term(self, stream, k: int, transfer) -> float:
+        """The weight-independent factor of the transfer penalty (the
+        ``xfer`` column of ``WEIGHT_NAMES``): per-trigger wire time over
+        the receiving stage's period.  Infinite when the transfer model is
+        absent or has zero bandwidth.  ``transfer_penalty`` is ``w_xfer``
+        times this (up to float associativity — live scoring keeps its
+        historical expression)."""
+        if transfer is None or not transfer.enabled:
+            return float("inf")
+        xfer_s = transfer.transfer_s(stream.act_bytes_into(k))
+        return xfer_s / max(stream.stage_period_s(k), 1e-9)
 
     def stage_score(self, stream, k: int, node: FleetNode, best_iso: float,
                     parent_nid: Optional[int], transfer) -> float:
@@ -335,7 +349,7 @@ class TunedScoreRouter(ScoreDrivenRouter):
         context, so recording costs no extra node scans."""
         best_iso = min(stream.cost_on(n).iso_s for n in nodes)
         ids: list[int] = []
-        rows: list[tuple[float, float, float, float]] = []
+        rows: list[tuple[float, ...]] = []
         marginal: list[float] = []
         best_nid, best_key = nodes[0].node_id, None
         for n in nodes:
@@ -355,6 +369,53 @@ class TunedScoreRouter(ScoreDrivenRouter):
         self._decisions.append((ids, np.asarray(rows),
                                 np.asarray(marginal)))
         return best_nid
+
+    #: recorded transfer terms are clamped to this finite cap: a missing /
+    #: zero-bandwidth link scores +inf live (the stage stays with its
+    #: parent), but an inf left in a recorded context would turn into nan
+    #: under a candidate that zeroes the transfer multiplier in hindsight
+    XFER_TERM_CAP = 1e9
+
+    def place_stages(self, stream, nodes: Sequence[FleetNode],
+                     transfer) -> list[int]:
+        """Same split-refinement argmin as the static router, but every
+        *stage* decision is recorded too — with the transfer column of the
+        terms filled in (:meth:`ScoreDrivenRouter.transfer_term` for
+        off-parent nodes, 0 for staying with the parent) — so hindsight
+        re-scoring learns ``W_XFER`` from realized outcomes as well, not
+        only the whole-stream columns."""
+        out: list[int] = [self.place(stream, nodes)]
+        for k in range(1, stream.n_stages):
+            best_iso = min(stream.stage_cost_on(n, k).iso_s for n in nodes)
+            p = stream.parent_of(k)
+            parent_nid = out[p] if p is not None else out[0]
+            ids: list[int] = []
+            rows: list[tuple[float, ...]] = []
+            marginal: list[float] = []
+            best_nid, best_key = nodes[0].node_id, None
+            for n in nodes:
+                cost = stream.stage_cost_on(n, k)
+                tel = n.telemetry()
+                t = self.score_terms(cost, n, best_iso, tel=tel)
+                # identical arithmetic to stage_score: 4-term dot product
+                # plus the historical transfer_penalty expression
+                s = (self.w_load * t[0] + self.w_backlog * t[1]
+                     + self.w_pref * t[2] + self.w_ux * t[3])
+                xfer = 0.0
+                if n.node_id != parent_nid:
+                    s += self.transfer_penalty(stream, k, transfer)
+                    xfer = min(self.transfer_term(stream, k, transfer),
+                               self.XFER_TERM_CAP)
+                key = (s, n.node_id)
+                if best_key is None or key < best_key:
+                    best_nid, best_key = n.node_id, key
+                ids.append(n.node_id)
+                rows.append(t[:4] + (xfer,))
+                marginal.append(cost.offered_s / tel.n_accs)
+            self._decisions.append((ids, np.asarray(rows),
+                                    np.asarray(marginal)))
+            out.append(best_nid)
+        return out
 
     # --------------------------------------------------------- tuner loop
     @property
@@ -384,10 +445,11 @@ class TunedScoreRouter(ScoreDrivenRouter):
         feedback a deployed router would have had), which is what stops
         hindsight-greedy candidates from concentrating on the one node
         that happened to realize zero violations.  Terms matrices are
-        4-wide (no transfer term: whole-stream decisions never pay it);
-        weights are 5-wide."""
+        5-wide (full ``WEIGHT_NAMES`` order): whole-stream decisions carry
+        a zero transfer column, stage-split decisions the real one — so
+        ``W_XFER`` is learned from hindsight too."""
         def cost_fn(mult: np.ndarray) -> float:
-            w = (np.asarray(mult) * np.asarray(STATIC_WEIGHTS))[:4]
+            w = np.asarray(mult) * np.asarray(STATIC_WEIGHTS)
             extra: dict[int, float] = {}
             total = 0.0
             for ids, terms, marginal in decisions:

@@ -73,6 +73,8 @@ class TelemetryWindow:
     pipe_frames: int = 0              # pipelines completed head-to-tail
     pipe_latency_s: float = 0.0       # summed head-to-tail latency (s)
     departures: int = 0               # stream departures in the window
+    rejections: int = 0               # SLO admission rejections in the window
+    swaps: int = 0                    # SLO variant swaps in the window
 
     @property
     def norm_uxcost(self) -> float:
@@ -133,6 +135,8 @@ class FleetTelemetry:
         self._last_migrations = 0
         self._last_xfer_j = 0.0
         self._last_departures = 0
+        self._last_rejections = 0
+        self._last_swaps = 0
 
     # ------------------------------------------------------------ snapshot
     def _cumulative(self, nodes: dict) -> tuple[
@@ -162,10 +166,12 @@ class FleetTelemetry:
 
     def observe(self, t: float, nodes: dict, migrations: int,
                 xfer_energy_j: float,
-                departures: int = 0) -> TelemetryWindow:
+                departures: int = 0, rejections: int = 0,
+                swaps: int = 0) -> TelemetryWindow:
         """Close the current window at fleet time ``t`` and return it.
-        ``departures`` is the fleet's cumulative stream-departure counter
-        (the window reports the delta, like migrations)."""
+        ``departures`` / ``rejections`` / ``swaps`` are the fleet's
+        cumulative counters (the window reports deltas, like
+        migrations)."""
         cum, by_node = self._cumulative(nodes)
         delta = WindowStats()
         for cname in sorted(cum):
@@ -217,6 +223,8 @@ class FleetTelemetry:
             pipe_latency_s=sum(st.pipe_latency_s
                                for st in delta.per_model.values()),
             departures=departures - self._last_departures,
+            rejections=rejections - self._last_rejections,
+            swaps=swaps - self._last_swaps,
         )
         self.windows.append(win)
         self._t_last = t
@@ -225,4 +233,6 @@ class FleetTelemetry:
         self._last_migrations = migrations
         self._last_xfer_j = xfer_energy_j
         self._last_departures = departures
+        self._last_rejections = rejections
+        self._last_swaps = swaps
         return win

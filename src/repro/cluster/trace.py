@@ -45,6 +45,17 @@ vector directly and never constructs telemetry or steps the probe, so a
 tuned run replays bit-exactly even though the tuner consumed an RNG
 stream live (see ``docs/traces.md``).
 
+SLO-subsystem records: tiered streams carry their class on the arrival
+record (``"slo"``, omitted for tierless streams — legacy traces stay
+byte-stable), and the admission controller's decisions are recorded as
+``swap`` (degradation-ladder variant moves) and ``reject`` (refused
+placements) so replay bypasses the controller entirely:
+
+    {"type": "stream", "t": 0.3, "sid": 4, "entries": [...],
+     "slo": {"tier": 2}}
+    {"type": "swap",   "t": 0.9, "sid": 4, "level": 2, "pressure": 0.97}
+    {"type": "reject", "t": 1.1, "sid": 7, "tier": 2, "pressure": 1.12}
+
 The meta line carries ``"transfer"`` (the exact TransferModel parameters)
 and ``"split"`` when stage splitting was live; replay reconstructs the
 model from meta and re-derives every charge through the same code path,
@@ -70,7 +81,8 @@ from repro.scenarios import trace as base
 FLEET_TRACE_VERSION = 1
 FLEET_EVENT_KINDS = ("node_join", "node_leave", "node_drain",
                      "stream", "depart", "rejoin",
-                     "place", "migrate", "phase", "tune")
+                     "place", "migrate", "phase", "tune",
+                     "swap", "reject")
 
 
 class FleetTrace(base.Trace):
@@ -109,9 +121,16 @@ class FleetTraceRecorder:
         self.events.append({"type": "node_drain", "t": float(t),
                             "node": node})
 
-    def stream(self, t: float, sid: int, entries: list[dict]) -> None:
-        self.events.append({"type": "stream", "t": float(t), "sid": sid,
-                            "entries": entries})
+    def stream(self, t: float, sid: int, entries: list[dict],
+               slo: Optional[dict] = None) -> None:
+        """A stream arrival.  ``slo`` carries the declared SLO class config
+        when the stream is tiered; omitted entirely for tierless streams,
+        which keeps legacy (pre-SLO) traces byte-stable."""
+        ev: dict = {"type": "stream", "t": float(t), "sid": sid,
+                    "entries": entries}
+        if slo is not None:
+            ev["slo"] = dict(slo)
+        self.events.append(ev)
 
     def depart(self, t: float, sid: int, purged: int) -> None:
         """A stream departing (load release).  ``purged`` documents how
@@ -169,6 +188,31 @@ class FleetTraceRecorder:
             "window_uxcost": float(window_uxcost),
             "probing": bool(probing),
         })
+
+    def swap(self, t: float, sid: int, level: int,
+             pressure: Optional[float] = None) -> None:
+        """An SLO degradation-ladder decision: stream ``sid`` moves to
+        supernet-variant ``level`` (0 = full quality; k = k-th variant,
+        heavier->lighter).  Replay applies the recorded level directly and
+        never runs the admission controller; ``pressure`` documents the
+        admission-law scalar that drove the move."""
+        ev: dict = {"type": "swap", "t": float(t), "sid": sid,
+                    "level": int(level)}
+        if pressure is not None:
+            ev["pressure"] = float(pressure)
+        self.events.append(ev)
+
+    def reject(self, t: float, sid: int, tier: int,
+               pressure: Optional[float] = None) -> None:
+        """An admission rejection: stream ``sid`` (service tier ``tier``)
+        was refused placement — a first-class outcome that charges the
+        stream's expected frames as deadline violations into the fleet
+        UXCost.  Replay applies the rejection directly."""
+        ev: dict = {"type": "reject", "t": float(t), "sid": sid,
+                    "tier": int(tier)}
+        if pressure is not None:
+            ev["pressure"] = float(pressure)
+        self.events.append(ev)
 
     def trace(self) -> FleetTrace:
         return FleetTrace(meta=dict(self.meta), events=list(self.events))

@@ -213,6 +213,9 @@ class Simulator:
         self.window_stats = WindowStats()
         self.windows: list[tuple[float, float, float, float]] = []
         self.variant_counts: dict[str, int] = {}
+        # stream-level variant pins (SLO graceful degradation): model name ->
+        # variant graph every future job of that model is created on
+        self._variant_override: dict[str, ModelGraph] = {}
         self.drops = 0
         self.aborts = 0
         self.frames = 0
@@ -420,16 +423,22 @@ class Simulator:
         self.active[self._index_of(name)] = False
 
     def purge_model(self, name: str) -> int:
-        """Discard every not-yet-running job of ``name`` without touching
-        the stats — the load-release half of a stream *departure*: the
-        stream's user walked away, so its queued frames stop mattering and
-        must not count as violations or drops.  Jobs currently executing
-        finish normally (an accelerator cannot abandon a launched layer)
-        and still count.  Returns the number of jobs purged."""
+        """Discard every not-yet-running job of ``name`` without counting
+        frames or violations — the load-release half of a stream
+        *departure*: the stream's user walked away, so its queued frames
+        stop mattering and must not count as violations or drops.  Jobs
+        currently executing finish normally (an accelerator cannot abandon
+        a launched layer) and still count.  Energy is the exception: a job
+        evicted *between* dispatch blocks (queued with ``pos > 0``) already
+        burned real joules, which the stream's final UXCost entry must keep
+        — energy spent is never un-spent, mirroring how migration transfer
+        energy is charged.  Returns the number of jobs purged."""
         idx = self._index_of(name)
         gone = [j for j in self.jobs.values()
                 if j.model_idx == idx and not j.running]
         for j in gone:
+            if j.energy_used > 0.0:
+                self.window_stats.model(j.base_name).energy_j += j.energy_used
             j.done = True
             self.ready.pop(j.jid, None)
             self.jobs.pop(j.jid, None)
@@ -485,8 +494,35 @@ class Simulator:
         )
         self.jobs[job.jid] = job
         self.ready[job.jid] = job
+        override = self._variant_override.get(graph.name)
+        if override is not None:
+            # SLO degradation pin: every frame of this stream starts on the
+            # pinned variant; locked so the per-job supernet engine
+            # (DreamScheduler._maybe_switch_variant) keeps its hands off
+            self.switch_variant(job, override)
+            job.variant_locked = True
+            self.variant_counts[override.name] = \
+                self.variant_counts.get(override.name, 0) + 1
         self.scheduler.on_job_created(self, job)
         return job
+
+    def swap_variant(self, name: str, level: int, t: float) -> ModelGraph:
+        """Stream-level graceful degradation (the fleet SLO subsystem's
+        actuator): pin model ``name`` to supernet-variant ``level`` — 0
+        restores the original graph, k selects ``variants[k-1]`` (ordered
+        heavy -> light, clamped to the ladder depth).  Takes effect for
+        every job created from now on; jobs already queued or running are
+        untouched (frames in flight keep their quality).  Stats keys and
+        the ``worst_energy`` normalizer stay on the base graph, exactly as
+        per-job supernet switching does.  Returns the now-active graph."""
+        del t  # takes effect immediately; kept for call-site symmetry
+        graph = self.specs[self._index_of(name)].model
+        if level <= 0 or not graph.variants:
+            self._variant_override.pop(name, None)
+            return graph
+        v = graph.variants[min(int(level), len(graph.variants)) - 1]
+        self._variant_override[name] = v
+        return v
 
     def switch_variant(self, job: Job, variant: ModelGraph) -> None:
         """Supernet switching: swap the (not-yet-started) job to a lighter

@@ -160,6 +160,69 @@ def test_departure_purges_backlog_without_uxcost_penalty():
         ctrl.stats.per_model[key].violated
 
 
+def test_split_depart_releases_every_stage(monkeypatch):
+    """A split-placed stream's departure evicts and purges *each stage key*
+    on its hosting node — not just the head — and the fleet's purge count
+    is exactly the sum of the per-stage purges."""
+    from repro.cluster.node import FleetNode
+    calls = []
+    orig = FleetNode.release
+
+    def spy(self, key, t):
+        n = orig(self, key, t)
+        calls.append((key, n))
+        return n
+
+    monkeypatch.setattr(FleetNode, "release", spy)
+    b = FleetScenarioBuilder("split_depart")
+    for i in range(4):
+        b.node(SMALL_SYSTEMS[i])
+    sids = b.fuzz_streams(10, seed=3, t0=0.0, t1=0.5, fps_scale=0.25,
+                          cascade_prob=1.0, max_depth=3, cascades_only=True,
+                          depart_frac=1.0, t_depart0=0.6, t_depart1=1.2)
+    fs = FleetSimulator(b.build(), "score", duration_s=1.5, seed=3,
+                        transfer=TransferModel(), split_stages=True)
+    r = fs.run()
+    assert r.departures == len(sids)
+    by_sid: dict[int, list] = {}
+    for key, _ in calls:
+        assert isinstance(key, tuple)          # stage keys, never bare sids
+        by_sid.setdefault(key[0], []).append(key)
+    for sid in sids:
+        assert sorted(by_sid[sid]) == [
+            (sid, k) for k in range(fs.streams[sid].n_stages)]
+    assert r.jobs_purged == sum(n for _, n in calls)
+
+
+def test_purge_keeps_partial_execution_energy():
+    """Departure purges discard queued jobs without counting frames or
+    violations — but a job evicted *between* dispatch blocks already
+    burned real joules, which stay in the stream's energy accounting
+    (energy spent is never un-spent).  Fresh queued jobs contribute
+    nothing; running jobs are not purged at all."""
+    from repro.core import build_scenario, dream_full
+    from repro.core.simulator import Simulator
+    scn = build_scenario("AR_Call", 0.5)
+    sim = Simulator(scn, "4K_1WS2OS", dream_full(), duration_s=1.0)
+    name = sim.specs[0].model.name
+    st = sim.window_stats.model(name)
+    frames0, energy0 = st.frames, st.energy_j
+    # control: purging untouched queued jobs adds no energy
+    sim._create_job(0, t=0.0)
+    assert sim.purge_model(name) == 1
+    assert st.energy_j == energy0 and st.frames == frames0
+    # a partially-executed (queued-between-blocks) job keeps its joules
+    j = sim._create_job(0, t=0.0)
+    j.pos = 1
+    j.energy_used = 0.125
+    running = sim._create_job(0, t=0.0)
+    running.running = True                     # in flight: must survive
+    assert sim.purge_model(name) == 1
+    assert st.energy_j == energy0 + 0.125
+    assert st.frames == frames0 and st.violated == 0
+    assert running.jid in sim.jobs
+
+
 def test_uxcost_windows_close_out_departed_streams():
     """Telemetry windows after a departure report no new frames for the
     departed stream — its UXCost accounting is closed out, not dragged."""

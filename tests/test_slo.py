@@ -1,0 +1,415 @@
+"""SLO subsystem: tier declarations, admission state machine, degradation
+ladder (hysteresis + node-aware ordering), swap/reject trace replay, legacy
+byte-stability, and rejection accounting as a first-class UXCost outcome."""
+import pytest
+
+from repro.cluster import (AdmissionController, DEFAULT_SLO,
+                           FleetScenarioBuilder, FleetSimulator, LoadEstimator,
+                           SLOClass, SLOError, StreamState, TelemetryWindow,
+                           TIER_BEST_EFFORT, TIER_GUARANTEED, TIER_STANDARD,
+                           TIER_DEFAULTS, slo_from_config)
+from repro.cluster import trace as ftrace
+from repro.core import build_scenario, dream_full
+from repro.core.simulator import Simulator
+from repro.scenarios import ScenarioError
+
+SMALL_SYSTEMS = ("4K_1WS2OS", "8K_2WS", "4K_2OS", "8K_1OS2WS")
+
+#: Aggressive controller for the end-to-end tests: thresholds low enough
+#: that a small 4-node fleet reliably crosses them, so the ladder and the
+#: reject gate both fire within a 1-second run.
+SLO_CFG = {"t_degrade": 0.30, "t_promote": 0.20, "t_reject": 0.36,
+           "max_actions": 4, "admit_level": 2}
+
+
+def tiered_fleet(seed=3, n_nodes=4, n_streams=24, dur=1.0, tiers=True,
+                 supernet_frac=0.5, burst=True):
+    """A small overloaded fleet: a base wave plus (optionally) a second
+    burst wave that fully departs — the end-to-end shape the SLO
+    controller is built for, sized for test wall-time."""
+    b = FleetScenarioBuilder("slo_fleet")
+    for i in range(n_nodes):
+        b.node(SMALL_SYSTEMS[i % len(SMALL_SYSTEMS)])
+    kw = dict(fps_scale=0.55, deterministic_arrivals=True,
+              supernet_frac=supernet_frac)
+    if tiers:
+        kw["tier_mix"] = (1.0, 2.0, 2.0)
+    b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=round(0.35 * dur, 6),
+                   **kw)
+    if burst:
+        b.fuzz_streams(n_streams // 2, seed=seed + 50_021,
+                       t0=round(0.45 * dur, 6), t1=round(0.7 * dur, 6),
+                       depart_frac=1.0, t_depart0=round(0.72 * dur, 6),
+                       t_depart1=round(0.9 * dur, 6), **kw)
+    return b.build()
+
+
+def one_node_reject_fleet(depart_at=None, fps=40.0, dur=1.0):
+    """One node, one heavy admitted stream, then a best-effort arrival the
+    (hair-trigger) controller must reject; optionally the rejected stream
+    departs mid-run, closing its rejection span early."""
+    b = FleetScenarioBuilder("reject_fleet")
+    b.node("4K_1WS2OS")
+    b.add_stream([{"model": {"builder": "kws_res8", "name": "kws",
+                             "kwargs": {}}, "fps": fps,
+                   "arrival": {"kind": "periodic", "phase_frac": 0.0}}],
+                 at=0.0, slo=TIER_STANDARD)
+    sid = b.add_stream([{"model": {"builder": "kws_res8", "name": "kws2",
+                                   "kwargs": {}}, "fps": fps,
+                         "arrival": {"kind": "periodic", "phase_frac": 0.0}}],
+                       at=0.2, slo=TIER_BEST_EFFORT)
+    if depart_at is not None:
+        b.depart(sid, at=depart_at)
+    return b.build()
+
+
+@pytest.fixture(scope="module")
+def slo_run():
+    """One live SLO-gated overload run + its trace-replay — shared across
+    the end-to-end assertions below (the run is the expensive part)."""
+    scn = tiered_fleet()
+    live = FleetSimulator(scn, "score", duration_s=1.0, seed=3,
+                          slo=SLO_CFG, slo_every_s=0.1, record=True).run()
+    text = ftrace.dumps(live.trace)
+    rep = FleetSimulator(replay=ftrace.loads(text)).run()
+    return live, rep, text
+
+
+# ---------------------------------------------------------------------------
+# SLO classes and config forms
+# ---------------------------------------------------------------------------
+
+def test_slo_class_validation():
+    with pytest.raises(SLOError):
+        SLOClass(tier=7, budget_factor=1.0, priority=1.0)
+    with pytest.raises(SLOError):
+        SLOClass(tier=TIER_STANDARD, budget_factor=0.0, priority=1.0)
+    with pytest.raises(SLOError):
+        SLOClass(tier=TIER_STANDARD, budget_factor=1.0, priority=-1.0)
+
+
+def test_slo_from_config_forms():
+    assert slo_from_config(None) is DEFAULT_SLO
+    assert DEFAULT_SLO.tier == TIER_STANDARD
+    for tier in (TIER_GUARANTEED, TIER_STANDARD, TIER_BEST_EFFORT):
+        assert slo_from_config(tier) == TIER_DEFAULTS[tier]
+    custom = slo_from_config({"tier": 2, "budget_factor": 8.0})
+    assert custom.tier == TIER_BEST_EFFORT and custom.budget_factor == 8.0
+    assert custom.priority == TIER_DEFAULTS[TIER_BEST_EFFORT].priority
+    # round-trip: defaults compress to a bare tier, customs stay explicit
+    assert TIER_DEFAULTS[0].to_config() == {"tier": 0}
+    assert slo_from_config(custom.to_config()) == custom
+    for bad in (True, 9, {"tier": "x"}, {"budget_factor": 1.0}, "gold"):
+        with pytest.raises(SLOError):
+            slo_from_config(bad)
+
+
+def test_controller_make_and_config_roundtrip():
+    assert AdmissionController.make(None) is None
+    assert AdmissionController.make(False) is None
+    ac = AdmissionController.make(True)
+    assert isinstance(ac, AdmissionController)
+    assert AdmissionController.make(ac) is ac
+    cfg = AdmissionController.make(SLO_CFG).to_config()
+    assert AdmissionController.make(cfg).to_config() == cfg
+    with pytest.raises(SLOError):
+        AdmissionController.make("always")
+    with pytest.raises(SLOError):
+        # thresholds must order t_promote < t_degrade <= t_reject
+        AdmissionController(t_promote=0.9, t_degrade=0.5)
+
+
+# ---------------------------------------------------------------------------
+# admission state machine
+# ---------------------------------------------------------------------------
+
+def test_admission_state_machine():
+    ac = AdmissionController()          # t_degrade=0.85, t_reject=1.05
+    t0, t1, t2 = (TIER_DEFAULTS[t] for t in range(3))
+    assert ac.admit(t2, 3, [0.2]) == ("admit", 0)        # calm: everyone in
+    assert ac.admit(t0, 3, [2.0]) == ("admit", 0)        # guaranteed: always
+    assert ac.admit(t1, 3, [0.9]) == ("degrade", 1)      # pressured: one down
+    assert ac.admit(t1, 0, [0.9]) == ("admit", 0)        # no ladder to use
+    assert ac.admit(t2, 3, [1.2]) == ("reject", 0)       # best-effort out
+    assert ac.admit(t1, 3, [1.2]) == ("degrade", 1)      # standard never out
+    # admit_level clamps to the stream's actual ladder depth
+    deep = AdmissionController(admit_level=2)
+    assert deep.admit(t2, 1, [0.9]) == ("degrade", 1)
+    assert deep.admit(t2, 3, [0.9]) == ("degrade", 2)
+
+
+def test_admission_acts_on_forecast_before_saturation():
+    """A rising-load trend degrades arrivals while live utilization is
+    still low — the estimator's whole point is acting ahead of
+    saturation."""
+    ac = AdmissionController()
+    for u in (0.2, 0.6, 0.9):
+        ac.estimator.observe(u)
+    assert ac.estimator.predict() > 0.9
+    assert ac.admit(TIER_DEFAULTS[2], 2, [0.3])[0] == "degrade"
+
+
+def test_pressure_folds_in_window_signals():
+    """DLV, backlog, and latency-over-budget all raise the pressure
+    scalar beyond bare utilization."""
+    def window(**kw):
+        base = dict(t0=0.0, t1=0.5, frames=10, violated=0, dlv_rate=0.0,
+                    uxcost=0.0, node_dlv={}, node_frames={},
+                    backlog_p50=0.0, backlog_p90=0.0, backlog_max=0.0,
+                    migrations=0, xfer_j=0.0, stream_uxcost={})
+        base.update(kw)
+        return TelemetryWindow(**base)
+
+    calm = AdmissionController()
+    p0 = calm.on_window(window(), [0.4])
+    hot = AdmissionController()
+    p1 = hot.on_window(window(node_dlv={0: 0.4, 1: 0.1},
+                              backlog_p90=1.0), [0.4])
+    assert p1 == pytest.approx(p0 + 0.5 * 0.4 + 0.25 * 1.0)
+    # latency term needs a registered budget to normalize against
+    late = AdmissionController()
+    late.register(0, TIER_DEFAULTS[0], head_period_s=0.1)   # budget 0.1s
+    p2 = late.on_window(window(pipe_frames=2, pipe_latency_s=0.6), [0.4])
+    assert p2 > p0
+    late.forget(0)
+    assert late.pressure([0.4]) == pytest.approx(p0)  # budget gone: term off
+
+
+def test_load_estimator_tracks_level_and_trend():
+    est = LoadEstimator()
+    assert est.predict() == 0.0
+    for _ in range(8):
+        est.observe(0.5)
+    assert est.predict() == pytest.approx(0.5, abs=1e-3)
+    rising = LoadEstimator()
+    for u in (0.1, 0.3, 0.5, 0.7):
+        rising.observe(u)
+    assert rising.predict() > rising.level
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: hysteresis + node-aware ordering
+# ---------------------------------------------------------------------------
+
+def test_ladder_orders_and_hysteresis_band():
+    ac = AdmissionController(t_degrade=0.8, t_promote=0.6, t_reject=1.0,
+                             max_actions=2)
+    states = [
+        StreamState(sid=0, tier=0, priority=4.0, level=0, max_level=3,
+                    load=9.0),                       # tier-0: untouchable
+        StreamState(sid=1, tier=2, priority=1.0, level=0, max_level=3,
+                    load=0.1),
+        StreamState(sid=2, tier=2, priority=1.0, level=0, max_level=3,
+                    load=0.9),
+        StreamState(sid=3, tier=1, priority=2.0, level=3, max_level=3,
+                    load=0.9),                       # already at the bottom
+        StreamState(sid=4, tier=1, priority=2.0, level=1, max_level=3,
+                    load=0.5),
+    ]
+    ac.last_pressure = 0.9
+    # hottest node first (sid 2 before sid 1 despite equal tier/priority),
+    # never tier-0, never past max_level, at most max_actions moves
+    assert ac.plan(states) == [(2, 1), (4, 2)]
+    ac.last_pressure = 0.7                           # inside the band
+    assert ac.plan(states) == []                     # hysteresis: no flap
+    ac.last_pressure = 0.5
+    # promote coolest-node streams first, one level per tick
+    assert ac.plan(states) == [(4, 0), (3, 2)]
+
+
+def test_ladder_noop_without_degraded_or_eligible_streams():
+    ac = AdmissionController()
+    ac.last_pressure = 2.0
+    only_t0 = [StreamState(sid=0, tier=0, priority=4.0, level=0,
+                           max_level=3, load=1.0)]
+    assert ac.plan(only_t0) == []
+    ac.last_pressure = 0.0
+    assert ac.plan(only_t0) == []                    # nothing to promote
+
+
+# ---------------------------------------------------------------------------
+# the actuator: Simulator.swap_variant
+# ---------------------------------------------------------------------------
+
+def test_swap_variant_pins_and_restores():
+    scn = build_scenario("VR_Gaming", 0.5)
+    sim = Simulator(scn, "4K_1WS2OS", dream_full(), duration_s=1.0)
+    idx = scn.model_index("ctx_ofa")
+    base = sim.specs[idx].model
+    v1 = sim.swap_variant("ctx_ofa", 1, 0.0)
+    assert v1 is base.variants[0]
+    job = sim._create_job(idx, t=0.0)
+    # pinned jobs start on the variant, locked against per-job switching
+    assert job.graph_name == v1.name and job.variant_locked
+    assert job.base_name == base.name               # stats stay on the base
+    # level clamps to the ladder depth; level 0 restores the original
+    assert sim.swap_variant("ctx_ofa", 99, 0.1) is base.variants[-1]
+    assert sim.swap_variant("ctx_ofa", 0, 0.2) is base
+    job2 = sim._create_job(idx, t=0.3)
+    assert job2.graph_name == base.name and not job2.variant_locked
+    # a model without variants is untouched at any level
+    kws_idx = scn.model_index("kws_res8")
+    kws = sim.specs[kws_idx].model
+    assert sim.swap_variant("kws_res8", 2, 0.4) is kws
+
+
+# ---------------------------------------------------------------------------
+# builder: tier declarations and RNG isolation
+# ---------------------------------------------------------------------------
+
+def _entries(fps=5.0):
+    return [{"model": {"builder": "kws_res8", "name": "kws", "kwargs": {}},
+             "fps": fps}]
+
+
+def test_builder_rejects_bad_slo_declarations():
+    b = FleetScenarioBuilder("bad")
+    b.node("4K_1WS2OS")
+    with pytest.raises(SLOError):
+        b.add_stream(_entries(), slo=7)
+    with pytest.raises(SLOError):
+        b.add_stream(_entries(), slo=True)
+    with pytest.raises(ScenarioError):
+        b.fuzz_streams(4, seed=0, tier_mix=(1.0, 2.0))
+    with pytest.raises(ScenarioError):
+        b.fuzz_streams(4, seed=0, tier_mix=(-1.0, 1.0, 1.0))
+    with pytest.raises(ScenarioError):
+        b.fuzz_streams(4, seed=0, tier_mix=(0.0, 0.0, 0.0))
+    with pytest.raises(ScenarioError):
+        b.fuzz_streams(4, seed=0, supernet_frac=1.5)
+
+
+def _stream_events(scn):
+    return [e for e in scn.events if e.kind == "stream"]
+
+
+def test_tier_draws_do_not_perturb_population():
+    """``tier_mix`` draws come from a dedicated RNG stream: the tiered
+    population has bit-identical arrivals and pipelines to the tierless
+    one — the ``slo`` field is the only difference."""
+    def build(tiers):
+        b = FleetScenarioBuilder("iso")
+        b.node("4K_1WS2OS")
+        b.fuzz_streams(12, seed=5, t0=0.0, t1=0.5,
+                       tier_mix=(1.0, 2.0, 2.0) if tiers else None)
+        return b.build()
+
+    plain, tiered = build(False), build(True)
+    ev0, ev1 = _stream_events(plain), _stream_events(tiered)
+    assert len(ev0) == len(ev1) == 12
+    for a, b_ in zip(ev0, ev1):
+        assert a.t == b_.t
+        assert a.payload["entries"] == b_.payload["entries"]
+        assert "slo" not in a.payload
+        assert b_.payload["slo"]["tier"] in (0, 1, 2)
+    # all three tiers show up in a 12-stream draw with (1, 2, 2) weights
+    assert {e.payload["slo"]["tier"] for e in ev1} == {0, 1, 2}
+
+
+def test_supernet_frac_reheads_strided_streams():
+    b = FleetScenarioBuilder("heads")
+    b.node("4K_1WS2OS")
+    b.fuzz_streams(8, seed=5, t0=0.0, t1=0.5, supernet_frac=0.5)
+    by_sid = sorted(_stream_events(b.build()), key=lambda e: e.payload["sid"])
+    heads = [e.payload["entries"][0]["model"]["builder"] for e in by_sid]
+    assert heads[::2] == ["ofa"] * 4                # every 2nd stream
+    assert all(h != "ofa" for h in heads[1::2])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: live SLO run, replay bit-exactness, rejection accounting
+# ---------------------------------------------------------------------------
+
+def test_slo_run_controller_acted(slo_run):
+    live, _, _ = slo_run
+    assert live.slo_enabled
+    assert live.swaps > 0                            # ladder fired
+    assert live.rejections > 0                       # reject gate fired
+    assert live.promotions <= live.swaps
+    # all three tiers completed frames under the burst
+    assert set(live.tier_frames) == {0, 1, 2}
+
+
+def test_slo_trace_replay_bitexact(slo_run):
+    """Replay applies the recorded swap/reject decisions as inputs (the
+    controller never runs) and must land on the identical result."""
+    live, rep, _ = slo_run
+    assert rep.uxcost == live.uxcost
+    assert rep.dlv_rate == live.dlv_rate
+    assert rep.frames == live.frames
+    assert rep.drops == live.drops
+    assert rep.migrations == live.migrations
+    assert rep.swaps == live.swaps
+    assert rep.promotions == live.promotions
+    assert rep.rejections == live.rejections
+    assert rep.reject_frames == live.reject_frames
+    assert rep.tier_frames == live.tier_frames
+    assert rep.tier_dlv == live.tier_dlv
+    assert rep.slo_enabled == live.slo_enabled       # flagged via trace meta
+
+
+def test_slo_trace_roundtrip_bytestable(slo_run):
+    _, _, text = slo_run
+    assert ftrace.dumps(ftrace.loads(text)) == text
+    kinds = {e["type"] for e in ftrace.loads(text).events}
+    assert "swap" in kinds and "reject" in kinds
+
+
+def test_rejection_is_charged_not_silently_dropped(slo_run):
+    """Every head frame a refused stream would have offered counts as a
+    violated pseudo-frame in the tier accounting — rejections are paid
+    for in UXCost, never free."""
+    live, _, _ = slo_run
+    assert live.reject_frames > 0
+    # tier accounting covers completed + rejected pseudo frames exactly
+    assert sum(live.tier_frames.values()) == live.frames + live.reject_frames
+
+
+def test_reject_depart_closes_span():
+    """A rejected stream accrues pseudo-violations only while it is
+    present: its departure closes the rejection span."""
+    slo = {"t_degrade": 2e-4, "t_promote": 1e-4, "t_reject": 2e-4}
+    kw = dict(policy="score", duration_s=1.0, seed=0, slo=slo,
+              slo_every_s=0.25)
+    full = FleetSimulator(one_node_reject_fleet(), **kw).run()
+    cut = FleetSimulator(one_node_reject_fleet(depart_at=0.5), **kw).run()
+    assert full.rejections == cut.rejections == 1
+    # span [0.2, 1.0) vs [0.2, 0.5) at 40 fps
+    assert full.reject_frames == round(0.8 * 40)
+    assert cut.reject_frames == round(0.3 * 40)
+    # the lone best-effort stream never ran: its tier is pure violations
+    assert full.tier_dlv[TIER_BEST_EFFORT] == 1.0
+
+
+def test_slo_disabled_is_inert():
+    """With no controller, tier declarations only label the accounting:
+    the run itself is bit-identical to the tierless scenario."""
+    kw = dict(policy="score", duration_s=1.0, seed=3)
+    plain = FleetSimulator(tiered_fleet(tiers=False), **kw).run()
+    tiered = FleetSimulator(tiered_fleet(tiers=True), **kw).run()
+    assert not tiered.slo_enabled
+    assert tiered.swaps == tiered.rejections == tiered.reject_frames == 0
+    assert tiered.uxcost == plain.uxcost
+    assert tiered.frames == plain.frames
+    assert tiered.drops == plain.drops
+    assert tiered.migrations == plain.migrations
+    # same frames, different labels: tierless lumps all into tier-1
+    assert sum(tiered.tier_frames.values()) == sum(plain.tier_frames.values())
+    assert set(plain.tier_frames) == {TIER_STANDARD}
+
+
+def test_legacy_trace_has_no_slo_records():
+    """A tierless, controller-free recorded run stays byte-stable against
+    the SLO subsystem: no slo/swap/reject strings anywhere in its trace,
+    and the trace still replays bit-exactly."""
+    scn = tiered_fleet(tiers=False, supernet_frac=0.0, burst=False,
+                       n_streams=12)
+    live = FleetSimulator(scn, "score", duration_s=0.8, seed=3,
+                          record=True).run()
+    text = ftrace.dumps(live.trace)
+    assert '"slo"' not in text
+    assert '"swap"' not in text
+    assert '"reject"' not in text
+    assert ftrace.dumps(ftrace.loads(text)) == text
+    rep = FleetSimulator(replay=ftrace.loads(text)).run()
+    assert (rep.uxcost, rep.frames) == (live.uxcost, live.frames)

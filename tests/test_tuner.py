@@ -157,7 +157,7 @@ def test_signal_free_window_holds_weights():
     """A violation-free window cannot rank candidates: weights hold even
     though decisions were recorded."""
     pol = TunedScoreRouter()
-    pol._decisions.append(([0, 1], np.zeros((2, 4)), np.zeros(2)))
+    pol._decisions.append(([0, 1], np.zeros((2, 5)), np.zeros(2)))
     win = TelemetryWindow(
         t0=0.0, t1=0.5, frames=10, violated=0, dlv_rate=0.0, uxcost=0.1,
         node_dlv={0: 0.0, 1: 0.0}, node_frames={0: 5, 1: 5},
@@ -221,6 +221,44 @@ def test_phase_event_scales_migrated_stream_at_drifted_rate():
 # ---------------------------------------------------------------------------
 # the tuner in the fleet loop
 # ---------------------------------------------------------------------------
+
+def cascade_split_fleet(seed=3, n_streams=8, dur=0.8):
+    b = FleetScenarioBuilder("tuner_cascade")
+    for i in range(4):
+        b.node(SYSTEMS[i % len(SYSTEMS)])
+    b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=0.5 * dur,
+                   fps_scale=0.25, cascade_prob=1.0, max_depth=3,
+                   cascades_only=True, deterministic_arrivals=True)
+    return b.build()
+
+
+def test_stage_decisions_record_five_wide_terms():
+    """Under stage-split placement the tuned router records one decision
+    context per *stage* with the full 5-wide WEIGHT_NAMES terms — the
+    transfer column finite, and nonzero for off-parent candidates — while
+    still landing on the static router's exact placements."""
+    from repro.cluster import TransferModel
+    tm = TransferModel(link_bandwidth_bytes_s=1.25e9)
+    kw = dict(duration_s=0.8, seed=3, transfer=tm, split_stages=True)
+    fs = FleetSimulator(cascade_split_fleet(), "tuned_score", **kw)
+    fs.run()                      # no tune ticks: contexts are retained
+    decisions = list(fs.policy._decisions)
+    assert decisions
+    # cascades_only: every stream has >= 2 stages, so there are strictly
+    # more decisions (head + each stage) than streams
+    assert len(decisions) > len(fs.streams)
+    xfer_cols = np.concatenate([rows[:, 4] for _, rows, _ in decisions])
+    assert all(rows.shape[1] == 5 for _, rows, _ in decisions)
+    assert np.isfinite(xfer_cols).all()        # inf is clamped, never stored
+    assert (xfer_cols > 0).any()               # off-parent candidates priced
+    # head (whole-stream) decisions keep a zero transfer column
+    assert (xfer_cols == 0).any()
+    # recording must not perturb the argmin: placement parity with the
+    # static score router on the identical scenario
+    ctrl = FleetSimulator(cascade_split_fleet(), "score", **kw)
+    ctrl.run()
+    assert fs.stage_node == ctrl.stage_node
+
 
 def test_tuner_consumes_windows_and_stays_in_bounds():
     fscn = drift_fleet(phase=True)
