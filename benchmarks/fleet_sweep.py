@@ -546,14 +546,20 @@ def run_overload(duration_s: float, seed: int, n_nodes: int = 8,
 
 
 def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
-        n_streams: int = 200, churn: bool = True) -> dict:
+        n_streams: int = 200, churn: bool = True,
+        obs_dir: "str | None" = None) -> dict:
+    import time
     fscn = build_fleet(seed, n_nodes, n_streams, duration_s, churn=churn)
     rows = {}
     score_trace = None
+    score_result = None
+    wall_score = 0.0
     for policy in POLICIES:
         fs = FleetSimulator(fscn, policy, duration_s=duration_s, seed=seed,
                             record=(policy == "score"))
+        w0 = time.perf_counter()
         r = fs.run()
+        wall = time.perf_counter() - w0
         rows[policy] = {
             "uxcost": r.uxcost, "dlv_rate": r.dlv_rate,
             "norm_energy": r.norm_energy, "frames": r.frames,
@@ -565,13 +571,48 @@ def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
         }
         if policy == "score":
             score_trace = r.trace
+            score_result = r
+            wall_score = wall
     replayed = FleetSimulator(
         replay=ftrace.loads(ftrace.dumps(score_trace))).run()
+    obs_out = None
+    if obs_dir is not None:
+        # obs-enabled control run of the score arm: exports spans/metrics/
+        # profile, measures instrumentation wall overhead, and asserts the
+        # traced run stays bit-identical to the untraced one
+        fs_obs = FleetSimulator(fscn, "score", duration_s=duration_s,
+                                seed=seed, obs=True)
+        w0 = time.perf_counter()
+        r_obs = fs_obs.run()
+        wall_obs = time.perf_counter() - w0
+        paths = fs_obs.obs.export(obs_dir)
+        obs_out = {
+            "dir": obs_dir,
+            "files": sorted(paths),
+            "wall_s": round(wall_obs, 4),
+            "wall_overhead": wall_obs / max(wall_score, 1e-9),
+            "uxcost_match": r_obs.uxcost == score_result.uxcost,
+            "spans": len(fs_obs.obs.tracer.to_records()),
+            "streams_per_wall_s_traced":
+                r_obs.stream_seconds / max(wall_obs, 1e-9),
+        }
+        if not obs_out["uxcost_match"]:
+            raise SystemExit("obs-enabled fleet run diverged from the "
+                             "untraced control — instrumentation leaked "
+                             "into scheduling")
     out = {
         "n_nodes": n_nodes, "n_streams": n_streams,
         "duration_s": duration_s, "seed": seed, "churn": churn,
         "fps_scale": FPS_SCALE,
         "policies": rows,
+        # simulated stream-seconds served per wall-clock second on the
+        # score arm: the simulator-throughput figure the BENCH trajectory
+        # tracks (machine-dependent, so trend-only — never gated)
+        "wall_s_score": round(wall_score, 4),
+        "stream_seconds": score_result.stream_seconds,
+        "streams_per_wall_s":
+            score_result.stream_seconds / max(wall_score, 1e-9),
+        "obs": obs_out,
         "rr_over_score": (rows["round_robin"]["uxcost"]
                           / max(rows["score"]["uxcost"], 1e-12)),
         "score_beats_round_robin": (rows["score"]["uxcost"]
@@ -601,9 +642,10 @@ def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
 
 
 def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
-         n_streams: int = 200, churn: bool = True) -> None:
+         n_streams: int = 200, churn: bool = True,
+         obs_dir: "str | None" = None) -> None:
     out = run(duration_s=duration_s, seed=seed, n_nodes=n_nodes,
-              n_streams=n_streams, churn=churn)
+              n_streams=n_streams, churn=churn, obs_dir=obs_dir)
     print(f"fleet_sweep: {out['n_nodes']} nodes (+churn={out['churn']}), "
           f"{out['n_streams']} streams, {out['duration_s']}s")
     for policy, r in out["policies"].items():
@@ -612,6 +654,14 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
               f"frames={r['frames']:<6d} migr={r['migrations']}")
     print(f"  UXCost(round_robin)/UXCost(score) = {out['rr_over_score']:.3f}"
           f"   replay_exact={out['replay_exact']}")
+    print(f"  throughput: {out['streams_per_wall_s']:.1f} stream-seconds "
+          f"simulated per wall-second (score arm, "
+          f"{out['wall_s_score']:.2f}s wall)")
+    if out["obs"] is not None:
+        o = out["obs"]
+        print(f"  obs: {o['spans']} spans -> {o['dir']}  "
+              f"wall_overhead={o['wall_overhead']:.3f}  "
+              f"uxcost_match={o['uxcost_match']}")
     c = out["cascade"]
     print(f"cascade sweep: {c['n_nodes']} nodes x {c['n_seeds']} seeds, "
           f"{c['n_streams']} heavy cascade streams each "

@@ -93,6 +93,9 @@ def main() -> None:
                     help="seed threaded to simulator-backed figures")
     ap.add_argument("--duration", type=float, default=None,
                     help="per-cell simulation duration (seconds)")
+    ap.add_argument("--obs", default=None, metavar="DIR",
+                    help="export observability artifacts (spans/metrics/"
+                         "profile) from obs-capable benchmarks to this dir")
     args = ap.parse_args()
     if args.list:
         for tag, modname in MODULES:
@@ -121,7 +124,8 @@ def main() -> None:
         try:
             mod = importlib.import_module(modname)
             kw = _filter_kwargs(mod.run, seed=args.seed,
-                                duration_s=args.duration)
+                                duration_s=args.duration,
+                                obs_dir=args.obs)
             if args.json is not None:
                 payloads[tag] = mod.run(**kw)
                 print(f"  [{tag}] collected "

@@ -39,6 +39,7 @@ from repro.cluster.telemetry import TelemetryWindow
 from repro.cluster.router import make_policy
 from repro.core.uxcost import WindowStats, uxcost
 from repro.launch.serve import build_handle
+from repro.obs import Obs
 from repro.serving import RequestQueue, ServingEngine, VirtualAccelerator
 
 
@@ -131,6 +132,9 @@ def main() -> None:
     ap.add_argument("--epochs", type=int, default=0, help=(
         "serving epochs (re-place + serve + feed telemetry); defaults to "
         "3 for tuned_score, 1 otherwise"))
+    ap.add_argument("--obs", default=None, metavar="DIR", help=(
+        "export observability artifacts (placement/epoch spans + a "
+        "Prometheus/JSON metrics snapshot) to this directory"))
     args = ap.parse_args()
     if args.epochs <= 0:
         args.epochs = 3 if args.policy == "tuned_score" else 1
@@ -178,6 +182,19 @@ def main() -> None:
     rng = np.random.default_rng(0)           # tuner distant-sample stream
     per_epoch_s = args.duration / args.epochs
     prev: dict[int, tuple] = {}
+    # observability: the same Obs bundle the fleet simulator threads —
+    # spans for placements/epochs, a metrics registry the serving loop
+    # publishes into (real engines are wall-clock-timed, so spans here
+    # carry epoch indices as the time axis)
+    obs = Obs.make({"profile": False} if args.obs else None)
+    if obs is not None and obs.metrics is not None:
+        m_frames = obs.metrics.counter(
+            "serve_frames_total", "frames served", ("node", "model"))
+        m_viol = obs.metrics.counter(
+            "serve_violations_total", "deadline violations",
+            ("node", "model"))
+        m_dlv = obs.metrics.gauge(
+            "serve_epoch_dlv", "epoch deadline-violation rate")
     print(f"[serve_fleet] policy={policy.name}, {args.epochs} epoch(s) x "
           f"{per_epoch_s:.2f}s")
     for epoch in range(args.epochs):
@@ -204,6 +221,10 @@ def main() -> None:
                 # rate is not a deadline
                 st["deadline"] = min(st["deadline"], 1.0 / stream.fps)
             placements.append((i, stream.model, stream.fps, node.name))
+            if obs is not None and obs.tracer is not None:
+                obs.tracer.event("place", float(epoch), stream=i,
+                                 model=stream.model, node=node.name,
+                                 policy=policy.name)
 
         for i, model, fps, where in placements:
             print(f"[serve_fleet]   epoch {epoch} stream {i}: "
@@ -232,6 +253,13 @@ def main() -> None:
                   f"{reports[node.node_id].summary()}")
 
         win = epoch_window(epoch, nodes, prev)
+        if obs is not None:
+            if obs.tracer is not None:
+                obs.tracer.span("epoch", float(epoch), float(epoch + 1),
+                                dlv=win.dlv_rate, uxcost=win.uxcost,
+                                frames=win.frames)
+            if obs.metrics is not None:
+                m_dlv.set(win.dlv_rate)
         on_window = getattr(policy, "on_window", None)
         if on_window is not None:
             on_window(win, rng)
@@ -246,6 +274,20 @@ def main() -> None:
     print(f"[serve_fleet] fleet UXCost = {uxcost(fleet_stats):.4f} over "
           f"{sum(st.frames for st in fleet_stats.per_model.values())} frames "
           f"({len(nodes)} nodes, {args.epochs} epochs)")
+    if obs is not None:
+        if obs.metrics is not None:
+            for node in nodes:
+                for name, st in sorted(node.engine.stats.per_model.items()):
+                    m_frames.inc(st.frames, node=node.name, model=name)
+                    m_viol.inc(st.violated, node=node.name, model=name)
+            obs.metrics.gauge(
+                "serve_fleet_uxcost",
+                "fleet UXCost at run end").set(uxcost(fleet_stats))
+        if obs.tracer is not None:
+            obs.tracer.finish(float(args.epochs))
+        paths = obs.export(args.obs)
+        print(f"[serve_fleet] obs artifacts -> "
+              f"{', '.join(sorted(paths.values()))}")
 
 
 if __name__ == "__main__":

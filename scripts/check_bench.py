@@ -84,7 +84,13 @@ METRICS = {
                          ("overload", "slo_over_unaware")),
     "tier0_dlv_overload": ("ci_fleet_sweep.json",
                            ("overload", "tier0_dlv_overload")),
+    "streams_per_wall_s": ("ci_fleet_sweep.json", ("streams_per_wall_s",)),
 }
+
+#: metrics recorded in the trajectory trend series but never gated and
+#: never written to the baseline: wall-clock throughput depends on the
+#: machine running CI, so only its *trend on one machine* is meaningful
+TRAJECTORY_ONLY = {"streams_per_wall_s"}
 
 
 def extract(artifacts_dir: str) -> dict[str, float]:
@@ -117,6 +123,10 @@ def check(values: dict[str, float], baseline: dict) -> int:
     two_sided = set(baseline.get("two_sided", ()))
     failures = []
     for name, value in sorted(values.items()):
+        if name in TRAJECTORY_ONLY:
+            print(f"check_bench: trend  {name} = {value:.4f} "
+                  "(trajectory-only; machine-dependent, never gated)")
+            continue
         if name not in base:
             print(f"check_bench: NEW    {name} = {value:.4f} "
                   "(not in baseline — run --update to start gating it)")
@@ -201,9 +211,10 @@ def update(values: dict[str, float], baseline_path: str,
         "description": ("CI benchmark baselines: improvement ratios from "
                         "the fixed-seed CI sweeps; refreshed via "
                         "scripts/check_bench.py --update"),
-        "metrics": {k: round(v, 6) for k, v in sorted(values.items())},
+        "metrics": {k: round(v, 6) for k, v in sorted(values.items())
+                    if k not in TRAJECTORY_ONLY},
         "tolerance": (old or {}).get("tolerance", {
-            name: 0.1 for name in METRICS}),
+            name: 0.1 for name in METRICS if name not in TRAJECTORY_ONLY}),
         "two_sided": (old or {}).get("two_sided",
                                      ["contended_over_uncontended",
                                       "tier0_dlv_overload"]),

@@ -121,6 +121,55 @@ print(f"ci: ok — slo smoke: {r.swaps} swaps, {r.rejections} rejections, "
 EOF
 }
 
+obs_smoke() {
+    # fast-lane observability gate: a tiny traced fleet run must (a) stay
+    # bit-identical to an untraced control in UXCost/frames, (b) export a
+    # Prometheus snapshot our strict parser accepts, (c) produce a
+    # non-empty schema-valid span file whose critical paths reconcile with
+    # the reported pipeline latency, and (d) record profiler wall time
+    python - <<'EOF'
+import sys, tempfile
+from benchmarks.fleet_sweep import build_overload_fleet, OVERLOAD_SLO
+from repro.cluster import FleetSimulator
+from repro.obs import critical_path, load_jsonl, parse_prometheus, \
+    pipeline_tails
+scn = build_overload_fleet(3, 4, 24, 1.0, burst=True)
+kw = dict(duration_s=1.0, seed=3, slo=OVERLOAD_SLO, slo_every_s=0.1)
+ctrl = FleetSimulator(scn, "score", **kw).run()
+fs = FleetSimulator(scn, "score", obs=True, **kw)
+r = fs.run()
+if (r.uxcost, r.frames, r.tier_dlv) != \
+        (ctrl.uxcost, ctrl.frames, ctrl.tier_dlv):
+    sys.exit("obs smoke: traced run diverged from untraced control")
+with tempfile.TemporaryDirectory() as d:
+    paths = fs.obs.export(d)
+    recs = load_jsonl(paths["spans"])           # validates every span
+    if not recs:
+        sys.exit("obs smoke: span file is empty")
+    fams = parse_prometheus(open(paths["metrics_prom"]).read())
+    if not fams:
+        sys.exit("obs smoke: Prometheus export has no samples")
+tails = pipeline_tails(recs)
+if not tails:
+    sys.exit("obs smoke: no completed pipeline tails traced")
+tot = 0.0
+for tail in tails:
+    cp = critical_path(recs, tail_uid=tail["attrs"]["uid"])
+    if abs(sum(s["t1"] - s["t0"] for s in cp["segments"])
+           - cp["total_s"]) > 1e-9:
+        sys.exit("obs smoke: critical-path segments do not telescope")
+    tot += cp["total_s"]
+if abs(tot / len(tails) - r.pipeline_latency_s) > 1e-9:
+    sys.exit("obs smoke: critical paths do not reconcile with "
+             "overall pipeline latency")
+if fs.obs.profiler.total_wall_s <= 0.0:
+    sys.exit("obs smoke: profiler recorded no wall time")
+print(f"ci: ok — obs smoke: {len(recs)} spans, {len(fams)} metric "
+      f"samples, {len(tails)} critical paths reconciled, traced run "
+      "bit-identical to control")
+EOF
+}
+
 pydoc_render() {
     python - <<'EOF'
 import pydoc
@@ -131,7 +180,8 @@ for mod in ("repro.cluster", "repro.cluster.fleet", "repro.cluster.router",
             "repro.scenarios.arrivals", "repro.scenarios.phases",
             "repro.scenarios.trace", "repro.scenarios.registry",
             "repro.scenarios.fuzzer", "repro.core.costmodel",
-            "repro.core.adaptivity"):
+            "repro.core.adaptivity", "repro.obs", "repro.obs.spans",
+            "repro.obs.metrics", "repro.obs.profiler", "repro.obs.report"):
     text = pydoc.plain(pydoc.render_doc(mod))  # raises on import failure
     assert "NAME" in text and "DESCRIPTION" in text, mod
 print("pydoc: ok — all public modules render")
@@ -236,6 +286,7 @@ stage lint           lint
 stage tests          tests
 stage docs_refs      docs_refs
 stage slo_smoke      slo_smoke
+stage obs_smoke      obs_smoke
 
 if [ "$CI_FAST" = "1" ]; then
     echo

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Offline run-report generator over exported observability artifacts.
+
+Reads the files :meth:`repro.obs.Obs.export` writes into a directory —
+``spans.jsonl``, ``metrics.json``, ``profile.json`` (any subset) — and
+renders a markdown report: fleet event timeline, per-SLO-tier DLV
+breakdown, pressure-law term attribution for every degrade/reject
+decision, the N slowest pipelines explained segment-by-segment via
+critical-path extraction, and the hot-loop wall-time table.
+
+    PYTHONPATH=src python -m benchmarks.run --only fleet_sweep \
+        --json /tmp/b.json --obs /tmp/obs
+    python scripts/report.py /tmp/obs
+    python scripts/report.py /tmp/obs -o report.md --paths 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
+
+from repro.obs import load_jsonl  # noqa: E402
+from repro.obs.report import render_report  # noqa: E402
+
+
+def load_artifacts(obs_dir: str) -> tuple:
+    """(records, metrics_snapshot, profile_snapshot), each None if its
+    artifact is absent — the renderer degrades per section."""
+    records = metrics = profile = None
+    spans_path = os.path.join(obs_dir, "spans.jsonl")
+    if os.path.exists(spans_path):
+        records = load_jsonl(spans_path)
+    metrics_path = os.path.join(obs_dir, "metrics.json")
+    if os.path.exists(metrics_path):
+        with open(metrics_path) as f:
+            metrics = json.load(f)
+    profile_path = os.path.join(obs_dir, "profile.json")
+    if os.path.exists(profile_path):
+        with open(profile_path) as f:
+            profile = json.load(f)
+    return records, metrics, profile
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("obs_dir", help="directory holding spans.jsonl / "
+                                    "metrics.json / profile.json")
+    ap.add_argument("-o", "--out", default=None,
+                    help="write the report here instead of stdout")
+    ap.add_argument("--title", default=None,
+                    help="report title (defaults to the artifact dir)")
+    ap.add_argument("--paths", type=int, default=3,
+                    help="how many slowest pipelines to explain")
+    ap.add_argument("--timeline-rows", type=int, default=60,
+                    help="max rows on the event timeline")
+    args = ap.parse_args(argv)
+    if not os.path.isdir(args.obs_dir):
+        sys.exit(f"report: {args.obs_dir} is not a directory")
+    records, metrics, profile = load_artifacts(args.obs_dir)
+    if records is None and metrics is None and profile is None:
+        sys.exit(f"report: no observability artifacts in {args.obs_dir} "
+                 "(expected spans.jsonl / metrics.json / profile.json)")
+    text = render_report(records, metrics, profile,
+                         title=args.title or f"Run report: {args.obs_dir}",
+                         n_paths=args.paths,
+                         timeline_rows=args.timeline_rows)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"report: wrote {args.out}")
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

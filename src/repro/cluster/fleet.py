@@ -134,6 +134,7 @@ from repro.core.simulator import SchedulerBase
 from repro.core.uxcost import (WindowStats, overall_dlv_rate,
                                overall_norm_energy,
                                overall_pipeline_latency, uxcost)
+from repro.obs import Obs
 from repro.scenarios.builder import ModelEntry
 
 from repro.scenarios.phases import PhaseAction
@@ -388,6 +389,7 @@ class FleetResult:
     #: frames / DLV rate per SLO tier (tierless streams count as tier 1)
     tier_frames: dict = field(default_factory=dict)
     tier_dlv: dict = field(default_factory=dict)
+    stream_seconds: float = 0.0  # simulated stream-seconds served
 
     def summary(self) -> str:
         return (f"fleet[{self.policy:>11s}] nodes={self.n_nodes:<3d} "
@@ -417,6 +419,7 @@ class FleetSimulator:
         tune_every_s: Optional[float] = None,
         slo: "bool | dict | AdmissionController | None" = None,
         slo_every_s: Optional[float] = None,
+        obs: "bool | dict | Obs | None" = None,
     ):
         if (scenario is None) == (replay is None):
             raise ValueError("pass exactly one of scenario or replay")
@@ -497,6 +500,49 @@ class FleetSimulator:
         #: re-derives identical queueing because the fleet clock totally
         #: orders transfer requests
         self.links = ContendedLinks(transfer) if transfer is not None else None
+        # ------------------------------------------------ observability
+        # one Obs bundle is shared fleet-wide: node simulators trace into
+        # the same tracer/registry (tagged by node id), the admission
+        # controller, links, and tuner publish into the same registry.
+        # Every hook below is observation-only behind an ``is not None``
+        # guard: obs-off runs take the identical code path as before, and
+        # obs-on runs consume no RNG — both stay bit-exact (tests assert).
+        self.obs = Obs.make(obs)
+        self._tracer = self.obs.tracer if self.obs is not None else None
+        self._metrics = self.obs.metrics if self.obs is not None else None
+        self._profiler = self.obs.profiler if self.obs is not None else None
+        if self._metrics is not None:
+            if self.links is not None:
+                self.links.metrics = self._metrics
+            if self.slo is not None:
+                self.slo.metrics = self._metrics
+            if hasattr(type(self.policy), "metrics"):
+                self.policy.metrics = self._metrics
+            self._m_place = self._metrics.counter(
+                "fleet_placements_total", "stream/stage placements",
+                ("node",))
+            self._m_migr = self._metrics.counter(
+                "fleet_migrations_total", "stream/stage migrations",
+                ("src", "dst"))
+            self._m_rej = self._metrics.counter(
+                "fleet_rejections_total", "streams refused admission",
+                ("tier",))
+            self._m_swap = self._metrics.counter(
+                "fleet_swaps_total", "SLO degradation-ladder moves",
+                ("direction",))
+            self._m_trig = self._metrics.counter(
+                "fleet_trigger_transfers_total",
+                "cascade triggers that crossed nodes")
+            self._m_streams = self._metrics.gauge(
+                "fleet_streams", "streams currently placed")
+        else:
+            self._m_place = self._m_migr = self._m_rej = None
+            self._m_swap = self._m_trig = self._m_streams = None
+        #: simulated stream-seconds served (placement -> departure/end),
+        #: accumulated regardless of obs so streams_per_wall_s is always
+        #: derivable; rejected streams contribute nothing
+        self.stream_seconds = 0.0
+        self._stream_t0: dict[int, float] = {}
         self.nodes: dict[int, FleetNode] = {}
         self.streams: dict[int, StreamView] = {}
         self.stream_node: dict[int, int] = {}   # sid -> hosting node id
@@ -636,7 +682,7 @@ class FleetSimulator:
         pend = node.sim.pending_completions
         node.sim.pending_completions = []
         pushes: list[tuple[float, int]] = []
-        for name, tc, origin in pend:
+        for name, tc, origin, parent_uid in pend:
             key = self._name_stage.get(name)
             if key is None:
                 continue
@@ -649,6 +695,7 @@ class FleetSimulator:
                 if dst is None or not self.nodes[dst].alive:
                     continue
                 t_inj = tc
+                wire_s = 0.0
                 if dst != node.node_id:
                     nbytes = sv.act_bytes_into(ck)
                     # shared-link realization: a trigger behind another
@@ -656,8 +703,16 @@ class FleetSimulator:
                     xfer_s, xfer_j = self.links.transfer(
                         node.node_id, dst, nbytes, tc)
                     t_inj = tc + xfer_s
+                    wire_s = xfer_s
                     self._charge(f"s{sid}." + sv.stage_base(ck), xfer_j)
                     self.trigger_transfers += 1
+                    if self._tracer is not None:
+                        self._tracer.span(
+                            "xfer", tc, t_inj, stream=sid, stage=ck,
+                            src=node.node_id, dst=dst, nbytes=nbytes,
+                            xfer_s=xfer_s, xfer_j=xfer_j)
+                    if self._metrics is not None:
+                        self._m_trig.inc()
                 # a freshly-migrated child serves nothing until its weight
                 # state lands; early triggers queue until residency (the
                 # deadline anchor stays at the parent completion, so the
@@ -665,7 +720,7 @@ class FleetSimulator:
                 t_inj = max(t_inj, self.stage_ready.get((sid, ck), t_inj))
                 self.nodes[dst].sim.inject_arrival(
                     self.stage_name[(sid, ck)], t_inj, deadline_anchor=tc,
-                    origin=origin)
+                    origin=origin, parent_uid=parent_uid, xfer_s=wire_s)
                 pushes.append((t_inj, dst))
         return pushes
 
@@ -697,6 +752,12 @@ class FleetSimulator:
         self.nodes[nid].place(sid, specs, names, t)
         self.stream_node[sid] = nid
         self.gen[sid] = gen
+        self._stream_t0.setdefault(sid, t)
+        if self._tracer is not None:
+            self._tracer.event("place", t, stream=sid, node=nid, gen=gen)
+        if self._metrics is not None:
+            self._m_place.inc(node=nid)
+            self._m_streams.set(len(self._stream_t0))
         # re-materialize the stream's SLO ladder level on the (possibly
         # new) host: every re-placement mints generation-fresh names, so
         # the variant pin must follow the stream.  No-op for streams the
@@ -726,6 +787,12 @@ class FleetSimulator:
                              self.transfer.transfer_j(sv.state_bytes(k)))
         self._place(sid, dst, t_place, gen)
         self.migrations += 1
+        if self._tracer is not None:
+            self._tracer.span("migrate", t, t_place, stream=sid, src=src,
+                              dst=dst, gen=gen, xfer_s=xfer_s,
+                              xfer_j=xfer_j)
+        if self._metrics is not None:
+            self._m_migr.inc(src=src, dst=dst)
         return xfer_s, xfer_j
 
     # ------------------------------------------------ stage-split placement
@@ -746,6 +813,13 @@ class FleetSimulator:
         self.stage_name[(sid, k)] = name
         self.stage_ready[(sid, k)] = t   # migrations pass t + transfer_s
         self._name_stage[name] = (sid, k)
+        self._stream_t0.setdefault(sid, t)
+        if self._tracer is not None:
+            self._tracer.event("place", t, stream=sid, stage=k, node=nid,
+                               gen=gen)
+        if self._metrics is not None:
+            self._m_place.inc(node=nid)
+            self._m_streams.set(len(self._stream_t0))
         # the SLO variant pin follows the stage across re-placements (see
         # _place); stage granularity, so sibling stages are untouched
         level = self.slo_level.get(sid)
@@ -769,6 +843,12 @@ class FleetSimulator:
         self._place_stage(sid, k, dst, t + xfer_s, gen)
         self.migrations += 1
         self.stage_migrations += 1
+        if self._tracer is not None:
+            self._tracer.span("migrate", t, t + xfer_s, stream=sid,
+                              stage=k, src=src, dst=dst, gen=gen,
+                              xfer_s=xfer_s, xfer_j=xfer_j)
+        if self._metrics is not None:
+            self._m_migr.inc(src=src, dst=dst)
         return xfer_s, xfer_j
 
     def _stage_score_full(self, sid: int, k: int, node: FleetNode,
@@ -838,9 +918,11 @@ class FleetSimulator:
         self.nodes[nid] = FleetNode(
             nid, system, self.scheduler_factory(ns),
             duration_s=self.duration_s, seed=ns,
-            window_s=self.window_s, at_t=t)
+            window_s=self.window_s, at_t=t, obs=self.obs)
         if self.recorder is not None:
             self.recorder.node_join(t, nid, system)
+        if self._tracer is not None:
+            self._tracer.event("node_join", t, node=nid, system=str(system))
         self._rearm_tuner()
 
     def _on_node_leave(self, t: float, ev: dict) -> None:
@@ -850,6 +932,8 @@ class FleetSimulator:
         if self.replay is None:
             self._migrate_all_off(node, t)
         node.alive = False
+        if self._tracer is not None:
+            self._tracer.event("node_leave", t, node=node.node_id)
         self._rearm_tuner()
 
     def _on_node_drain(self, t: float, ev: dict) -> None:
@@ -859,6 +943,8 @@ class FleetSimulator:
         node.draining = True
         if self.replay is None:
             self._migrate_all_off(node, t)
+        if self._tracer is not None:
+            self._tracer.event("node_drain", t, node=node.node_id)
         self._rearm_tuner()
 
     def _on_phase(self, t: float, ev: dict) -> None:
@@ -927,6 +1013,17 @@ class FleetSimulator:
                                      departures=self.departures,
                                      rejections=self.rejections,
                                      swaps=self.swaps)
+        if self._tracer is not None:
+            self._tracer.event("tune", t, uxcost=win.uxcost,
+                               frames=win.frames, dlv=win.dlv_rate,
+                               backlog_p90=win.backlog_p90)
+        if self._metrics is not None:
+            g = self._metrics.gauge(
+                "fleet_window_uxcost", "UXCost of the last tuner window")
+            g.set(win.uxcost)
+            self._metrics.gauge(
+                "fleet_window_dlv_rate",
+                "DLV rate of the last tuner window").set(win.dlv_rate)
         on_window = getattr(self.policy, "on_window", None)
         if on_window is None:
             return                      # telemetry-only tick
@@ -1012,6 +1109,16 @@ class FleetSimulator:
             self.promotions += 1
         self.slo_level[sid] = level
         self._apply_level(sid, t)
+        if self._tracer is not None:
+            self._tracer.event(
+                "swap", t, stream=sid, level=level, prev=prev,
+                pressure=(self.slo.last_pressure
+                          if self.slo is not None else None),
+                terms=(dict(self.slo.last_terms)
+                       if self.slo is not None else None))
+        if self._metrics is not None:
+            self._m_swap.inc(
+                direction="promote" if level < prev else "degrade")
         self._rearm_tuner()
 
     def _reject_stream(self, t: float, sid: int) -> None:
@@ -1023,11 +1130,20 @@ class FleetSimulator:
         self.rejected.add(sid)
         self._reject_open[sid] = (t, sv.entries[0].fps)
         self.rejections += 1
+        tier = self.stream_slo.get(sid, DEFAULT_SLO).tier
         if self.recorder is not None:
-            tier = self.stream_slo.get(sid, DEFAULT_SLO).tier
             self.recorder.reject(t, sid, tier,
                                  pressure=self.slo.last_pressure
                                  if self.slo is not None else None)
+        if self._tracer is not None:
+            self._tracer.event(
+                "reject", t, stream=sid, tier=tier,
+                pressure=(self.slo.last_pressure
+                          if self.slo is not None else None),
+                terms=(dict(self.slo.last_terms)
+                       if self.slo is not None else None))
+        if self._metrics is not None:
+            self._m_rej.inc(tier=tier)
 
     def _close_reject(self, sid: int, t: float) -> None:
         t0_fps = self._reject_open.pop(sid, None)
@@ -1057,6 +1173,12 @@ class FleetSimulator:
                                     rejections=self.rejections,
                                     swaps=self.swaps)
         self.slo.on_window(win, self._live_utils(cands))
+        if self._tracer is not None:
+            self._tracer.event("slo_tick", t,
+                               pressure=self.slo.last_pressure,
+                               terms=dict(self.slo.last_terms),
+                               streams=len(self.streams)
+                               - len(self.departed) - len(self.rejected))
         states = []
         for sid in sorted(self.streams):
             if sid in self.departed or sid in self.rejected:
@@ -1092,6 +1214,9 @@ class FleetSimulator:
         slo_cfg = ev.get("slo")
         if slo_cfg is not None:
             self.stream_slo[sid] = slo_from_config(slo_cfg)
+        if self._tracer is not None:
+            self._tracer.event("stream", t, stream=sid,
+                               stages=self.streams[sid].n_stages)
         if self.recorder is not None:
             self.recorder.stream(t, sid, ev["entries"], slo=slo_cfg)
         if self.replay is not None:
@@ -1106,6 +1231,11 @@ class FleetSimulator:
             self.slo.register(sid, slo, sv.head_period_s)
             verdict, level = self.slo.admit(
                 slo, self._ladder_depth(sid), self._live_utils(cands))
+            if self._tracer is not None:
+                self._tracer.event("admit", t, stream=sid, tier=slo.tier,
+                                   verdict=verdict, level=level,
+                                   pressure=self.slo.last_pressure,
+                                   terms=dict(self.slo.last_terms))
             if verdict == "reject":
                 self._reject_stream(t, sid)
                 return
@@ -1167,6 +1297,15 @@ class FleetSimulator:
         self.departed.add(sid)
         self.departures += 1
         self.jobs_purged += purged
+        # stream-seconds accounting is obs-independent: the benchmark's
+        # streams_per_wall_s throughput figure needs it with obs disabled
+        t0 = self._stream_t0.pop(sid, None)
+        if t0 is not None:
+            self.stream_seconds += max(0.0, min(t, self.duration_s) - t0)
+        if self._tracer is not None:
+            self._tracer.event("depart", t, stream=sid, purged=purged)
+        if self._m_streams is not None:
+            self._m_streams.set(len(self._stream_t0))
         if self.recorder is not None:
             self.recorder.depart(t, sid, purged)
         self._rearm_tuner()
@@ -1183,6 +1322,8 @@ class FleetSimulator:
                              "preceding depart (bad scenario or trace)")
         self.departed.discard(sid)
         self.rejoins += 1
+        if self._tracer is not None:
+            self._tracer.event("rejoin", t, stream=sid)
         if self.recorder is not None:
             self.recorder.rejoin(t, sid)
         self._rearm_tuner()
@@ -1200,6 +1341,11 @@ class FleetSimulator:
             self.slo.register(sid, slo, sv.head_period_s)
             verdict, level = self.slo.admit(
                 slo, self._ladder_depth(sid), self._live_utils(cands))
+            if self._tracer is not None:
+                self._tracer.event("admit", t, stream=sid, tier=slo.tier,
+                                   verdict=verdict, level=level,
+                                   pressure=self.slo.last_pressure,
+                                   terms=dict(self.slo.last_terms))
             if verdict == "reject":
                 self._reject_stream(t, sid)
                 return
@@ -1373,12 +1519,24 @@ class FleetSimulator:
             "swap": self._on_swap,
             "reject": self._on_reject,
         }
-        for t, kind, ev in self._event_stream():
-            if t > self.duration_s:
-                break
-            self._advance_all(t)
-            handlers[kind](t, ev)
-        self._advance_all(self.duration_s)
+        prof = self._profiler
+        if prof is not None:
+            prof.start_run()
+        try:
+            for t, kind, ev in self._event_stream():
+                if t > self.duration_s:
+                    break
+                self._advance_all(t)
+                if prof is None:
+                    handlers[kind](t, ev)
+                else:
+                    w0 = prof.t0()
+                    handlers[kind](t, ev)
+                    prof.add("fleet." + kind, w0)
+            self._advance_all(self.duration_s)
+        finally:
+            if prof is not None:
+                prof.stop_run()
         return self._finalize()
 
     def _finalize(self) -> FleetResult:
@@ -1460,6 +1618,27 @@ class FleetSimulator:
         tier_dlv = {tr: (tier_viol[tr] / tier_frames[tr]
                          if tier_frames[tr] else 0.0)
                     for tr in sorted(tier_frames)}
+        # streams still placed at the horizon served until duration_s
+        for sid in sorted(self._stream_t0):
+            self.stream_seconds += max(
+                0.0, self.duration_s - self._stream_t0[sid])
+        self._stream_t0.clear()
+        if self._tracer is not None:
+            self._tracer.finish(self.duration_s)
+        if self._metrics is not None:
+            ux = uxcost(fleet_stats)
+            self._metrics.gauge(
+                "fleet_uxcost", "fleet UXCost at run end").set(ux)
+            self._metrics.gauge(
+                "fleet_dlv_rate", "fleet DLV rate at run end").set(
+                overall_dlv_rate(fleet_stats))
+            tf = self._metrics.gauge(
+                "fleet_tier_frames_total", "frames per SLO tier", ("tier",))
+            td = self._metrics.gauge(
+                "fleet_tier_dlv_rate", "DLV rate per SLO tier", ("tier",))
+            for tr in sorted(tier_frames):
+                tf.set(tier_frames[tr], tier=tr)
+                td.set(tier_dlv[tr], tier=tr)
         if self.recorder is not None:
             self.trace = self.recorder.trace()
         return FleetResult(
@@ -1505,6 +1684,7 @@ class FleetSimulator:
             reject_frames=reject_frames,
             tier_frames=dict(sorted(tier_frames.items())),
             tier_dlv=tier_dlv,
+            stream_seconds=self.stream_seconds,
         )
 
 

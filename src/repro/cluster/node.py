@@ -65,14 +65,18 @@ class FleetNode:
 
     def __init__(self, node_id: int, system: str | tuple[Accelerator, ...],
                  scheduler: SchedulerBase, *, duration_s: float,
-                 seed: int, window_s: float = 0.5, at_t: float = 0.0):
+                 seed: int, window_s: float = 0.5, at_t: float = 0.0,
+                 obs=None):
         self.node_id = node_id
         self.system = system if isinstance(system, str) else "custom"
         self.accs_spec = SYSTEMS[system] if isinstance(system, str) else system
+        # the obs bundle is fleet-shared: every node's spans/metrics land
+        # in one tracer/registry, tagged with this node's id
         self.sim = Simulator(Scenario(name=f"node{node_id}", models=()),
                              self.accs_spec, scheduler,
                              duration_s=duration_s, seed=seed,
-                             window_s=window_s)
+                             window_s=window_s,
+                             obs=obs, obs_node=node_id)
         self.sim.start(at_t=at_t)
         self.join_t = at_t
         self.draining = False

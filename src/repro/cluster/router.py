@@ -319,6 +319,10 @@ class TunedScoreRouter(ScoreDrivenRouter):
     #: real window's placement count, it only guards the no-tune-ticks
     #: usage from unbounded growth
     MAX_DECISIONS = 4096
+    #: optional duck-typed metrics registry (repro.obs.MetricsRegistry),
+    #: attached by the fleet when observability is on; publishing is
+    #: observation only — nothing the tuner decides reads it back
+    metrics = None
 
     def __init__(self, radius: float = 0.5, r_min: float = 0.08,
                  shrink: float = 0.7, margin: float = 0.3) -> None:
@@ -489,6 +493,14 @@ class TunedScoreRouter(ScoreDrivenRouter):
             return None
         self._apply(self.probe.step_batch(
             self._hindsight_cost(decisions, window.node_dlv), rng))
+        if self.metrics is not None:
+            g = self.metrics.gauge(
+                "router_weight", "live router score weights", ("name",))
+            for name, w in zip(WEIGHT_NAMES, self.weights):
+                g.set(w, name=name)
+            self.metrics.counter(
+                "router_tune_commits_total",
+                "tuner windows that re-scored weights").inc()
         return self.weights
 
     def rearm(self) -> None:

@@ -209,6 +209,14 @@ class AdmissionController:
         self._pipe_latency_s = 0.0
         self._budgets: dict[int, float] = {}    # sid -> budget_s
         self.last_pressure = 0.0
+        #: term-by-term breakdown of the last pressure evaluation
+        #: (base/dlv/backlog/latency sum to last_pressure) — observability
+        #: reads this to attribute every degrade/reject decision
+        self.last_terms: dict[str, float] = {}
+        #: optional duck-typed metrics registry (repro.obs.MetricsRegistry),
+        #: attached by the fleet when observability is on; publishing is
+        #: observation only and never feeds back into the law
+        self.metrics = None
 
     # ------------------------------------------------------------- config
     def to_config(self) -> dict:
@@ -266,16 +274,37 @@ class AdmissionController:
     def pressure(self, utils: Sequence[float]) -> float:
         """The admission law's scalar P(t) — see the module docstring."""
         u = sum(utils) / len(utils) if utils else 0.0
-        p = max(u, self.estimator.predict())
-        p += self.w_dlv * self._dlv
+        forecast = self.estimator.predict()
+        p = max(u, forecast)
+        base = p
+        dlv_term = self.w_dlv * self._dlv
+        p += dlv_term
+        backlog_term = 0.0
         if self.backlog_norm_s > 0:
-            p += self.w_backlog * min(self._backlog_p90 / self.backlog_norm_s,
-                                      1.0)
+            backlog_term = self.w_backlog * min(
+                self._backlog_p90 / self.backlog_norm_s, 1.0)
+            p += backlog_term
+        latency_term = 0.0
         budget = self._mean_budget_s()
         if budget > 0 and self._pipe_latency_s > 0:
             over = max(self._pipe_latency_s / budget - 1.0, 0.0)
-            p += self.w_latency * min(over, 1.0)
+            latency_term = self.w_latency * min(over, 1.0)
+            p += latency_term
         self.last_pressure = p
+        # base + dlv + backlog + latency telescopes back to P exactly;
+        # util/forecast document which side the max() took
+        self.last_terms = {"base": base, "util": u, "forecast": forecast,
+                           "dlv": dlv_term, "backlog": backlog_term,
+                           "latency": latency_term}
+        if self.metrics is not None:
+            self.metrics.gauge(
+                "slo_pressure", "admission-law pressure P(t)").set(p)
+            gt = self.metrics.gauge(
+                "slo_pressure_term",
+                "pressure-law term contributions (sum to slo_pressure)",
+                ("term",))
+            for k in ("base", "dlv", "backlog", "latency"):
+                gt.set(self.last_terms[k], term=k)
         return p
 
     # ---------------------------------------------------------- admission

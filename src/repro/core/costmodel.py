@@ -381,6 +381,10 @@ class ContendedLinks:
         self.n_transfers = 0
         self.n_queued = 0           # transfers that waited on a busy wire
         self.queued_s = 0.0         # total queueing delay experienced
+        #: optional duck-typed metrics registry (repro.obs.MetricsRegistry),
+        #: attached by the fleet when observability is on; publishing is
+        #: observation only and never alters realized times
+        self.metrics = None
 
     def transfer(self, a: int, b: int, nbytes: float,
                  t: float) -> tuple[float, float]:
@@ -391,7 +395,10 @@ class ContendedLinks:
         if not m.enabled:
             return math.inf, m.transfer_j(nbytes)
         if not m.contended:
-            return m.transfer_s(nbytes), m.transfer_j(nbytes)
+            s, j = m.transfer_s(nbytes), m.transfer_j(nbytes)
+            if self.metrics is not None:
+                self._publish(a, b, nbytes, 0.0, s, j)
+            return s, j
         pair = (a, b) if a <= b else (b, a)
         start = max(t, self._busy_until.get(pair, t))
         service = float(nbytes) / m.wire_bandwidth_bytes_s
@@ -401,7 +408,28 @@ class ContendedLinks:
         if wait > 0.0:
             self.n_queued += 1
             self.queued_s += wait
-        return wait + m.base_latency_s + service, m.transfer_j(nbytes)
+        total = wait + m.base_latency_s + service
+        joules = m.transfer_j(nbytes)
+        if self.metrics is not None:
+            self._publish(a, b, nbytes, wait, total, joules)
+        return total, joules
+
+    def _publish(self, a: int, b: int, nbytes: float, wait_s: float,
+                 total_s: float, joules: float) -> None:
+        reg = self.metrics
+        lo, hi = (a, b) if a <= b else (b, a)
+        reg.counter("link_transfers_total",
+                    "transfers routed over shared inter-node links",
+                    ("a", "b")).inc(a=lo, b=hi)
+        reg.counter("link_bytes_total",
+                    "bytes moved over inter-node links").inc(nbytes)
+        if wait_s > 0.0:
+            reg.counter("link_wait_seconds_total",
+                        "queueing delay on busy wires").inc(wait_s)
+        reg.counter("link_energy_joules_total",
+                    "link energy charged to transfers").inc(joules)
+        reg.histogram("link_transfer_seconds",
+                      "realized wall seconds per transfer").observe(total_s)
 
 
 def model_state_bytes(graph: ModelGraph) -> float:

@@ -42,6 +42,9 @@ from .uxcost import (WindowStats, uxcost, overall_dlv_rate,
 
 ARRIVAL, DONE, WINDOW, PHASE, INJECT = 0, 1, 2, 3, 4
 
+#: profiler keys per event kind (indexed by the constants above)
+_EVENT_NAMES = ("arrival", "done", "window", "phase", "inject")
+
 #: arrival-process rng stream id, kept distinct from the path/cascade stream
 #: so trace replay (which consumes no arrival randomness) stays bit-exact.
 _ARRIVAL_STREAM = 0xA221
@@ -168,6 +171,8 @@ class Simulator:
         phase_script=None,
         record: bool = False,
         replay=None,
+        obs=None,
+        obs_node=None,
     ):
         self.scenario = scenario
         self.system_name = system if isinstance(system, str) else "custom"
@@ -256,8 +261,12 @@ class Simulator:
         #: drain and forward; both stay empty in single-node runs, so the
         #: engine's behavior and RNG consumption are untouched
         self.export_completions: set[str] = set()
-        #: (model name, completion time, pipeline origin) triples
-        self.pending_completions: list[tuple[str, float, float]] = []
+        #: (model name, completion time, pipeline origin, job uid) — uid is
+        #: the completing job's span uid when tracing, else None; the fleet
+        #: threads it through inject_arrival so cross-node child spans link
+        #: back to their parent for critical-path extraction
+        self.pending_completions: list[
+            tuple[str, float, float, Optional[str]]] = []
         self._arrival_procs = [self._materialize_arrival(s.arrival)
                                for s in self.specs]
         #: per-stream time origin: arrival processes run in stream-local
@@ -265,6 +274,39 @@ class Simulator:
         #: process — including any internal MMPP/diurnal clock — at t
         self._arrival_origin = [0.0] * len(self.specs)
         self._started = False
+
+        # ------------------------------------------------ observability
+        # ``obs`` is a duck-typed bundle (repro.obs.Obs): tracer / metrics
+        # / profiler attributes, each possibly None.  Core never imports
+        # repro.obs; every hook below guards with ``is not None``, so the
+        # disabled path costs one attribute check and consumes no RNG —
+        # traced runs stay bit-identical to bare ones.  ``obs_node`` tags
+        # spans/metrics with the hosting fleet node id.
+        self.obs = obs
+        self._tracer = getattr(obs, "tracer", None)
+        self._metrics = getattr(obs, "metrics", None)
+        self._profiler = getattr(obs, "profiler", None)
+        self._obs_node = obs_node
+        self._node_lbl = "-" if obs_node is None else str(obs_node)
+        self._span_of: dict[int, int] = {}     # jid -> open job span id
+        self._segs_of: dict[int, list] = {}    # jid -> [(t0, t1)] exec blocks
+        self._uid_of: dict[int, str] = {}      # jid -> cross-node job uid
+        if self._metrics is not None:
+            self._m_frames = self._metrics.counter(
+                "sim_frames_total", "completed frames (incl. drops)",
+                ("node", "model"))
+            self._m_violations = self._metrics.counter(
+                "sim_violations_total", "deadline-violated frames",
+                ("node", "model"))
+            self._m_drops = self._metrics.counter(
+                "sim_drops_total", "dropped/aborted frames",
+                ("node", "model"))
+            self._m_energy = self._metrics.counter(
+                "sim_energy_joules_total", "energy charged to frames",
+                ("node",))
+            self._m_latency = self._metrics.histogram(
+                "sim_frame_latency_seconds",
+                "frame arrival -> completion latency", ("node",))
 
     @staticmethod
     def _materialize_arrival(arrival):
@@ -442,6 +484,15 @@ class Simulator:
             j.done = True
             self.ready.pop(j.jid, None)
             self.jobs.pop(j.jid, None)
+            if self._tracer is not None:
+                self._uid_of.pop(j.jid, None)
+                span = self._span_of.pop(j.jid, None)
+                if span is not None:
+                    self._tracer.close(
+                        span, self.t, outcome="purged", violated=False,
+                        energy_j=j.energy_used, variant=j.graph_name,
+                        segs=[list(s)
+                              for s in self._segs_of.pop(j.jid, ())])
         return len(gone)
 
     def apply_action(self, action, t: float) -> None:
@@ -453,7 +504,9 @@ class Simulator:
 
     def inject_arrival(self, name: str, t: float,
                        deadline_anchor: Optional[float] = None,
-                       origin: Optional[float] = None) -> None:
+                       origin: Optional[float] = None,
+                       parent_uid: Optional[str] = None,
+                       xfer_s: float = 0.0) -> None:
         """Queue one externally-triggered frame of ``name`` at time ``t``
         (the fleet layer forwards cross-node cascade triggers through this).
         ``deadline_anchor`` backdates the deadline clock — a trigger that
@@ -461,13 +514,18 @@ class Simulator:
         anchors at the parent's completion time, so cross-node latency eats
         real slack.  ``origin`` carries the pipeline's head arrival time
         (defaults to ``t``) so tail completions can report head-to-tail
-        pipeline latency.  The injected frame schedules no follow-up
-        arrival."""
-        self._push(t, INJECT, (self._index_of(name), deadline_anchor, origin))
+        pipeline latency.  ``parent_uid``/``xfer_s`` are observability
+        pass-throughs (parent job span uid and wire seconds spent) — they
+        affect tracing only, never scheduling.  The injected frame
+        schedules no follow-up arrival."""
+        self._push(t, INJECT, (self._index_of(name), deadline_anchor, origin,
+                               parent_uid, xfer_s))
 
     # --------------------------------------------------------------- jobs
     def _create_job(self, model_idx: int, t: float,
-                    origin: Optional[float] = None) -> Job:
+                    origin: Optional[float] = None,
+                    parent_uid: Optional[str] = None,
+                    xfer_s: float = 0.0) -> Job:
         spec = self.specs[model_idx]
         graph = spec.model
         table = self.tables[graph.name]
@@ -503,6 +561,16 @@ class Simulator:
             job.variant_locked = True
             self.variant_counts[override.name] = \
                 self.variant_counts.get(override.name, 0) + 1
+        if self._tracer is not None:
+            uid = (f"n{self._obs_node}:j{job.jid}"
+                   if self._obs_node is not None else f"j{job.jid}")
+            self._uid_of[job.jid] = uid
+            self._segs_of[job.jid] = []
+            self._span_of[job.jid] = self._tracer.open(
+                "job", t, uid=uid, model=job.base_name,
+                node=self._obs_node, origin=job.origin,
+                deadline=job.deadline, parent=parent_uid,
+                xfer_s=xfer_s, tail=job.is_tail)
         self.scheduler.on_job_created(self, job)
         return job
 
@@ -554,6 +622,26 @@ class Simulator:
         hist.append(dropped)
         if len(hist) > self.drop_window:
             hist.pop(0)
+        uid = None
+        if self._tracer is not None:
+            uid = self._uid_of.pop(job.jid, None)
+            span = self._span_of.pop(job.jid, None)
+            if span is not None:
+                self._tracer.close(
+                    span, t, outcome="dropped" if dropped else "done",
+                    violated=bool(violated), energy_j=job.energy_used,
+                    variant=job.graph_name,
+                    segs=[list(s) for s in self._segs_of.pop(job.jid, ())])
+        if self._metrics is not None:
+            self._m_frames.inc(node=self._node_lbl, model=job.base_name)
+            if violated:
+                self._m_violations.inc(node=self._node_lbl,
+                                       model=job.base_name)
+            if dropped:
+                self._m_drops.inc(node=self._node_lbl, model=job.base_name)
+            if job.energy_used > 0.0:
+                self._m_energy.inc(job.energy_used, node=self._node_lbl)
+            self._m_latency.observe(t - job.arrival, node=self._node_lbl)
         if not dropped:
             # a completed tail (no dependents, local or remote) closes its
             # pipeline: record head-arrival -> tail-completion latency
@@ -565,12 +653,13 @@ class Simulator:
             for dep_idx in self._dependents_of(job.base_name):
                 spec = self.specs[dep_idx]
                 if self.rng.random() < spec.trigger_prob:
-                    self._create_job(dep_idx, t, origin=job.origin)
+                    self._create_job(dep_idx, t, origin=job.origin,
+                                     parent_uid=uid)
             # remote dependents (pipeline stages on other fleet nodes):
             # report the completion; the fleet clock drains and forwards
             if job.base_name in self.export_completions:
                 self.pending_completions.append((job.base_name, t,
-                                                 job.origin))
+                                                 job.origin, uid))
 
     def deadline_of(self, job: Job) -> float:
         return job.deadline
@@ -618,6 +707,12 @@ class Simulator:
         job.running = True
         job._pending_n = n  # type: ignore[attr-defined]
         job._pending_done_at = t + dur  # type: ignore[attr-defined]
+        if self._tracer is not None:
+            # reserve >= dur, so completion records done_at == t + dur:
+            # this block is the job's exact execution interval
+            segs = self._segs_of.get(job.jid)
+            if segs is not None:
+                segs.append((t, t + dur))
         self.ready.pop(job.jid, None)
         acc.busy = True
         acc.cur_job = job
@@ -693,8 +788,17 @@ class Simulator:
             return False
         t, _, kind, arg = heapq.heappop(self.events)
         self.t = t
-        self._process_event(t, kind, arg)
-        self._drain_schedule(t)
+        prof = self._profiler
+        if prof is None:
+            self._process_event(t, kind, arg)
+            self._drain_schedule(t)
+        else:
+            w0 = prof.t0()
+            self._process_event(t, kind, arg)
+            prof.add("node." + _EVENT_NAMES[kind], w0)
+            w0 = prof.t0()
+            self._drain_schedule(t)
+            prof.add("node.drain", w0)
         return True
 
     def step_until(self, t_limit: float) -> None:
@@ -715,9 +819,10 @@ class Simulator:
                 self._schedule_stream_arrival(idx, after_t=t)
             # an inactive (left) stream dies at its pending arrival
         elif kind == INJECT:
-            idx, anchor, origin = arg  # type: ignore[misc]
+            idx, anchor, origin, parent_uid, xfer_s = arg  # type: ignore[misc]
             if self.active[idx]:
-                job = self._create_job(idx, t, origin=origin)
+                job = self._create_job(idx, t, origin=origin,
+                                       parent_uid=parent_uid, xfer_s=xfer_s)
                 if anchor is not None:
                     name = self.specs[idx].model.name
                     job.deadline = anchor + self.deadlines[name]
@@ -745,6 +850,20 @@ class Simulator:
         self.window_stats = WindowStats()  # idempotent wrt. a second call
         if self.recorder is not None:
             self.trace = self.recorder.trace()
+        if self._tracer is not None and self._span_of:
+            # jobs still queued/running at the horizon: close their spans
+            # so the emitted JSONL is complete (outcome marks them)
+            for jid in sorted(self._span_of):
+                j = self.jobs.get(jid)
+                self._tracer.close(
+                    self._span_of[jid], self.t, outcome="unfinished",
+                    violated=False,
+                    energy_j=j.energy_used if j is not None else 0.0,
+                    variant=j.graph_name if j is not None else None,
+                    segs=[list(s) for s in self._segs_of.get(jid, ())])
+            self._span_of.clear()
+            self._segs_of.clear()
+            self._uid_of.clear()
         util = [a.busy_time / max(self.t, 1e-9) for a in self.accs]
         return SimResult(
             scenario=self.scenario.name,
