@@ -54,6 +54,16 @@ Every non-``--update`` run also appends its extracted ratios (stamped
 with the git SHA + dirty flag) to ``benchmarks/baselines/trajectory.json``
 — the BENCH trend series the nightly CI lane uploads; disable with
 ``--no-trajectory``.
+
+Wall-clock throughput (``streams_per_wall_s`` from the CI smoke sweep,
+``scale_streams_per_wall_s`` from the nightly 256-node/10k-stream arm)
+is machine-dependent, so it never enters the ratio baseline.  It is
+trajectory-tracked on every run and, on the nightly lane only
+(``--gate-throughput``), gated one-sided against the absolute
+``throughput_floors`` committed in the baseline — conservative floors
+several-fold below the reference machine, catching pathological
+slowdowns (a disabled fast path, an accidental O(N^2) rescan) without
+flaking on runner noise.
 """
 from __future__ import annotations
 
@@ -87,10 +97,22 @@ METRICS = {
     "streams_per_wall_s": ("ci_fleet_sweep.json", ("streams_per_wall_s",)),
 }
 
-#: metrics recorded in the trajectory trend series but never gated and
-#: never written to the baseline: wall-clock throughput depends on the
-#: machine running CI, so only its *trend on one machine* is meaningful
-TRAJECTORY_ONLY = {"streams_per_wall_s"}
+#: metrics whose artifact may legitimately be absent (produced only by
+#: the nightly lane's extra arms); skipped with a note when missing
+OPTIONAL_METRICS = {
+    "scale_streams_per_wall_s": ("fleet_scale.json",
+                                 ("streams_per_wall_s",)),
+}
+
+#: metrics recorded in the trajectory trend series but never part of the
+#: ratio baseline: wall-clock throughput depends on the machine running
+#: CI, so its *trend on one machine* is what matters.  The nightly lane
+#: additionally gates these one-sided against the absolute floors
+#: committed in the baseline's ``throughput_floors`` section (pass
+#: ``--gate-throughput``); the floors are conservative — several-fold
+#: below the reference machine's typical numbers — so they only trip on
+#: pathological slowdowns, not runner noise.
+TRAJECTORY_ONLY = {"streams_per_wall_s", "scale_streams_per_wall_s"}
 
 
 def extract(artifacts_dir: str) -> dict[str, float]:
@@ -113,19 +135,57 @@ def extract(artifacts_dir: str) -> dict[str, float]:
                          "artifact predates this metric; re-run the sweep")
             node = node[key]
         out[name] = float(node)
+    for name, (fname, path) in OPTIONAL_METRICS.items():
+        fpath = os.path.join(artifacts_dir, fname)
+        try:
+            with open(fpath) as f:
+                node = json.load(f)
+        except FileNotFoundError:
+            print(f"check_bench: note   {name} skipped ({fname} absent — "
+                  "produced only by the nightly scale arm)")
+            continue
+        for key in path:
+            if key not in node:
+                sys.exit(f"check_bench: {fname} has no {'.'.join(path)} — "
+                         "artifact predates this metric; re-run the sweep")
+            node = node[key]
+        out[name] = float(node)
     return out
 
 
-def check(values: dict[str, float], baseline: dict) -> int:
+def check(values: dict[str, float], baseline: dict,
+          gate_throughput: bool = False) -> int:
     """Compare values against the baseline; returns the exit code."""
     base = baseline["metrics"]
     tol = baseline["tolerance"]
     two_sided = set(baseline.get("two_sided", ()))
+    floors = baseline.get("throughput_floors", {})
     failures = []
+    if gate_throughput:
+        for name in sorted(floors):
+            if name not in values:
+                failures.append((name, float("nan"), floors[name],
+                                 floors[name]))
+                print(f"check_bench: FAIL   {name} missing — the nightly "
+                      "lane gates it; run the scale arm "
+                      "(python -m benchmarks.fleet_sweep --scale) first")
     for name, value in sorted(values.items()):
         if name in TRAJECTORY_ONLY:
-            print(f"check_bench: trend  {name} = {value:.4f} "
-                  "(trajectory-only; machine-dependent, never gated)")
+            if gate_throughput and name in floors:
+                floor = float(floors[name])
+                if value < floor:
+                    failures.append((name, value, floor, floor))
+                    print(f"check_bench: FAIL   {name} = {value:.4f} < "
+                          f"absolute floor {floor:.4f} (one-sided "
+                          "throughput gate; conservative — this is a "
+                          "several-fold slowdown, not noise)")
+                else:
+                    print(f"check_bench: ok     {name} = {value:.4f} "
+                          f"(absolute floor {floor:.4f}, one-sided)")
+            else:
+                print(f"check_bench: trend  {name} = {value:.4f} "
+                      "(trajectory-only; machine-dependent, ungated "
+                      "outside the nightly --gate-throughput lane)")
             continue
         if name not in base:
             print(f"check_bench: NEW    {name} = {value:.4f} "
@@ -218,6 +278,9 @@ def update(values: dict[str, float], baseline_path: str,
         "two_sided": (old or {}).get("two_sided",
                                      ["contended_over_uncontended",
                                       "tier0_dlv_overload"]),
+        # absolute one-sided floors for the nightly --gate-throughput
+        # lane; hand-committed (conservative), never refreshed from a run
+        "throughput_floors": (old or {}).get("throughput_floors", {}),
     }
     os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
     with open(baseline_path, "w") as f:
@@ -238,6 +301,10 @@ def main(argv=None) -> int:
                     help="BENCH trend-series json to append each run to")
     ap.add_argument("--no-trajectory", action="store_true",
                     help="skip the trajectory append")
+    ap.add_argument("--gate-throughput", action="store_true",
+                    help="additionally enforce the baseline's absolute "
+                         "throughput_floors (nightly lane; requires the "
+                         "scale-arm artifact)")
     args = ap.parse_args(argv)
     values = extract(args.artifacts)
     old = None
@@ -253,7 +320,7 @@ def main(argv=None) -> int:
     if old is None:
         sys.exit(f"check_bench: no baseline at {args.baseline} — commit one "
                  "via scripts/check_bench.py --update")
-    return check(values, old)
+    return check(values, old, gate_throughput=args.gate_throughput)
 
 
 if __name__ == "__main__":

@@ -97,6 +97,19 @@ docs_refs() {
     python scripts/check_docs.py docs
 }
 
+vector_smoke() {
+    # fast-lane vectorization gate: the batched score/dispatch/clock fast
+    # paths must stay bit-identical to their scalar oracles (differential
+    # suite), replay the golden corpus digest-exact, keep the peek-heap
+    # invariant across membership churn, and clear the committed
+    # throughput smoke floor.  Redundant with the full `tests` stage by
+    # design: vectorization drift fails here with a named stage instead
+    # of somewhere inside the suite run.
+    python -m pytest -q -p no:cacheprovider \
+        tests/test_vectorized_equiv.py tests/test_golden_traces.py \
+        tests/test_peek_heap.py tests/test_perf_smoke.py
+}
+
 slo_smoke() {
     # fast-lane SLO gate: a small overloaded tiered fleet must trigger the
     # admission controller (swaps and/or rejections) and replay bit-exactly
@@ -278,11 +291,19 @@ EOF
 }
 
 bench_check() {
-    python scripts/check_bench.py --artifacts "$ARTIFACTS"
+    # the nightly lane sets CI_GATE_THROUGHPUT=1 (after running the scale
+    # arm) to additionally enforce the baseline's absolute throughput
+    # floors; other lanes keep wall-clock throughput trajectory-only
+    local extra=()
+    if [ "${CI_GATE_THROUGHPUT:-0}" = "1" ]; then
+        extra+=(--gate-throughput)
+    fi
+    python scripts/check_bench.py --artifacts "$ARTIFACTS" "${extra[@]}"
 }
 
 # ------------------------------------------------------------------ plan
 stage lint           lint
+stage vector_smoke   vector_smoke
 stage tests          tests
 stage docs_refs      docs_refs
 stage slo_smoke      slo_smoke

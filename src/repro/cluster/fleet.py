@@ -544,6 +544,23 @@ class FleetSimulator:
         self.stream_seconds = 0.0
         self._stream_t0: dict[int, float] = {}
         self.nodes: dict[int, FleetNode] = {}
+        #: persistent lazy (peek_t, node_id) min-heap driving the fleet
+        #: clock: only nodes with events actually due are advanced, instead
+        #: of rescanning every node at every fleet event.  Entries are
+        #: lazily stale (a popped entry is re-validated against the node's
+        #: true peek); the invariant is one-sided — the heap always holds
+        #: an entry at or before each live node's true next-event time, so
+        #: every operation that can schedule an *earlier* event on a node
+        #: must call :meth:`_touch` (operations that only delay or remove
+        #: events need not: early entries refresh themselves on pop)
+        self._peek_heap: list[tuple[float, int]] = []
+        #: node id -> time of its earliest live heap entry.  Entries a
+        #: newer, earlier push superseded are discarded on pop instead of
+        #: recycling forever, so the heap stays O(nodes), not O(touches)
+        self._peek_at: dict[int, float] = {}
+        #: node ids stepped by the current interleave pass (split mode),
+        #: pending their recent-DLV refresh
+        self._stepped: set[int] = set()
         self.streams: dict[int, StreamView] = {}
         self.stream_node: dict[int, int] = {}   # sid -> hosting node id
         self.gen: dict[int, int] = {}           # sid -> placement generation
@@ -621,25 +638,128 @@ class FleetSimulator:
             self.recorder = FleetTraceRecorder(meta)
 
     # ---------------------------------------------------------- plumbing
+    #: fleet-clock toggle: True drives advancement from the persistent
+    #: lazy peek heap (only nodes with due events pay anything per fleet
+    #: event); False rescans every node per event — the original O(N)
+    #: path, kept alive as the equivalence-test oracle.  Both paths step
+    #: each node's events in the identical (event time, node id) order,
+    #: and skipping a node with nothing due is a pure no-op, so the flag
+    #: never changes results.
+    lazy_peek = True
+
     def _advance_all(self, t: float) -> None:
-        """Advance every live node to fleet time ``t``.  Whole-stream mode
-        advances node by node (cascades are node-local, so cross-node order
-        is irrelevant — and this is the bit-exact PR-2 path).  Stage-split
-        mode interleaves nodes in global event order so cross-node triggers
-        inject causally."""
+        """Advance every live node with due events to fleet time ``t``.
+        Whole-stream mode advances node by node (cascades are node-local,
+        so cross-node order is irrelevant — and this is the bit-exact PR-2
+        path).  Stage-split mode interleaves nodes in global event order
+        so cross-node triggers inject causally."""
+        if not self.lazy_peek:
+            self._advance_all_scan(t)
+            return
         if self.split:
             self._interleave_to(t)
+            # only stepped nodes can have moved their frame counters; the
+            # scan path's post-sweep touched every node, but a no-step
+            # refresh never changes recent_dlv or telemetry
+            for nid in self._stepped:
+                node = self.nodes[nid]
+                if node.alive:
+                    node._update_recent_dlv()
+                    node._invalidate_telemetry()
+            self._stepped.clear()
+            return
+        heap = self._peek_heap
+        while heap and heap[0][0] <= t:
+            pt, nid = heapq.heappop(heap)
+            if self._peek_at.get(nid) != pt:
+                continue            # superseded by an earlier push
+            del self._peek_at[nid]
+            node = self.nodes.get(nid)
+            if node is None or not node.alive:
+                continue            # departed member; entry is garbage
+            cur = node.sim.peek_t()
+            if cur is None:
+                continue
+            if cur > self._node_lim(node, t):
+                if cur > t:
+                    # nothing due yet — keep tracking the future event
+                    self._push_peek(nid, cur)
+                # else: past the node's own horizon, unreachable — drop
+                continue
+            node.advance_to(t)
+            nxt = node.sim.peek_t()
+            if nxt is not None:
+                self._push_peek(nid, nxt)
+
+    def _advance_all_scan(self, t: float) -> None:
+        """Reference fleet clock: full rescan of every node per event."""
+        if self.split:
+            self._interleave_to_scan(t)
         for nid in sorted(self.nodes):
             self.nodes[nid].advance_to(t)
+
+    def _push_peek(self, nid: int, pt: float) -> None:
+        cur = self._peek_at.get(nid)
+        if cur is not None and cur <= pt:
+            return                  # an entry at/before pt already lives
+        self._peek_at[nid] = pt
+        heapq.heappush(self._peek_heap, (pt, nid))
+
+    def _touch(self, nid: int) -> None:
+        """Re-arm the peek heap after an operation that may have scheduled
+        an earlier event on node ``nid``'s simulator (placement, phase
+        action, cascade injection, join)."""
+        node = self.nodes.get(nid)
+        if node is None or not node.alive:
+            return
+        pt = node.sim.peek_t()
+        if pt is not None:
+            self._push_peek(nid, pt)
 
     def _node_lim(self, node: FleetNode, t: float) -> float:
         return min(t, node.sim.duration_s)
 
     def _interleave_to(self, t: float) -> None:
         """Step all live nodes' simulators in global event-time order
-        (ties: lowest node id first), draining exported cascade completions
-        after every step and injecting the resulting triggers — possibly
-        into other nodes, whose heap entries are refreshed lazily."""
+        (ties: lowest node id first) off the persistent peek heap, draining
+        exported cascade completions after every step and injecting the
+        resulting triggers — possibly into other nodes, whose heap entries
+        are refreshed lazily.  A node is only stepped when its popped entry
+        matches its true peek, so the realized step order is the same
+        (time, node id) sequence the scan-based oracle produces."""
+        heap = self._peek_heap
+        stepped = self._stepped
+        while heap and heap[0][0] <= t:
+            pt, nid = heapq.heappop(heap)
+            if self._peek_at.get(nid) != pt:
+                continue            # superseded by an earlier push
+            del self._peek_at[nid]
+            node = self.nodes.get(nid)
+            if node is None or not node.alive:
+                continue
+            cur = node.sim.peek_t()
+            if cur is None:
+                continue
+            if cur > self._node_lim(node, t):
+                if cur > t:
+                    self._push_peek(nid, cur)
+                continue            # stale entry; node has nothing due
+            if cur != pt:
+                self._push_peek(nid, cur)
+                continue            # refresh stale entry, keep ordering
+            node.sim.step()
+            stepped.add(nid)
+            for t_inj, dst in self._drain_triggers(node):
+                dnode = self.nodes[dst]
+                if dst != nid and dnode.alive:
+                    self._push_peek(dst, t_inj)
+            nxt = node.sim.peek_t()
+            if nxt is not None:
+                self._push_peek(nid, nxt)
+
+    def _interleave_to_scan(self, t: float) -> None:
+        """Reference interleave: rebuild a fresh heap from a full node scan
+        (the pre-lazy-peek path, kept as the equivalence-test oracle)."""
         heap: list[tuple[float, int]] = []
         for nid in sorted(self.nodes):
             node = self.nodes[nid]
@@ -765,6 +885,7 @@ class FleetSimulator:
         level = self.slo_level.get(sid)
         if level is not None:
             self.nodes[nid].swap_level(names, level, t)
+        self._touch(nid)
 
     def _migrate(self, sid: int, src: int, dst: int, t: float,
                  gen: int) -> tuple[Optional[float], Optional[float]]:
@@ -825,6 +946,7 @@ class FleetSimulator:
         level = self.slo_level.get(sid)
         if level is not None:
             node.swap_level([name], level, t)
+        self._touch(nid)
 
     def _migrate_stage(self, sid: int, k: int, src: int, dst: int, t: float,
                        gen: int) -> tuple[float, float]:
@@ -921,6 +1043,7 @@ class FleetSimulator:
             window_s=self.window_s, at_t=t, obs=self.obs)
         if self.recorder is not None:
             self.recorder.node_join(t, nid, system)
+        self._touch(nid)
         if self._tracer is not None:
             self._tracer.event("node_join", t, node=nid, system=str(system))
         self._rearm_tuner()
@@ -941,6 +1064,7 @@ class FleetSimulator:
         if self.recorder is not None:
             self.recorder.node_drain(t, node.node_id)
         node.draining = True
+        node._invalidate_telemetry()
         if self.replay is None:
             self._migrate_all_off(node, t)
         if self._tracer is not None:
@@ -990,6 +1114,7 @@ class FleetSimulator:
                         dict(action_cfg, models=by_node[nid])), t)
                 node._recompute_offered()
                 node.retrigger_probe()
+                self._touch(nid)
             if action_cfg["kind"] == "scale_fps":
                 # keep the stream's own definition in sync so later
                 # migrations re-place at the shifted rate
@@ -1410,9 +1535,7 @@ class FleetSimulator:
             if not self.nodes[cur].alive:
                 continue
             sv = self.streams[sid]
-            best_iso = min(sv.cost_on(n).iso_s for n in cands)
-            scores = {n.node_id: self.policy.score(sv, n, best_iso)
-                      for n in cands}
+            scores = self._score_map(sv, cands)
             best = min(scores, key=lambda nid: (scores[nid], nid))
             cur_score = scores.get(cur)
             if (best != cur and cur_score is not None
@@ -1422,6 +1545,18 @@ class FleetSimulator:
                 if self.recorder is not None:
                     self.recorder.migrate(t, sid, cur, best, gen,
                                           xfer_s=xfer_s, xfer_j=xfer_j)
+
+    def _score_map(self, sv, cands: list[FleetNode]) -> dict[int, float]:
+        """Whole-stream rebalance scores per candidate node — batched
+        through :meth:`ScoreDrivenRouter.score_all` when the policy runs
+        vectorized, per-node :meth:`~ScoreDrivenRouter.score` calls
+        otherwise; both produce bit-identical values."""
+        if getattr(self.policy, "vectorized", False):
+            svec = self.policy.score_all(sv, cands)
+            return {n.node_id: float(s) for n, s in zip(cands, svec)}
+        best_iso = min(sv.cost_on(n).iso_s for n in cands)
+        return {n.node_id: self.policy.score(sv, n, best_iso)
+                for n in cands}
 
     def _rebalance_streams_whole(self, t: float,
                                  cands: list[FleetNode]) -> None:
@@ -1436,9 +1571,7 @@ class FleetSimulator:
             if not self.nodes[cur].alive or self.nodes[cur].draining:
                 continue
             sv = self.streams[sid]
-            best_iso = min(sv.cost_on(n).iso_s for n in cands)
-            scores = {n.node_id: self.policy.score(sv, n, best_iso)
-                      for n in cands}
+            scores = self._score_map(sv, cands)
             best = min(scores, key=lambda nid: (scores[nid], nid))
             cur_score = scores.get(cur)
             if (best == cur or cur_score is None

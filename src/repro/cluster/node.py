@@ -101,12 +101,22 @@ class FleetNode:
         #: so a node is not penalized forever for early violations)
         self.recent_dlv = 0.0
         self._dlv_snapshot = (0, 0)          # (frames, violated) seen so far
+        #: memoized telemetry() snapshot.  Telemetry walks every live job;
+        #: the router reads it once per node per placement and once per
+        #: candidate per rebalanced stream — identical values within one
+        #: fleet event, since node state only changes through the
+        #: invalidation points below (advance/place/evict/swap/phase)
+        self._tel_cache: "Optional[NodeTelemetry]" = None
+
+    def _invalidate_telemetry(self) -> None:
+        self._tel_cache = None
 
     # ------------------------------------------------------------- clock
     def advance_to(self, t: float) -> None:
         if self.alive:
             self.sim.step_until(t)
             self._update_recent_dlv()
+            self._tel_cache = None
 
     def _update_recent_dlv(self) -> None:
         frames = viol = 0
@@ -129,6 +139,7 @@ class FleetNode:
         overrides the offered-load weight per spec (the fleet passes the
         stage's trigger probability for standalone cascade stages, keeping
         load telemetry consistent across placement granularities)."""
+        self._tel_cache = None
         for spec in specs:
             self.sim.join_model(spec, t)
         self.placements[key] = list(names)
@@ -175,6 +186,7 @@ class FleetNode:
         self.retrigger_probe()
 
     def _recompute_offered(self) -> None:
+        self._tel_cache = None
         live = {n for names in self.placements.values() for n in names}
         total = 0.0
         for i, spec in enumerate(self.sim.specs):
@@ -197,8 +209,7 @@ class FleetNode:
 
     # -------------------------------------------------------- estimates
     def _iso_best(self, graph: ModelGraph) -> float:
-        table = build_cost_table(graph, self.accs_spec)
-        return float(table.lat.sum(axis=1).min())
+        return build_cost_table(graph, self.accs_spec).iso_best_s
 
     def stream_cost(self, graphs: list[tuple[ModelGraph, float, float]],
                     head_period_s: float) -> StreamCost:
@@ -216,6 +227,8 @@ class FleetNode:
 
     # -------------------------------------------------------- telemetry
     def telemetry(self) -> NodeTelemetry:
+        if self._tel_cache is not None:
+            return self._tel_cache
         sim = self.sim
         live = [j for j in sim.jobs.values() if not j.done]
         backlog = sum(j.togo() for j in live)
@@ -226,7 +239,7 @@ class FleetNode:
             wux = 0.0
         span = max(sim.t - self.join_t, 1e-9)   # busy fraction since join
         util = sum(a.busy_time for a in sim.accs) / (n_accs * span)
-        return NodeTelemetry(
+        self._tel_cache = tel = NodeTelemetry(
             node_id=self.node_id,
             system=self.system,
             n_accs=n_accs,
@@ -240,6 +253,7 @@ class FleetNode:
             drops=sim.drops,
             draining=self.draining,
         )
+        return tel
 
 
 def _spec_loads(specs: list) -> list[tuple[ModelGraph, float, float]]:

@@ -53,6 +53,47 @@ def argmin_node(nodes: Sequence[FleetNode], score_fn) -> int:
     return best_id
 
 
+class _BatchInputs:
+    """Per-node cost/telemetry columns for one placement decision, gathered
+    in candidate order.  One Python pass over the nodes fills the columns;
+    everything downstream (terms, scores, argmin) is a handful of (N,)
+    numpy ops regardless of fleet size.  Values are the exact same floats
+    the scalar path reads — ``cost_on``/``telemetry`` are memoized, so the
+    gather is dict lookups, not recomputation."""
+
+    __slots__ = ("ids", "iso", "offered", "urgency", "offered_util",
+                 "n_accs", "backlog", "dlv")
+
+    def __init__(self, stream, nodes: Sequence[FleetNode],
+                 stage: Optional[int] = None):
+        n = len(nodes)
+        self.ids = np.empty(n, dtype=np.int64)
+        self.iso = np.empty(n)
+        self.offered = np.empty(n)
+        self.urgency = np.empty(n)
+        self.offered_util = np.empty(n)
+        self.n_accs = np.empty(n)
+        self.backlog = np.empty(n)
+        self.dlv = np.empty(n)
+        for i, node in enumerate(nodes):
+            cost = (stream.cost_on(node) if stage is None
+                    else stream.stage_cost_on(node, stage))
+            tel = node.telemetry()
+            self.ids[i] = node.node_id
+            self.iso[i] = cost.iso_s
+            self.offered[i] = cost.offered_s
+            self.urgency[i] = cost.urgency
+            self.offered_util[i] = tel.offered_util
+            self.n_accs[i] = tel.n_accs
+            self.backlog[i] = tel.backlog_s
+            self.dlv[i] = tel.window_dlv
+
+    def best_iso(self) -> float:
+        """``min`` over the iso column — bit-equal to the scalar genexpr
+        ``min(stream.cost_on(n).iso_s for n in nodes)`` (min is exact)."""
+        return float(self.iso.min())
+
+
 class RouterPolicy:
     """Placement policy plug-in: pick a node id for a candidate stream."""
 
@@ -134,6 +175,16 @@ STATIC_WEIGHTS = (1.0, W_BACKLOG, W_PREF, W_UX, W_XFER)
 class ScoreDrivenRouter(RouterPolicy):
     name = "score"
     splits_stages = True
+    #: batched-scoring toggle.  True evaluates all candidate nodes as (N,)
+    #: numpy column ops (one gather pass + one argmin); False runs the
+    #: original per-node scalar loops, kept alive as the bit-identity
+    #: oracle for tests/test_vectorized_equiv.py.  The two paths replicate
+    #: each other's float expressions operation-for-operation (the score
+    #: is an explicit elementwise weight chain, never a dot product, and
+    #: ``np.argmin``'s first-occurrence rule equals the scalar
+    #: ``(score, node_id)`` tie-break because candidates arrive sorted by
+    #: node id), so flipping the flag never changes a placement.
+    vectorized = True
 
     def __init__(self) -> None:
         (self.w_load, self.w_backlog, self.w_pref, self.w_ux,
@@ -189,7 +240,51 @@ class ScoreDrivenRouter(RouterPolicy):
         return (self.w_load * t[0] + self.w_backlog * t[1]
                 + self.w_pref * t[2] + self.w_ux * t[3])
 
+    # ------------------------------------------------------ batched scoring
+    def batch_terms(self, b: _BatchInputs, best_iso: float) -> tuple:
+        """The :meth:`score_terms` columns for every candidate at once:
+        five (N,) arrays in ``WEIGHT_NAMES`` order plus the marginal
+        offered load per node.  Each column replicates the scalar
+        expression elementwise — same divisions, same ``min`` clamps
+        (``np.minimum``), same subtraction order — so row ``i`` is
+        bit-equal to ``score_terms(cost_on(nodes[i]), nodes[i], best_iso)``.
+        """
+        marginal = b.offered / b.n_accs
+        t_load = b.offered_util + marginal
+        t_backlog = b.backlog / b.n_accs
+        pref_penalty = b.iso / max(best_iso, 1e-12) - 1.0
+        t_pref = pref_penalty * np.minimum(b.urgency, URGENCY_CAP)
+        t_ux = np.minimum(b.dlv, 1.0)
+        t_xfer = np.zeros(len(b.ids))
+        return t_load, t_backlog, t_pref, t_ux, t_xfer, marginal
+
+    def batch_scores(self, b: _BatchInputs, best_iso: float) -> np.ndarray:
+        """Scores of one stream (or stage) on every candidate node as an
+        (N,) array.  The weight chain is the same explicit elementwise
+        expression as :meth:`_score` — deliberately NOT ``terms @ w``,
+        whose dot-product reduction may reorder the additions."""
+        t_load, t_backlog, t_pref, t_ux, _, _ = self.batch_terms(b, best_iso)
+        return (self.w_load * t_load + self.w_backlog * t_backlog
+                + self.w_pref * t_pref + self.w_ux * t_ux)
+
+    def score_all(self, stream, nodes: Sequence[FleetNode]) -> np.ndarray:
+        """Batched :meth:`score` over ``nodes`` (including the best-iso
+        normalizer pass): ``out[i] == self.score(stream, nodes[i],
+        best_iso)`` bit-for-bit — the rebalancer's bulk entry point."""
+        b = _BatchInputs(stream, nodes)
+        return self.batch_scores(b, b.best_iso())
+
     def place(self, stream, nodes: Sequence[FleetNode]) -> int:
+        if not self.vectorized:
+            return self._place_scalar(stream, nodes)
+        b = _BatchInputs(stream, nodes)
+        s = self.batch_scores(b, b.best_iso())
+        # first-occurrence argmin == (score, node_id) tie-break: candidates
+        # are sorted by node id
+        return int(b.ids[int(np.argmin(s))])
+
+    def _place_scalar(self, stream, nodes: Sequence[FleetNode]) -> int:
+        """Scalar reference placement — the oracle for the batched path."""
         best_iso = min(stream.cost_on(n).iso_s for n in nodes)
         return argmin_node(nodes,
                            lambda n: self.score(stream, n, best_iso))
@@ -237,7 +332,26 @@ class ScoreDrivenRouter(RouterPolicy):
         cascade-edge transfer penalty.  With zero bandwidth the penalty is
         infinite, every stage stays with its parent, and the assignment is
         exactly the whole-pipeline placement."""
+        if not self.vectorized:
+            return self._place_stages_scalar(stream, nodes, transfer)
         out: list[int] = [self.place(stream, nodes)]
+        for k in range(1, stream.n_stages):
+            b = _BatchInputs(stream, nodes, stage=k)
+            s = self.batch_scores(b, b.best_iso())
+            p = stream.parent_of(k)
+            parent_nid = out[p] if p is not None else out[0]
+            # the penalty is node-independent; adding it to the off-parent
+            # rows (a plain elementwise add — inf-safe, nothing multiplies
+            # the mask) replicates the scalar `s += transfer_penalty(...)`
+            pen = self.transfer_penalty(stream, k, transfer)
+            s = np.where(b.ids == parent_nid, s, s + pen)
+            out.append(int(b.ids[int(np.argmin(s))]))
+        return out
+
+    def _place_stages_scalar(self, stream, nodes: Sequence[FleetNode],
+                             transfer) -> list[int]:
+        """Scalar reference stage placement — the batched path's oracle."""
+        out: list[int] = [self._place_scalar(stream, nodes)]
         for k in range(1, stream.n_stages):
             best_iso = min(stream.stage_cost_on(n, k).iso_s for n in nodes)
             p = stream.parent_of(k)
@@ -348,9 +462,26 @@ class TunedScoreRouter(ScoreDrivenRouter):
 
     # ------------------------------------------------- decision recording
     def place(self, stream, nodes: Sequence[FleetNode]) -> int:
-        """Same argmin as the static router, computed from one pass of
-        score terms per node — which then double as the recorded decision
+        """Same argmin as the static router, computed from one batched
+        pass of score terms — which then double as the recorded decision
         context, so recording costs no extra node scans."""
+        if not self.vectorized:
+            return self._place_scalar(stream, nodes)
+        b = _BatchInputs(stream, nodes)
+        (t_load, t_backlog, t_pref, t_ux, t_xfer,
+         marginal) = self.batch_terms(b, b.best_iso())
+        # same expression order as batch_scores / _score, so the argmin is
+        # bit-identical to ScoreDrivenRouter.place
+        s = (self.w_load * t_load + self.w_backlog * t_backlog
+             + self.w_pref * t_pref + self.w_ux * t_ux)
+        self._decisions.append(
+            ([int(i) for i in b.ids],
+             np.column_stack((t_load, t_backlog, t_pref, t_ux, t_xfer)),
+             marginal))
+        return int(b.ids[int(np.argmin(s))])
+
+    def _place_scalar(self, stream, nodes: Sequence[FleetNode]) -> int:
+        """Scalar reference of the recording placement (test oracle)."""
         best_iso = min(stream.cost_on(n).iso_s for n in nodes)
         ids: list[int] = []
         rows: list[tuple[float, ...]] = []
@@ -360,8 +491,6 @@ class TunedScoreRouter(ScoreDrivenRouter):
             cost = stream.cost_on(n)
             tel = n.telemetry()
             t = self.score_terms(cost, n, best_iso, tel=tel)
-            # same expression order as _score, so the argmin is
-            # bit-identical to ScoreDrivenRouter.place
             s = (self.w_load * t[0] + self.w_backlog * t[1]
                  + self.w_pref * t[2] + self.w_ux * t[3])
             key = (s, n.node_id)
@@ -388,7 +517,36 @@ class TunedScoreRouter(ScoreDrivenRouter):
         off-parent nodes, 0 for staying with the parent) — so hindsight
         re-scoring learns ``W_XFER`` from realized outcomes as well, not
         only the whole-stream columns."""
+        if not self.vectorized:
+            return self._place_stages_scalar(stream, nodes, transfer)
         out: list[int] = [self.place(stream, nodes)]
+        for k in range(1, stream.n_stages):
+            b = _BatchInputs(stream, nodes, stage=k)
+            (t_load, t_backlog, t_pref, t_ux, _,
+             marginal) = self.batch_terms(b, b.best_iso())
+            s = (self.w_load * t_load + self.w_backlog * t_backlog
+                 + self.w_pref * t_pref + self.w_ux * t_ux)
+            p = stream.parent_of(k)
+            parent_nid = out[p] if p is not None else out[0]
+            on_parent = b.ids == parent_nid
+            # node-independent penalty/term, added (never multiplied) to
+            # the off-parent rows so an infinite penalty stays inf-safe
+            pen = self.transfer_penalty(stream, k, transfer)
+            s = np.where(on_parent, s, s + pen)
+            xfer = min(self.transfer_term(stream, k, transfer),
+                       self.XFER_TERM_CAP)
+            t_xfer = np.where(on_parent, 0.0, xfer)
+            self._decisions.append(
+                ([int(i) for i in b.ids],
+                 np.column_stack((t_load, t_backlog, t_pref, t_ux, t_xfer)),
+                 marginal))
+            out.append(int(b.ids[int(np.argmin(s))]))
+        return out
+
+    def _place_stages_scalar(self, stream, nodes: Sequence[FleetNode],
+                             transfer) -> list[int]:
+        """Scalar reference of the recording stage placement (oracle)."""
+        out: list[int] = [self._place_scalar(stream, nodes)]
         for k in range(1, stream.n_stages):
             best_iso = min(stream.stage_cost_on(n, k).iso_s for n in nodes)
             p = stream.parent_of(k)

@@ -184,6 +184,12 @@ class CostTable:
     lat_min: np.ndarray
     en_sum: np.ndarray
     en_max: np.ndarray
+    #: isolated full-model latency on the best / worst accelerator —
+    #: ``lat.sum(axis=1).min()`` / ``.max()`` hoisted to build time, since
+    #: the fleet's offered-load estimates and the effective-deadline rule
+    #: re-derive them for every placement probe otherwise
+    iso_best_s: float = 0.0
+    iso_worst_s: float = 0.0
 
     @property
     def n_accs(self) -> int:
@@ -201,6 +207,20 @@ class CostTable:
 _TABLE_CACHE: dict[tuple, CostTable] = {}
 _TABLE_CACHE_STATS = {"hits": 0, "misses": 0}
 
+#: identity-keyed first level of the memo.  The structural key above hashes
+#: the whole ``layers`` tuple (hundreds of frozen Layer dataclasses) on
+#: every lookup — profiled as the dominant cost of a cache *hit* once the
+#: fleet probes the same graph thousands of times per placement wave.  A
+#: graph object's layers tuple never mutates (ModelGraph is frozen), so
+#: (layers id, accs id, name) resolves to the same table for the lifetime
+#: of those objects; each entry pins its key objects so CPython cannot
+#: recycle their ids while the entry lives.  The name is part of the key
+#: because relabeled fleet copies ("s12.det") share one layers object.
+_FAST_TABLE_CACHE: dict[tuple, tuple] = {}
+#: wholesale-cleared when oversized (falls back to the structural level),
+#: bounding the object pins on fleet runs with very large stream counts
+_FAST_TABLE_MAX = 65536
+
 
 def table_cache_info() -> dict:
     """Snapshot of the CostTable memo: hits, misses, current size."""
@@ -209,6 +229,7 @@ def table_cache_info() -> dict:
 
 def clear_table_cache() -> None:
     _TABLE_CACHE.clear()
+    _FAST_TABLE_CACHE.clear()
     _TABLE_CACHE_STATS["hits"] = _TABLE_CACHE_STATS["misses"] = 0
 
 
@@ -221,19 +242,41 @@ def build_cost_table(model: ModelGraph, accs: tuple[Accelerator, ...],
     sub-accelerator its proportional share (bw / n_accs) — a deterministic,
     conservative model of shared-bus contention on an edge SoC.
     """
-    key = (model.layers, tuple(accs), bool(shared_bw))
-    cached = _TABLE_CACHE.get(key)
-    if cached is not None:
+    sb = bool(shared_bw)
+    fk = (id(model.layers), id(accs), model.name, sb)
+    hit = _FAST_TABLE_CACHE.get(fk)
+    if hit is not None and hit[0] is model.layers and hit[1] is accs:
         _TABLE_CACHE_STATS["hits"] += 1
-        if cached.model_name != model.name:
-            # same structure under another label: share the arrays, relabel
-            from dataclasses import replace as _rep
-            cached = _rep(cached, model_name=model.name)
-        return cached
-    _TABLE_CACHE_STATS["misses"] += 1
-    table = _build_cost_table(model, tuple(accs), shared_bw)
-    _TABLE_CACHE[key] = table
-    return table
+        return hit[2]
+    # name-free identity level: fleet churn mints a fresh namespaced label
+    # per placement generation, but the layers object underneath is shared —
+    # resolve the table by identity before paying the structural key's full
+    # layers-tuple hash (hundreds of frozen dataclasses) on every new label
+    bk = (id(model.layers), id(accs), sb)
+    bhit = _FAST_TABLE_CACHE.get(bk)
+    if bhit is not None and bhit[0] is model.layers and bhit[1] is accs:
+        _TABLE_CACHE_STATS["hits"] += 1
+        cached = bhit[2]
+    else:
+        key = (model.layers, tuple(accs), sb)
+        cached = _TABLE_CACHE.get(key)
+        if cached is not None:
+            _TABLE_CACHE_STATS["hits"] += 1
+        else:
+            _TABLE_CACHE_STATS["misses"] += 1
+            cached = _build_cost_table(model, tuple(accs), sb)
+            _TABLE_CACHE[key] = cached
+        if len(_FAST_TABLE_CACHE) >= _FAST_TABLE_MAX:
+            _FAST_TABLE_CACHE.clear()
+        _FAST_TABLE_CACHE[bk] = (model.layers, accs, cached)
+    if cached.model_name != model.name:
+        # same structure under another label: share the arrays, relabel
+        from dataclasses import replace as _rep
+        cached = _rep(cached, model_name=model.name)
+    if len(_FAST_TABLE_CACHE) >= _FAST_TABLE_MAX:
+        _FAST_TABLE_CACHE.clear()
+    _FAST_TABLE_CACHE[fk] = (model.layers, accs, cached)
+    return cached
 
 
 def _build_cost_table(model: ModelGraph, accs: tuple[Accelerator, ...],
@@ -250,7 +293,10 @@ def _build_cost_table(model: ModelGraph, accs: tuple[Accelerator, ...],
             en[a, l] = layer_energy_j(layer, acc)
     in_b = np.array([l.in_bytes for l in model.layers], dtype=np.float64)
     out_b = np.array([l.out_bytes for l in model.layers], dtype=np.float64)
+    iso = lat.sum(axis=1)
     return CostTable(
+        iso_best_s=float(iso.min()),
+        iso_worst_s=float(iso.max()),
         model_name=model.name,
         lat=lat,
         en=en,
@@ -459,7 +505,9 @@ def effective_deadline(period_s: float, table: CostTable,
     """Per-frame deadline for a model on a given system (seconds)."""
     if explicit is not None:
         return explicit
-    iso_worst = float(table.lat.sum(axis=1).max())
+    # hoisted to table build time; the ``or`` re-derives it for tables
+    # constructed outside _build_cost_table (none in-tree, but cheap)
+    iso_worst = table.iso_worst_s or float(table.lat.sum(axis=1).max())
     return min(period_s, max(DEADLINE_SLACK_MULT * iso_worst,
                              DEADLINE_MIN_FRAC * period_s))
 

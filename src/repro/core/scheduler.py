@@ -16,7 +16,9 @@ from typing import Optional
 import numpy as np
 
 from .adaptivity import PARAM_HI, PARAM_LO, ProbeSearch
-from .mapscore import MapScoreParams, mapscore
+from .costmodel import CostTable, E_DRAM
+from .mapscore import (CSWITCH_MAX, MapScoreParams, STARV_MAX, URGENCY_MAX,
+                       _EPS_SLACK, mapscore, togo_seconds)
 from .simulator import Dispatch, Job, SchedulerBase, Simulator
 from .uxcost import WindowStats, overall_dlv_rate
 
@@ -81,6 +83,47 @@ BLOCK_LATENCY_S = 1.5e-3
 PREF_TOL = 1.10
 
 
+class _FastTable:
+    """Python-native view of one CostTable's arrays for the scalar dispatch
+    fast path.  ``tolist()`` preserves the exact float64 values, and every
+    per-element arithmetic step below mirrors the numpy expression in
+    :func:`repro.core.mapscore.mapscore` operation-for-operation, so the
+    fast path is bit-identical to the vectorized reference — it only avoids
+    numpy's per-call array-construction overhead for the tiny (A,) shapes
+    the inner loop actually evaluates."""
+
+    __slots__ = ("lat", "en", "lat_sum", "lat_mean", "en_sum", "in_bytes",
+                 "lat_min")
+
+    def __init__(self, table: CostTable):
+        self.lat = table.lat.tolist()            # per-acc rows, floats
+        self.en = table.en.tolist()
+        self.lat_sum = table.lat_sum.tolist()
+        self.lat_mean = table.lat_mean.tolist()
+        self.en_sum = table.en_sum.tolist()
+        self.in_bytes = table.in_bytes.tolist()
+        self.lat_min = table.lat_min.tolist()
+
+
+#: id(table.lat) -> (pinning ref, fast view).  Relabeled tables (namespaced
+#: fleet copies) share the underlying arrays, so this stays at one entry per
+#: structurally-distinct (model, system) pair; the pin keeps ids stable.
+_FAST_TABLES: dict[int, tuple] = {}
+_FAST_TABLES_MAX = 4096
+
+
+def _fast_table(table: CostTable) -> _FastTable:
+    key = id(table.lat)
+    hit = _FAST_TABLES.get(key)
+    if hit is not None and hit[0] is table.lat:
+        return hit[1]
+    if len(_FAST_TABLES) >= _FAST_TABLES_MAX:
+        _FAST_TABLES.clear()
+    ft = _FastTable(table)
+    _FAST_TABLES[key] = (table.lat, ft)
+    return ft
+
+
 class DreamScheduler(SchedulerBase):
     def __init__(
         self,
@@ -129,17 +172,23 @@ class DreamScheduler(SchedulerBase):
     def _smart_frame_drop(self, sim: Simulator, t: float) -> None:
         """Section 4.2.1: drop the worst (min_to_go/slack) frame meeting all
         four conditions. Triggered at every scheduling decision."""
-        active = sim.active_jobs()
         # condition 2: more than one active job expected to violate
-        expected_violations = sum(
-            1 for j in active if j.min_togo() > max(j.slack(t), 0.0)
-        )
-        if expected_violations < 2:
+        # (counting stops at two — only the <2 threshold matters)
+        nv = 0
+        for j in sim.jobs.values():
+            if j.done:
+                continue
+            mtg = j.cum_min[j.pos] if j.pos < len(j.path) else 0.0
+            if mtg > max(j.deadline - t, 0.0):
+                nv += 1
+                if nv >= 2:
+                    break
+        if nv < 2:
             return
         best: tuple[float, Job] | None = None
-        for j in sim.ready_jobs():
-            slack = j.slack(t)
-            mtg = j.min_togo()
+        for j in sim.ready.values():
+            slack = j.deadline - t
+            mtg = j.cum_min[j.pos] if j.pos < len(j.path) else 0.0
             if mtg <= max(slack, 0.0):          # condition 1
                 continue
             if not j.is_tail:                    # condition 3
@@ -181,7 +230,91 @@ class DreamScheduler(SchedulerBase):
         sim.variant_counts[chosen.name] = sim.variant_counts.get(chosen.name, 0) + 1
 
     # -------------------------------------------------------------- dispatch
+    #: Scalar fast-path toggle.  The reference numpy implementation below
+    #: (``schedule_reference``) stays alive as the differential-test oracle;
+    #: the fast path replicates its arithmetic operation-for-operation and
+    #: must stay bit-identical (see tests/test_vectorized_equiv.py).
+    fast_path = True
+
     def schedule(self, sim: Simulator, t: float) -> Optional[Dispatch]:
+        if not self.fast_path:
+            return self.schedule_reference(sim, t)
+        if self.frame_drop:
+            self._smart_frame_drop(sim, t)
+        ready = sim.ready
+        if not ready:
+            return None
+        idle_idx = [a.idx for a in sim.accs if not a.busy]
+        if not idle_idx:
+            return None
+        if len(ready) == 1 and len(idle_idx) == 1:
+            # forced assignment: every score is finite, so the single
+            # (job, acc) pair always wins the argmax — skip the arithmetic
+            job = next(iter(ready.values()))
+            if self.supernet and not job.variant_locked:
+                self._maybe_switch_variant(sim, job, t)
+            return Dispatch(job=job, acc_idx=idle_idx[0],
+                            n_layers=self._block_len(job, idle_idx[0]))
+        accs = sim.accs
+        prev_out = [a.prev_out_bytes for a in accs]
+        prev_base = [a.prev_base for a in accs]
+        alpha = self.params.alpha
+        beta = self.params.beta
+        best_score = -np.inf
+        best: Optional[tuple[Job, int]] = None
+        for job in ready.values():
+            pos = job.pos
+            nxt = job.path[pos]
+            ft = _fast_table(job.table)
+            # ToGo memo: pos only moves at dispatch boundaries, while the
+            # reference recomputes the same pairwise numpy suffix sum on
+            # every scheduling decision the job sits through
+            ck = (pos, id(job.table))
+            if getattr(job, "_togo_at", None) == ck:
+                togo = job._togo_v                 # type: ignore[attr-defined]
+            else:
+                togo = togo_seconds(job.table, job.path[pos:])
+                job._togo_at = ck                  # type: ignore[attr-defined]
+                job._togo_v = togo                 # type: ignore[attr-defined]
+            slack = job.deadline - t
+            urgency = 0.0 if slack <= _EPS_SLACK else min(togo / slack,
+                                                          URGENCY_MAX)
+            lat_sum_n = ft.lat_sum[nxt]
+            en_sum_n = ft.en_sum[nxt]
+            in_b_n = ft.in_bytes[nxt]
+            t_queue = max(t - job.t_cmpl, 0.0)
+            starv = min(t_queue / ft.lat_mean[nxt], STARV_MAX)
+            a_starv = alpha * starv
+            base = job.base_name
+            jb_score = -np.inf
+            jb_acc = -1
+            for ai in idle_idx:
+                lat_a = ft.lat[ai][nxt]
+                en_a = ft.en[ai][nxt]
+                if prev_base[ai] == base:
+                    cost_switch = 0.0
+                else:
+                    cost_switch = min(
+                        (in_b_n + prev_out[ai]) * E_DRAM / en_a, CSWITCH_MAX)
+                s = (urgency * (lat_sum_n / lat_a) + a_starv
+                     + beta * (en_sum_n / en_a - cost_switch))
+                if s > jb_score:
+                    jb_score = s
+                    jb_acc = ai
+            if jb_score > best_score:
+                best_score = jb_score
+                best = (job, jb_acc)
+        if best is None:
+            return None
+        if self.supernet and not best[0].variant_locked:
+            self._maybe_switch_variant(sim, best[0], t)
+        job, acc_idx = best
+        return Dispatch(job=job, acc_idx=acc_idx,
+                        n_layers=self._block_len(job, acc_idx))
+
+    def schedule_reference(self, sim: Simulator, t: float) -> Optional[Dispatch]:
+        """Original vector-per-job dispatch via :func:`mapscore` — retained
+        as the bit-identity oracle for the scalar fast path above."""
         if self.frame_drop:
             self._smart_frame_drop(sim, t)
         ready = sim.ready_jobs()
@@ -214,10 +347,30 @@ class DreamScheduler(SchedulerBase):
             self._maybe_switch_variant(sim, best[0], t)
         job, acc_idx = best
         return Dispatch(job=job, acc_idx=acc_idx,
-                        n_layers=self._block_len(job, acc_idx))
+                        n_layers=self._block_len_reference(job, acc_idx))
 
     @staticmethod
     def _block_len(job: Job, acc_idx: int) -> int:
+        """Affinity-run blocking via the fast-table row (``lat.min(axis=0)``
+        over gathered columns equals a ``lat_min`` gather element-wise, so
+        this matches :meth:`_block_len_reference` bit-for-bit)."""
+        path = job.path
+        pos = job.pos
+        ft = _fast_table(job.table)
+        row = ft.lat[acc_idx]
+        lat_min = ft.lat_min
+        n = 1
+        cum = row[path[pos]]
+        for i in range(1, len(path) - pos):
+            li = path[pos + i]
+            if row[li] > PREF_TOL * lat_min[li] or cum >= BLOCK_LATENCY_S:
+                break
+            cum += row[li]
+            n = i + 1
+        return n
+
+    @staticmethod
+    def _block_len_reference(job: Job, acc_idx: int) -> int:
         """Affinity-run blocking: dispatch the run of consecutive layers
         that keep preferring this accelerator, capped at BLOCK_LATENCY_S."""
         path = job.path[job.pos:]

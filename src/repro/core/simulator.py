@@ -49,6 +49,27 @@ _EVENT_NAMES = ("arrival", "done", "window", "phase", "inject")
 #: so trace replay (which consumes no arrival randomness) stays bit-exact.
 _ARRIVAL_STREAM = 0xA221
 
+#: Python-list mirrors of a CostTable's per-accelerator rows, keyed by
+#: ``id(table.lat)`` with the array pinned so the id cannot be recycled.
+#: ``.tolist()`` round-trips float64 exactly; the dispatch hot path sums a
+#: handful of these per event, where scalar list indexing beats a numpy
+#: fancy-index + reduction.  Wholesale-cleared when oversized.
+_ROW_CACHE: dict[int, tuple] = {}
+_ROW_CACHE_MAX = 4096
+
+
+def _py_rows(table: CostTable) -> tuple:
+    key = id(table.lat)
+    hit = _ROW_CACHE.get(key)
+    if hit is not None and hit[0] is table.lat:
+        return hit
+    if len(_ROW_CACHE) >= _ROW_CACHE_MAX:
+        _ROW_CACHE.clear()
+    entry = (table.lat, table.lat.tolist(), table.en.tolist(),
+             table.in_bytes.tolist(), table.out_bytes.tolist())
+    _ROW_CACHE[key] = entry
+    return entry
+
 
 @dataclass
 class Job:
@@ -189,6 +210,21 @@ class Simulator:
         #: (immutable) scenario the simulator was constructed from
         self.specs: list[ModelSpec] = list(scenario.models)
         self.active: list[bool] = [True] * len(self.specs)
+        #: name -> spec index and parent name -> dependent spec indices,
+        #: maintained on join (specs are append-only and names unique) so
+        #: the per-event lookups need no linear rescan of the spec list
+        self._name_idx: dict[str, int] = {}
+        self._deps_idx: dict[str, list[int]] = {}
+        for i, s in enumerate(self.specs):
+            self._name_idx.setdefault(s.model.name, i)   # first match wins
+            if s.depends_on is not None:
+                self._deps_idx.setdefault(s.depends_on, []).append(i)
+        #: lazy (stale-threshold, jid) min-heap guarding _abort_stale: the
+        #: scan over ready jobs only runs when some pushed threshold is
+        #: actually due.  Entries are conservative — jobs re-push on
+        #: deadline/period changes and finished jobs' entries just expire —
+        #: so the guard never skips a scan the threshold scan would run.
+        self._stale_heap: list[tuple[float, int]] = []
 
         self.models: dict[str, ModelGraph] = {
             s.model.name: s.model for s in self.specs
@@ -323,21 +359,23 @@ class Simulator:
 
     # --------------------------------------------------------- live specs
     def _index_of(self, name: str) -> int:
-        for i, s in enumerate(self.specs):
-            if s.model.name == name:
-                return i
-        raise KeyError(name)
+        idx = self._name_idx.get(name)
+        if idx is None:
+            raise KeyError(name)
+        return idx
 
     def _dependents_of(self, name: str) -> list[int]:
-        return [i for i, s in enumerate(self.specs)
-                if s.depends_on == name and self.active[i]]
+        # _deps_idx preserves spec append order, so the filtered list is
+        # element-identical to the original enumerate() scan
+        return [i for i in self._deps_idx.get(name, ())
+                if self.active[i]]
 
     def _is_chain_tail(self, idx: int) -> bool:
         name = self.specs[idx].model.name
         if name in self.export_completions:
             return False                # has remote (cross-node) dependents
-        return not any(s.depends_on == name and self.active[i]
-                       for i, s in enumerate(self.specs))
+        return not any(self.active[i]
+                       for i in self._deps_idx.get(name, ()))
 
     # ------------------------------------------------------------- events
     def _push(self, t: float, kind: int, arg: object) -> None:
@@ -418,6 +456,14 @@ class Simulator:
         # converges to the new rate from the next inter-arrival onward
         self.deadlines[name] = effective_deadline(
             spec.period_s, self.tables[name], spec.deadline_s)
+        # the stale-abort threshold of queued head jobs moves with the
+        # period — re-arm their lazy-heap entries so a shrunk grace window
+        # still fires on time (old entries expire harmlessly)
+        for j in self.ready.values():
+            if j.model_idx == idx and j.pos == 0:
+                heapq.heappush(
+                    self._stale_heap,
+                    (j.deadline + self.stale_periods * spec.period_s, j.jid))
 
     def _join_spec(self, spec: ModelSpec, t: float) -> None:
         name = spec.model.name
@@ -447,6 +493,9 @@ class Simulator:
         idx = len(self.specs)
         self.specs.append(spec)
         self.active.append(True)
+        self._name_idx.setdefault(name, idx)     # first match wins
+        if spec.depends_on is not None:
+            self._deps_idx.setdefault(spec.depends_on, []).append(idx)
         self._arrival_procs.append(self._materialize_arrival(spec.arrival))
         self._arrival_origin.append(t)
         if spec.depends_on is None:
@@ -552,6 +601,10 @@ class Simulator:
         )
         self.jobs[job.jid] = job
         self.ready[job.jid] = job
+        heapq.heappush(
+            self._stale_heap,
+            (job.deadline + self.stale_periods
+             * self.specs[model_idx].period_s, job.jid))
         override = self._variant_override.get(graph.name)
         if override is not None:
             # SLO degradation pin: every frame of this stream starts on the
@@ -677,6 +730,13 @@ class Simulator:
     def _abort_stale(self, t: float) -> None:
         """Simulator hygiene: a frame that has not *started* by
         deadline + stale_periods * period is abandoned (counts violated)."""
+        heap = self._stale_heap
+        if not heap or heap[0][0] >= t:
+            # every queued head job's threshold is >= the heap minimum
+            # (entries are re-armed whenever deadline or period shrink the
+            # threshold), so no job can satisfy the strict t > threshold
+            # test below — the ready scan would find nothing
+            return
         stale = [
             j for j in self.ready.values()
             if j.pos == 0 and t > j.deadline
@@ -685,6 +745,11 @@ class Simulator:
         for j in stale:
             self.aborts += 1
             self._finish_job(j, t, dropped=True)
+        # expired entries are spent: any job still queued with threshold
+        # < t was just aborted above (entries with threshold == t stay —
+        # the strict test only fires for them at a later t)
+        while heap and heap[0][0] < t:
+            heapq.heappop(heap)
 
     # ----------------------------------------------------------- dispatch
     def _dispatch(self, d: Dispatch, t: float) -> None:
@@ -692,11 +757,29 @@ class Simulator:
         assert not acc.busy and not job.running and not job.finished_exec
         n = min(d.n_layers, job.n_layers - job.pos)
         layers = job.path[job.pos: job.pos + n]
-        dur = float(job.table.lat[acc.idx, layers].sum())
-        energy = float(job.table.en[acc.idx, layers].sum())
-        if acc.prev_base is not None and acc.prev_base != job.base_name:
-            energy += (float(job.table.in_bytes[layers[0]]) + acc.prev_out_bytes) * E_DRAM
-            dur += self.cs_latency_s
+        if n < 8:
+            # numpy reduces sequentially below 8 elements (pairwise blocking
+            # starts at 8), so this scalar loop is bit-identical to
+            # table.lat[acc.idx, layers].sum() — and skips two fancy-index
+            # array allocations per dispatch
+            rows = _py_rows(job.table)
+            lrow = rows[1][acc.idx]
+            erow = rows[2][acc.idx]
+            dur = 0.0
+            energy = 0.0
+            for li in layers:
+                dur += lrow[li]
+                energy += erow[li]
+            if acc.prev_base is not None and acc.prev_base != job.base_name:
+                energy += (rows[3][layers[0]] + acc.prev_out_bytes) * E_DRAM
+                dur += self.cs_latency_s
+        else:
+            dur = float(job.table.lat[acc.idx, layers].sum())
+            energy = float(job.table.en[acc.idx, layers].sum())
+            if acc.prev_base is not None and acc.prev_base != job.base_name:
+                energy += (float(job.table.in_bytes[layers[0]])
+                           + acc.prev_out_bytes) * E_DRAM
+                dur += self.cs_latency_s
         reserve = dur
         if d.reserve_worst:
             # static scheduling reserves the worst-case (full) path duration
@@ -826,6 +909,13 @@ class Simulator:
                 if anchor is not None:
                     name = self.specs[idx].model.name
                     job.deadline = anchor + self.deadlines[name]
+                    # the anchored deadline is earlier than the create-time
+                    # one _create_job armed (anchor <= t), so re-arm the
+                    # stale entry or the abort would fire late
+                    heapq.heappush(
+                        self._stale_heap,
+                        (job.deadline + self.stale_periods
+                         * self.specs[idx].period_s, job.jid))
         elif kind == PHASE:
             self._apply_phase(arg, t)
         elif kind == DONE:

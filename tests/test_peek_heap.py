@@ -1,0 +1,161 @@
+"""Unit tests for the fleet's persistent lazy peek heap.
+
+PR 8 replaced the fleet clock's per-event full node rescan (a latent
+O(nodes) cost paid at *every* fleet event, dominating large fleets) with
+a persistent lazy min-heap of ``(next_event_time, node_id)`` entries.
+The heap's correctness contract is one-sided:
+
+    at every advancement, the heap holds an entry at or before each
+    live node's true next-event time (when that event is reachable
+    within the node's own horizon).
+
+Late/stale entries are fine — they re-validate on pop; a *missing or
+too-late* entry would silently freeze a node.  These tests run an
+instrumented simulator that re-checks the invariant (plus heap/index
+consistency and the O(nodes) size bound) at every single advancement of
+a churning fleet that exercises all three membership transitions:
+``node_join`` (mid-run), ``node_drain`` (graceful) and ``node_leave``
+(abrupt) — each of which mutates which nodes the heap must track.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
+                           TransferModel)
+
+SYSTEMS_MIX = ("4K_2WS", "8K_2OS", "4K_1WS2OS", "8K_1OS2WS")
+
+
+class _InvariantError(AssertionError):
+    pass
+
+
+class _CheckedFleet(FleetSimulator):
+    """FleetSimulator that audits the peek heap at every advancement."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.checks = 0
+        self.max_heap_len = 0
+        self.transitions_seen: set[str] = set()
+
+    def _audit(self, where: str) -> None:
+        self.checks += 1
+        self.max_heap_len = max(self.max_heap_len, len(self._peek_heap))
+        heap_times: dict[int, list[float]] = {}
+        for pt, nid in self._peek_heap:
+            heap_times.setdefault(nid, []).append(pt)
+        # index consistency: every tracked earliest-entry time must
+        # correspond to a real heap entry, and nothing earlier may lurk
+        # untracked (an untracked-earlier entry would be discarded on
+        # pop and could strand the tracked one behind it)
+        for nid, tracked in self._peek_at.items():
+            times = heap_times.get(nid)
+            if not times or tracked not in times:
+                raise _InvariantError(
+                    f"{where}: _peek_at[{nid}]={tracked} has no matching "
+                    "heap entry")
+            if min(times) < tracked:
+                raise _InvariantError(
+                    f"{where}: node {nid} has a heap entry earlier than "
+                    f"its tracked earliest {tracked}")
+        # the one-sided invariant itself
+        for nid, node in self.nodes.items():
+            if not node.alive:
+                continue
+            pt = node.sim.peek_t()
+            if pt is None or pt > node.sim.duration_s:
+                continue            # nothing reachable to track
+            tracked = self._peek_at.get(nid)
+            if tracked is None or tracked > pt:
+                raise _InvariantError(
+                    f"{where}: live node {nid} next event at {pt} but "
+                    f"heap tracks {tracked} — node would freeze")
+
+    def _advance_all(self, t):
+        self._audit(f"before _advance_all({t})")
+        super()._advance_all(t)
+        self._audit(f"after _advance_all({t})")
+
+    def _on_node_join(self, t, ev):
+        super()._on_node_join(t, ev)
+        self.transitions_seen.add("join")
+        self._audit(f"after node_join@{t}")
+
+    def _on_node_drain(self, t, ev):
+        super()._on_node_drain(t, ev)
+        self.transitions_seen.add("drain")
+        self._audit(f"after node_drain@{t}")
+
+    def _on_node_leave(self, t, ev):
+        super()._on_node_leave(t, ev)
+        self.transitions_seen.add("leave")
+        self._audit(f"after node_leave@{t}")
+
+
+def _churn_scenario(seed: int, split: bool = False):
+    """4 starting nodes + 1 mid-run join; one drains, one leaves."""
+    b = FleetScenarioBuilder(f"peek_heap_{seed}")
+    nids = [b.node(SYSTEMS_MIX[i % len(SYSTEMS_MIX)]) for i in range(4)]
+    b.node(SYSTEMS_MIX[seed % len(SYSTEMS_MIX)], at=0.3)   # mid-run join
+    b.node_drain(nids[0], at=0.45)
+    b.node_leave(nids[1], at=0.6)
+    if split:
+        b.fuzz_streams(8, seed=seed, t0=0.0, t1=0.5, fps_scale=1.0,
+                       cascade_prob=1.0, max_depth=3, cascades_only=True,
+                       deterministic_arrivals=True)
+    else:
+        b.fuzz_streams(16, seed=seed, t0=0.0, t1=0.5, fps_scale=0.25,
+                       depart_frac=0.4, rejoin_frac=0.5,
+                       t_depart0=0.35, t_depart1=0.9)
+    return b.build()
+
+
+@pytest.mark.parametrize("seed", (2, 9))
+def test_peek_heap_invariant_across_join_drain_leave(seed):
+    fs = _CheckedFleet(_churn_scenario(seed), "score", duration_s=1.0,
+                       seed=seed,
+                       transfer=TransferModel(link_bandwidth_bytes_s=1.25e9),
+                       rebalance_every_s=0.3)
+    r = fs.run()
+    assert fs.transitions_seen == {"join", "drain", "leave"}
+    assert fs.checks > 50          # the audit actually ran, densely
+    assert r.frames > 0
+    # lazily-discarded stale entries must not accumulate: the heap stays
+    # O(nodes), never O(touches) (5 nodes here; generous slack for
+    # in-flight superseded entries)
+    assert fs.max_heap_len <= 8 * len(fs.nodes)
+
+
+def test_peek_heap_invariant_split_mode():
+    """Stage-split advancement pops the same heap through the global
+    event-order interleave — audit that path too."""
+    fs = _CheckedFleet(_churn_scenario(5, split=True), "score",
+                       duration_s=1.0, seed=5, split_stages=True,
+                       transfer=TransferModel())
+    r = fs.run()
+    assert fs.transitions_seen == {"join", "drain", "leave"}
+    assert fs.checks > 30
+    assert r.frames > 0
+    assert fs.max_heap_len <= 8 * len(fs.nodes)
+
+
+def test_peek_heap_matches_scan_oracle_under_churn(monkeypatch):
+    """The lazy clock and the O(N)-rescan oracle must produce identical
+    results on the membership-churn scenario (the transitions are where
+    a missed ``_touch`` would diverge first)."""
+    def run_once():
+        fs = FleetSimulator(
+            _churn_scenario(3), "score", duration_s=1.0, seed=3,
+            transfer=TransferModel(link_bandwidth_bytes_s=1.25e9),
+            rebalance_every_s=0.3)
+        r = fs.run()
+        return (r.uxcost, r.frames, r.migrations, r.departures,
+                r.stream_seconds, dict(fs.stream_node))
+
+    vec = run_once()
+    with monkeypatch.context() as m:
+        m.setattr(FleetSimulator, "lazy_peek", False)
+        ref = run_once()
+    assert vec == ref

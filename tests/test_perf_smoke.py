@@ -1,0 +1,69 @@
+"""Throughput perf smoke: the fleet simulator must clear a committed
+simulated-stream-seconds-per-wall-second floor on a fixed mid-size run.
+
+This is a *smoke* floor, not a benchmark: it is set ~3.5x below the
+throughput this scenario achieves on the reference CI machine (typ.
+~250 stream-s/wall-s vectorized, ~200 with the scalar oracles forced),
+so it only trips on pathological regressions — an accidental O(N^2)
+rescan, a disabled fast path plus a large constant-factor hit, a
+per-frame allocation storm.  Finer-grained drift is tracked by the
+nightly lane instead: ``scripts/check_bench.py`` records the CI sweep's
+``streams_per_wall_s`` into the trajectory trend series every run and,
+under ``--gate-throughput``, enforces the absolute floors committed in
+``benchmarks/baselines/ci_baseline.json`` (``throughput_floors``).
+
+Best-of-3 is deliberate: wall-clock on shared CI runners is noisy and a
+perf *floor* test must only fail when the code is slow, not when the
+machine is busy.  The first run also warms the cost-table and row
+caches, mirroring steady-state simulator use.
+"""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
+                           TransferModel)
+
+#: committed floor, simulated stream-seconds per wall-second (best-of-3)
+FLOOR_STREAMS_PER_WALL_S = 70.0
+
+#: exact stream-seconds this fixed scenario simulates — pinned so a
+#: behavior change can't silently shrink the workload under the floor
+EXPECTED_STREAM_SECONDS = 61.617
+
+SYSTEMS_MIX = ("4K_2WS", "8K_2OS", "4K_1WS2OS", "8K_1OS2WS")
+
+
+def _build_scenario():
+    b = FleetScenarioBuilder("perf_smoke")
+    nids = [b.node(SYSTEMS_MIX[i % len(SYSTEMS_MIX)]) for i in range(8)]
+    b.node_drain(nids[0], at=0.5)
+    b.fuzz_streams(96, seed=7, t0=0.0, t1=0.6, fps_scale=0.25,
+                   depart_frac=0.3, rejoin_frac=0.3,
+                   t_depart0=0.4, t_depart1=0.9)
+    return b.build()
+
+
+def _one_run() -> float:
+    fs = FleetSimulator(
+        _build_scenario(), "score", duration_s=1.0, seed=7,
+        transfer=TransferModel(link_bandwidth_bytes_s=1.25e9),
+        rebalance_every_s=0.3)
+    t0 = time.perf_counter()
+    r = fs.run()
+    wall = time.perf_counter() - t0
+    assert abs(r.stream_seconds - EXPECTED_STREAM_SECONDS) < 0.01, \
+        "perf-smoke workload changed — re-derive the floor"
+    return r.stream_seconds / wall
+
+
+@pytest.mark.perf
+def test_fleet_throughput_floor():
+    best = max(_one_run() for _ in range(3))
+    assert best >= FLOOR_STREAMS_PER_WALL_S, (
+        f"fleet throughput {best:.1f} stream-s/wall-s fell below the "
+        f"committed smoke floor {FLOOR_STREAMS_PER_WALL_S} — a >3x "
+        "slowdown vs the reference machine; profile the inner loop "
+        "(core/simulator dispatch, cluster/node drain, router scoring)")
