@@ -1,11 +1,15 @@
 #!/usr/bin/env python
 """Docs cross-reference checker: every ``[[symbol]]`` in docs/*.md must
-resolve to a real module path or module attribute.
+resolve to a real module path or module attribute, and every relative
+markdown link between docs (docs -> docs, README -> docs) must point at
+a file that exists.
 
 The docs use ``[[repro.core.costmodel.TransferModel]]``-style references
 as symbol-to-code cross links.  This script imports the longest module
 prefix of each reference and walks the remaining attributes, so renames
 and removals break CI instead of silently rotting the documentation.
+Inter-doc ``[text](relative.md)`` links are resolved against the linking
+file's directory; a deleted or renamed doc breaks CI the same way.
 
     PYTHONPATH=src python scripts/check_docs.py [docs-dir]
 """
@@ -17,6 +21,8 @@ import re
 import sys
 
 REF_RE = re.compile(r"\[\[([A-Za-z_][\w.]*)\]\]")
+# [text](target) markdown links; skips images (![...]) and bare URLs
+LINK_RE = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s#]+)(?:#[^)\s]*)?\)")
 
 
 def resolve(ref: str) -> bool:
@@ -37,26 +43,44 @@ def resolve(ref: str) -> bool:
     return False
 
 
+def check_links(path: pathlib.Path) -> list[str]:
+    """Relative markdown links in ``path`` that point at missing files."""
+    bad = []
+    for target in LINK_RE.findall(path.read_text()):
+        if "://" in target or target.startswith("mailto:"):
+            continue                          # external URL — not checked
+        if not (path.parent / target).exists():
+            bad.append(target)
+    return bad
+
+
 def main(docs_dir: str = "docs") -> int:
     root = pathlib.Path(docs_dir)
     files = sorted(root.glob("*.md"))
     if not files:
         print(f"check_docs: no markdown files under {root}/", file=sys.stderr)
         return 1
-    n_refs = 0
+    readme = root.parent / "README.md"
+    link_files = files + ([readme] if readme.exists() else [])
+    n_refs = n_links = 0
     failures: list[tuple[str, str]] = []
     for path in files:
         for ref in REF_RE.findall(path.read_text()):
             n_refs += 1
             if not resolve(ref):
-                failures.append((str(path), ref))
+                failures.append((str(path), f"unresolved reference [[{ref}]]"))
+    for path in link_files:
+        links = LINK_RE.findall(path.read_text())
+        n_links += sum(1 for t in links
+                       if "://" not in t and not t.startswith("mailto:"))
+        for target in check_links(path):
+            failures.append((str(path), f"broken link ({target})"))
     if failures:
-        for path, ref in failures:
-            print(f"check_docs: {path}: unresolved reference [[{ref}]]",
-                  file=sys.stderr)
+        for path, msg in failures:
+            print(f"check_docs: {path}: {msg}", file=sys.stderr)
         return 1
-    print(f"check_docs: ok — {n_refs} references across "
-          f"{len(files)} files all resolve")
+    print(f"check_docs: ok — {n_refs} references and {n_links} relative "
+          f"links across {len(link_files)} files all resolve")
     return 0
 
 

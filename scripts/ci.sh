@@ -183,6 +183,47 @@ print(f"ci: ok — obs smoke: {len(recs)} spans, {len(fams)} metric "
 EOF
 }
 
+soa_smoke() {
+    # fast-lane SoA gate: the structure-of-arrays slab core must stay
+    # bit-identical to the per-event scalar oracle (same UXCost, frames,
+    # drops, aborts, and trace bytes) on a live fleet run, and the golden
+    # corpus must replay digest-exact with the slab core engaged.  The
+    # batch scheduler arm is forced (soa_batch_min=1) so small CI
+    # scenarios exercise the matrix path, not just the scalar fallback.
+    python - <<'EOF'
+import sys
+import pytest
+from benchmarks.fleet_sweep import build_overload_fleet, OVERLOAD_SLO
+from repro.cluster import FleetSimulator
+from repro.cluster import trace as ftrace
+from repro.core.scheduler import DreamScheduler
+from repro.core.simulator import Simulator
+
+def fp():
+    scn = build_overload_fleet(3, 4, 24, 1.0, burst=True)
+    r = FleetSimulator(scn, "score", duration_s=1.0, seed=3,
+                       slo=OVERLOAD_SLO, slo_every_s=0.1, record=True).run()
+    return (r.uxcost, r.frames, r.swaps, r.rejections, r.tier_dlv,
+            ftrace.dumps(r.trace))
+
+DreamScheduler.soa_batch_min = 1     # small CI fleets hit the matrix arm
+slab = fp()
+Simulator.soa_slab = False
+scalar = fp()
+Simulator.soa_slab = True
+if slab != scalar:
+    sys.exit("soa smoke: slab core diverged from the per-event oracle")
+# golden corpus, replayed in-process so the forced flags stay in effect
+rc = pytest.main(["-q", "-p", "no:cacheprovider",
+                  "tests/test_golden_traces.py"])
+if rc != 0:
+    sys.exit("soa smoke: golden corpus digest check failed with the "
+             "slab core engaged")
+print("ci: ok — soa smoke: slab core bit-identical to scalar oracle "
+      "(batch arm forced), golden corpus digest-exact")
+EOF
+}
+
 pydoc_render() {
     python - <<'EOF'
 import pydoc
@@ -308,6 +349,7 @@ stage tests          tests
 stage docs_refs      docs_refs
 stage slo_smoke      slo_smoke
 stage obs_smoke      obs_smoke
+stage soa_smoke      soa_smoke
 
 if [ "$CI_FAST" = "1" ]; then
     echo

@@ -206,8 +206,11 @@ class StreamView:
         self.sid = sid
         # own the configs: phase events rescale them in place, and the
         # originals belong to the scenario (shared across runs) and to the
-        # recorded trace (which must keep the admission-time workload)
-        self.entry_cfgs = copy.deepcopy(entry_cfgs)
+        # recorded trace (which must keep the admission-time workload).
+        # Only the top-level "fps" key is ever mutated (rescale_fps), so a
+        # per-dict shallow copy suffices — nested model/arrival dicts are
+        # read-only and may stay shared with the scenario.
+        self.entry_cfgs = [dict(c) for c in entry_cfgs]
         self.entries = [ModelEntry.from_config(c) for c in self.entry_cfgs]
         self._graphs: Optional[list] = None
         self._cost_by_system: dict[object, StreamCost] = {}
@@ -276,9 +279,12 @@ class StreamView:
         prefix = f"s{self.sid}." if gen == 0 else f"s{self.sid}g{gen}."
         specs, names = [], []
         for cfg in self.entry_cfgs:
-            c = copy.deepcopy(cfg)
-            base = c["model"]["name"]
-            c["model"]["name"] = prefix + base
+            # shallow rebuild: only the two renamed keys get fresh dicts
+            c = dict(cfg)
+            m = dict(c["model"])
+            base = m["name"]
+            m["name"] = prefix + base
+            c["model"] = m
             if c.get("depends_on"):
                 c["depends_on"] = prefix + c["depends_on"]
             specs.append(ModelEntry.from_config(c).to_spec())
@@ -339,9 +345,11 @@ class StreamView:
         so a stream's dynamics do not change when a stage migrates)."""
         prefix = (f"s{self.sid}t{k}." if gen == 0
                   else f"s{self.sid}t{k}g{gen}.")
-        c = copy.deepcopy(self.entry_cfgs[k])
-        base = c["model"]["name"]
-        c["model"]["name"] = prefix + base
+        c = dict(self.entry_cfgs[k])
+        m = dict(c["model"])
+        base = m["name"]
+        m["name"] = prefix + base
+        c["model"] = m
         if c.get("depends_on") is not None:
             c["depends_on"] = None
             c["arrival"] = {"kind": "triggered"}
@@ -396,6 +404,19 @@ class FleetResult:
                 f"streams={self.n_streams:<4d} UXCost={self.uxcost:10.4f} "
                 f"DLV={self.dlv_rate:6.3f} frames={self.frames} "
                 f"drops={self.drops} migr={self.migrations}")
+
+
+class _CandidateList(list):
+    """Sorted live-node candidate list with fleet-backed SoA telemetry
+    columns.  Batched routers call :meth:`tel_columns` to read per-node
+    telemetry as flat arrays (refreshed via the node dirty hooks) instead
+    of 8 attribute reads per node per placement; scalar paths just treat
+    it as the plain list it is."""
+
+    _fleet: "FleetSimulator"
+
+    def tel_columns(self) -> dict:
+        return self._fleet._tel_columns(self)
 
 
 class FleetSimulator:
@@ -544,6 +565,11 @@ class FleetSimulator:
         self.stream_seconds = 0.0
         self._stream_t0: dict[int, float] = {}
         self.nodes: dict[int, FleetNode] = {}
+        #: _candidates() memo, cleared on any membership change
+        self._cands_cache: dict[Optional[int], list[FleetNode]] = {}
+        #: SoA telemetry columns over one candidate list (see _tel_columns)
+        self._tel_cols: Optional[dict] = None
+        self._tel_dirty: set[int] = set()
         #: persistent lazy (peek_t, node_id) min-heap driving the fleet
         #: clock: only nodes with events actually due are advanced, instead
         #: of rescanning every node at every fleet event.  Entries are
@@ -861,9 +887,65 @@ class FleetSimulator:
                                        + joules)
 
     def _candidates(self, exclude: Optional[int] = None) -> list[FleetNode]:
-        return [self.nodes[nid] for nid in sorted(self.nodes)
+        # memoized per `exclude`: membership state only changes at
+        # node_join/node_leave/node_drain, each of which clears the cache
+        cands = self._cands_cache.get(exclude)
+        if cands is None:
+            cands = _CandidateList(
+                self.nodes[nid] for nid in sorted(self.nodes)
                 if self.nodes[nid].alive and not self.nodes[nid].draining
-                and nid != exclude]
+                and nid != exclude)
+            cands._fleet = self
+            self._cands_cache[exclude] = cands
+        return cands
+
+    def _tel_columns(self, cands: "_CandidateList") -> dict:
+        """SoA telemetry columns for one candidate list: per-node arrays of
+        the four fields batched placement scoring reads, plus the
+        per-system node groups used to fill cost columns with one
+        ``cost_on`` per distinct accelerator mix.  Values are copied out of
+        the same memoized ``telemetry()`` snapshots the scalar path reads;
+        only rows whose node fired the telemetry dirty hook are re-read."""
+        cols = self._tel_cols
+        if cols is None or cols["cands"] is not cands:
+            groups: dict = {}
+            for i, node in enumerate(cands):
+                key = (node.system if node.system != "custom"
+                       else ("node", node.node_id))
+                groups.setdefault(key, (node, []))[1].append(i)
+            n = len(cands)
+            cols = {
+                "cands": cands,
+                "ids": np.array([nd.node_id for nd in cands],
+                                dtype=np.int64),
+                "row_of": {nd.node_id: i for i, nd in enumerate(cands)},
+                "groups": [(nd, np.array(ix, dtype=np.intp))
+                           for nd, ix in groups.values()],
+                "offered_util": np.empty(n), "n_accs": np.empty(n),
+                "backlog": np.empty(n), "dlv": np.empty(n),
+            }
+            for i, node in enumerate(cands):
+                tel = node.telemetry()
+                cols["offered_util"][i] = tel.offered_util
+                cols["n_accs"][i] = tel.n_accs
+                cols["backlog"][i] = tel.backlog_s
+                cols["dlv"][i] = tel.window_dlv
+            self._tel_cols = cols
+            self._tel_dirty.clear()
+            return cols
+        if self._tel_dirty:
+            row_of = cols["row_of"]
+            for nid in self._tel_dirty:
+                i = row_of.get(nid)
+                if i is None:
+                    continue
+                tel = self.nodes[nid].telemetry()
+                cols["offered_util"][i] = tel.offered_util
+                cols["n_accs"][i] = tel.n_accs
+                cols["backlog"][i] = tel.backlog_s
+                cols["dlv"][i] = tel.window_dlv
+            self._tel_dirty.clear()
+        return cols
 
     # ------------------------------------------------ whole-stream placement
     def _place(self, sid: int, nid: int, t: float, gen: int) -> None:
@@ -1041,6 +1123,8 @@ class FleetSimulator:
             nid, system, self.scheduler_factory(ns),
             duration_s=self.duration_s, seed=ns,
             window_s=self.window_s, at_t=t, obs=self.obs)
+        self.nodes[nid].tel_dirty_hook = self._tel_dirty.add
+        self._cands_cache.clear()
         if self.recorder is not None:
             self.recorder.node_join(t, nid, system)
         self._touch(nid)
@@ -1055,6 +1139,7 @@ class FleetSimulator:
         if self.replay is None:
             self._migrate_all_off(node, t)
         node.alive = False
+        self._cands_cache.clear()
         if self._tracer is not None:
             self._tracer.event("node_leave", t, node=node.node_id)
         self._rearm_tuner()
@@ -1064,6 +1149,7 @@ class FleetSimulator:
         if self.recorder is not None:
             self.recorder.node_drain(t, node.node_id)
         node.draining = True
+        self._cands_cache.clear()
         node._invalidate_telemetry()
         if self.replay is None:
             self._migrate_all_off(node, t)

@@ -28,6 +28,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+import numpy as np
+
 from repro.core.costmodel import build_cost_table
 from repro.core.simulator import SchedulerBase, SimResult, Simulator
 from repro.core.types import Accelerator, ModelGraph, Scenario, SYSTEMS
@@ -107,22 +109,32 @@ class FleetNode:
         #: fleet event, since node state only changes through the
         #: invalidation points below (advance/place/evict/swap/phase)
         self._tel_cache: "Optional[NodeTelemetry]" = None
+        #: fleet-installed dirty hook (node_id -> None): fires whenever the
+        #: telemetry memo is invalidated, so the fleet's SoA telemetry
+        #: columns refresh exactly the rows that can have changed
+        self.tel_dirty_hook = None
+        #: id(graph) -> (graph pin, iso_best_s) memo for _iso_best
+        self._iso_cache: dict[int, tuple] = {}
 
     def _invalidate_telemetry(self) -> None:
         self._tel_cache = None
+        if self.tel_dirty_hook is not None:
+            self.tel_dirty_hook(self.node_id)
 
     # ------------------------------------------------------------- clock
     def advance_to(self, t: float) -> None:
-        if self.alive:
-            self.sim.step_until(t)
+        # telemetry is a pure function of processed-event state: when the
+        # clock advance pops no events, every reading (backlog, util span,
+        # merged DLV counters) is unchanged, so the memo stays valid
+        if self.alive and self.sim.step_until(t):
             self._update_recent_dlv()
-            self._tel_cache = None
+            self._invalidate_telemetry()
 
     def _update_recent_dlv(self) -> None:
-        frames = viol = 0
-        for st in self.sim.global_stats.per_model.values():
-            frames += st.frames
-            viol += st.violated
+        # O(1): the simulator keeps running totals over global_stats (the
+        # same integers the old per_model walk summed at every advance)
+        frames = self.sim.merged_frames
+        viol = self.sim.merged_violated
         df = frames - self._dlv_snapshot[0]
         if df > 0:
             self.recent_dlv = (viol - self._dlv_snapshot[1]) / df
@@ -139,7 +151,7 @@ class FleetNode:
         overrides the offered-load weight per spec (the fleet passes the
         stage's trigger probability for standalone cascade stages, keeping
         load telemetry consistent across placement granularities)."""
-        self._tel_cache = None
+        self._invalidate_telemetry()
         for spec in specs:
             self.sim.join_model(spec, t)
         self.placements[key] = list(names)
@@ -186,7 +198,7 @@ class FleetNode:
         self.retrigger_probe()
 
     def _recompute_offered(self) -> None:
-        self._tel_cache = None
+        self._invalidate_telemetry()
         live = {n for names in self.placements.values() for n in names}
         total = 0.0
         for i, spec in enumerate(self.sim.specs):
@@ -209,7 +221,17 @@ class FleetNode:
 
     # -------------------------------------------------------- estimates
     def _iso_best(self, graph: ModelGraph) -> float:
-        return build_cost_table(graph, self.accs_spec).iso_best_s
+        # memoized per node: candidate evaluation asks for the same few
+        # graphs thousands of times; the graph is pinned in the value so
+        # its id cannot be recycled while the entry lives
+        hit = self._iso_cache.get(id(graph))
+        if hit is not None and hit[0] is graph:
+            return hit[1]
+        iso = build_cost_table(graph, self.accs_spec).iso_best_s
+        if len(self._iso_cache) >= 4096:
+            self._iso_cache.clear()
+        self._iso_cache[id(graph)] = (graph, iso)
+        return iso
 
     def stream_cost(self, graphs: list[tuple[ModelGraph, float, float]],
                     head_period_s: float) -> StreamCost:
@@ -230,8 +252,19 @@ class FleetNode:
         if self._tel_cache is not None:
             return self._tel_cache
         sim = self.sim
-        live = [j for j in sim.jobs.values() if not j.done]
-        backlog = sum(j.togo() for j in live)
+        if sim.soa is not None and len(sim.jobs) >= 16:
+            # SoA arm: togo_mean holds exactly Job.togo() per live row in
+            # jid (dict) order, and cumsum accumulates sequentially — the
+            # same left-to-right float64 additions as the scalar sum()
+            # below (the size gate is a pure perf crossover, not semantic)
+            rows = sim.soa.live_rows()
+            n_live = len(rows)
+            backlog = (float(np.cumsum(sim.soa.togo_mean[rows])[-1])
+                       if n_live else 0.0)
+        else:
+            live = [j for j in sim.jobs.values() if not j.done]
+            n_live = len(live)
+            backlog = sum(j.togo() for j in live)
         n_accs = len(sim.accs)
         if sim.windows:
             _, wux, _, _ = sim.windows[-1]
@@ -243,7 +276,7 @@ class FleetNode:
             node_id=self.node_id,
             system=self.system,
             n_accs=n_accs,
-            queue_depth=len(live),
+            queue_depth=n_live,
             active_streams=len(self.placements),
             backlog_s=backlog,
             offered_util=self.offered_s / n_accs,

@@ -66,27 +66,52 @@ class _BatchInputs:
 
     def __init__(self, stream, nodes: Sequence[FleetNode],
                  stage: Optional[int] = None):
-        n = len(nodes)
-        self.ids = np.empty(n, dtype=np.int64)
-        self.iso = np.empty(n)
-        self.offered = np.empty(n)
-        self.urgency = np.empty(n)
-        self.offered_util = np.empty(n)
-        self.n_accs = np.empty(n)
-        self.backlog = np.empty(n)
-        self.dlv = np.empty(n)
-        for i, node in enumerate(nodes):
-            cost = (stream.cost_on(node) if stage is None
-                    else stream.stage_cost_on(node, stage))
-            tel = node.telemetry()
-            self.ids[i] = node.node_id
-            self.iso[i] = cost.iso_s
-            self.offered[i] = cost.offered_s
-            self.urgency[i] = cost.urgency
-            self.offered_util[i] = tel.offered_util
-            self.n_accs[i] = tel.n_accs
-            self.backlog[i] = tel.backlog_s
-            self.dlv[i] = tel.window_dlv
+        cols = getattr(nodes, "tel_columns", None)
+        if cols is not None:
+            # fleet-maintained SoA columns: telemetry rows are already
+            # flat arrays (dirty-refreshed from the same memoized
+            # telemetry() snapshots), and cost columns fill with ONE
+            # cost_on per distinct accelerator mix via the system groups
+            c = cols()
+            n = len(nodes)
+            self.ids = c["ids"]
+            self.offered_util = c["offered_util"]
+            self.n_accs = c["n_accs"]
+            self.backlog = c["backlog"]
+            self.dlv = c["dlv"]
+            self.iso = np.empty(n)
+            self.offered = np.empty(n)
+            self.urgency = np.empty(n)
+            for node, ix in c["groups"]:
+                sc = (stream.cost_on(node) if stage is None
+                      else stream.stage_cost_on(node, stage))
+                self.iso[ix] = sc.iso_s
+                self.offered[ix] = sc.offered_s
+                self.urgency[ix] = sc.urgency
+            return
+        # costs depend only on the node's accelerator mix: resolve each
+        # distinct system once, then map nodes onto the shared StreamCost
+        # (the exact objects the scalar path's memoized cost_on returns)
+        cost_of: dict = {}
+        costs = []
+        for node in nodes:
+            key = (node.system if node.system != "custom"
+                   else ("node", node.node_id))
+            c = cost_of.get(key)
+            if c is None:
+                c = (stream.cost_on(node) if stage is None
+                     else stream.stage_cost_on(node, stage))
+                cost_of[key] = c
+            costs.append(c)
+        tels = [node.telemetry() for node in nodes]
+        self.ids = np.array([node.node_id for node in nodes], dtype=np.int64)
+        self.iso = np.array([c.iso_s for c in costs])
+        self.offered = np.array([c.offered_s for c in costs])
+        self.urgency = np.array([c.urgency for c in costs])
+        self.offered_util = np.array([t.offered_util for t in tels])
+        self.n_accs = np.array([float(t.n_accs) for t in tels])
+        self.backlog = np.array([t.backlog_s for t in tels])
+        self.dlv = np.array([t.window_dlv for t in tels])
 
     def best_iso(self) -> float:
         """``min`` over the iso column — bit-equal to the scalar genexpr

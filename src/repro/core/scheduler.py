@@ -172,6 +172,9 @@ class DreamScheduler(SchedulerBase):
     def _smart_frame_drop(self, sim: Simulator, t: float) -> None:
         """Section 4.2.1: drop the worst (min_to_go/slack) frame meeting all
         four conditions. Triggered at every scheduling decision."""
+        soa = sim.soa
+        if soa is not None and len(sim.jobs) >= self.soa_batch_min:
+            return self._smart_frame_drop_batch(sim, soa, t)
         # condition 2: more than one active job expected to violate
         # (counting stops at two — only the <2 threshold matters)
         nv = 0
@@ -198,6 +201,39 @@ class DreamScheduler(SchedulerBase):
             ratio = mtg / max(slack, 1e-6)
             if best is None or ratio > best[0]:
                 best = (ratio, j)
+        if best is not None:
+            sim.drop_job(best[1], t)
+
+    def _smart_frame_drop_batch(self, sim: Simulator, soa, t: float) -> None:
+        """SoA arm of the frame-drop engine: conditions 1-3 evaluate as
+        elementwise column predicates (identical float64 comparisons to the
+        scalar loop), condition 4 and the strict-> ratio pick run over the
+        surviving candidates in ready order — the same iteration order the
+        scalar arm uses, so the chosen frame matches bit-for-bit."""
+        live = soa.live_rows()              # == sim.jobs iteration order
+        nviol = np.count_nonzero(
+            soa.togo_min[live] > np.maximum(soa.deadline[live] - t, 0.0))
+        if nviol < 2:                        # condition 2
+            return
+        jids = list(sim.ready)
+        if not jids:
+            return
+        rows = np.array([soa.row_of[j] for j in jids], dtype=np.intp)
+        slack = soa.deadline[rows] - t
+        mtg = soa.togo_min[rows]
+        cand = np.flatnonzero((mtg > np.maximum(slack, 0.0))   # condition 1
+                              & soa.is_tail[rows])             # condition 3
+        if not len(cand):
+            return
+        ratio = mtg[cand] / np.maximum(slack[cand], 1e-6)
+        best: tuple[float, Job] | None = None
+        for i, ci in enumerate(cand):
+            j = sim.ready[jids[ci]]
+            if not sim.can_drop(j.base_name):                  # condition 4
+                continue
+            r = float(ratio[i])
+            if best is None or r > best[0]:
+                best = (r, j)
         if best is not None:
             sim.drop_job(best[1], t)
 
@@ -235,6 +271,12 @@ class DreamScheduler(SchedulerBase):
     #: the fast path replicates its arithmetic operation-for-operation and
     #: must stay bit-identical (see tests/test_vectorized_equiv.py).
     fast_path = True
+    #: Ready-set size at which the fast path switches from the per-job
+    #: scalar loop to the SoA batch arm (one (jobs, idle-accs) score matrix
+    #: off the simulator's JobTable columns).  Both arms are bit-identical,
+    #: so this is a pure performance knob — tests pin it to 1 to force
+    #: batch coverage on small scenarios.
+    soa_batch_min = 8
 
     def schedule(self, sim: Simulator, t: float) -> Optional[Dispatch]:
         if not self.fast_path:
@@ -255,6 +297,12 @@ class DreamScheduler(SchedulerBase):
                 self._maybe_switch_variant(sim, job, t)
             return Dispatch(job=job, acc_idx=idle_idx[0],
                             n_layers=self._block_len(job, idle_idx[0]))
+        if sim.soa is not None and len(ready) >= self.soa_batch_min:
+            job, acc_idx = self._schedule_batch(sim, ready, idle_idx, t)
+            if self.supernet and not job.variant_locked:
+                self._maybe_switch_variant(sim, job, t)
+            return Dispatch(job=job, acc_idx=acc_idx,
+                            n_layers=self._block_len(job, acc_idx))
         accs = sim.accs
         prev_out = [a.prev_out_bytes for a in accs]
         prev_base = [a.prev_base for a in accs]
@@ -264,7 +312,7 @@ class DreamScheduler(SchedulerBase):
         best: Optional[tuple[Job, int]] = None
         for job in ready.values():
             pos = job.pos
-            nxt = job.path[pos]
+            nxt = job.path_list[pos]
             ft = _fast_table(job.table)
             # ToGo memo: pos only moves at dispatch boundaries, while the
             # reference recomputes the same pairwise numpy suffix sum on
@@ -312,6 +360,51 @@ class DreamScheduler(SchedulerBase):
         return Dispatch(job=job, acc_idx=acc_idx,
                         n_layers=self._block_len(job, acc_idx))
 
+    def _schedule_batch(self, sim: Simulator, ready: dict, idle_idx: list,
+                        t: float) -> tuple[Job, int]:
+        """SoA batch arm: score every (ready job, idle accelerator) pair in
+        one elementwise matrix pass over the simulator's JobTable columns.
+
+        Bit-identity with the scalar loop holds term by term: each numpy
+        op is the same IEEE float64 op the scalar expression applies to the
+        same value, grouped identically; and the flattened row-major
+        argmax (first occurrence of the max) equals the scalar two-level
+        strict-> selection — first job reaching the global max, first
+        accelerator reaching that job's max."""
+        soa = sim.soa
+        jids = list(ready)
+        rows = np.array([soa.row_of[j] for j in jids], dtype=np.intp)
+        for i in np.flatnonzero(soa.cost_stale[rows]):
+            sim._soa_cost_refresh(ready[jids[i]], int(rows[i]))
+        k = np.array(idle_idx, dtype=np.intp)
+        slack = soa.deadline[rows] - t
+        tight = slack <= _EPS_SLACK
+        urgency = np.where(
+            tight, 0.0,
+            np.minimum(soa.togo_sched[rows] / np.where(tight, 1.0, slack),
+                       URGENCY_MAX))
+        a_starv = self.params.alpha * np.minimum(
+            np.maximum(t - soa.t_cmpl[rows], 0.0) / soa.lat_mean_n[rows],
+            STARV_MAX)
+        lat_g = soa.lat_n[rows[:, None], k[None, :]]
+        en_g = soa.en_n[rows[:, None], k[None, :]]
+        accs = sim.accs
+        prev_out = np.array([accs[ai].prev_out_bytes for ai in idle_idx])
+        prev_ids = np.array([accs[ai].prev_base_id for ai in idle_idx],
+                            dtype=np.int64)
+        cost_switch = np.where(
+            soa.base_id[rows][:, None] == prev_ids[None, :],
+            0.0,
+            np.minimum((soa.in_b_n[rows][:, None] + prev_out[None, :])
+                       * E_DRAM / en_g, CSWITCH_MAX))
+        s = (urgency[:, None] * (soa.lat_sum_n[rows][:, None] / lat_g)
+             + a_starv[:, None]
+             + self.params.beta * (soa.en_sum_n[rows][:, None] / en_g
+                                   - cost_switch))
+        flat = int(np.argmax(s))
+        nk = len(idle_idx)
+        return ready[jids[flat // nk]], idle_idx[flat % nk]
+
     def schedule_reference(self, sim: Simulator, t: float) -> Optional[Dispatch]:
         """Original vector-per-job dispatch via :func:`mapscore` — retained
         as the bit-identity oracle for the scalar fast path above."""
@@ -354,7 +447,7 @@ class DreamScheduler(SchedulerBase):
         """Affinity-run blocking via the fast-table row (``lat.min(axis=0)``
         over gathered columns equals a ``lat_min`` gather element-wise, so
         this matches :meth:`_block_len_reference` bit-for-bit)."""
-        path = job.path
+        path = job.path_list
         pos = job.pos
         ft = _fast_table(job.table)
         row = ft.lat[acc_idx]

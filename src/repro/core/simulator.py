@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from bisect import insort
 from collections import deque
 from dataclasses import dataclass, replace
 from typing import Callable, Optional
@@ -71,6 +72,82 @@ def _py_rows(table: CostTable) -> tuple:
     return entry
 
 
+class JobTable:
+    """Structure-of-arrays mirror of the live job set (the slab core's
+    substrate).  One row per live :class:`Job`, appended in jid order and
+    tombstoned on finish, so ``alive`` rows always enumerate the job dict's
+    iteration order.  Columns hold exactly the float64 values the scalar
+    hot paths read off the Job object — ``togo_mean``/``togo_min`` are the
+    sequential suffix-cumsum reads (``Job.togo()``/``min_togo()``) while
+    ``togo_sched`` is the *pairwise* ``togo_seconds`` sum the scheduler
+    scores with; the two differ in the last bits and must never be merged
+    (see docs/performance.md).  ``lat_n``/``en_n`` cache the next layer's
+    per-accelerator cost rows so a batched MapScore pass is two fancy
+    gathers instead of a Python loop.
+
+    Maintenance is eager at every point ``pos``/``deadline``/``path`` can
+    move (create, block completion, variant switch, inject anchor, finish,
+    purge); compaction runs when tombstones outnumber live rows, preserving
+    relative (jid) order.
+    """
+
+    __slots__ = ("cap", "n", "dead", "n_accs", "row_of", "jid", "arrival",
+                 "deadline", "t_cmpl", "energy", "pos", "togo_mean",
+                 "togo_min", "togo_sched", "lat_sum_n", "en_sum_n", "in_b_n",
+                 "lat_mean_n", "base_id", "is_tail", "alive", "cost_stale",
+                 "lat_n", "en_n")
+
+    _F8 = ("arrival", "deadline", "t_cmpl", "energy", "togo_mean",
+           "togo_min", "togo_sched", "lat_sum_n", "en_sum_n", "in_b_n",
+           "lat_mean_n")
+
+    def __init__(self, n_accs: int, cap: int = 64):
+        self.cap = cap
+        self.n = 0              # rows in use (live + tombstones)
+        self.dead = 0
+        self.n_accs = n_accs
+        self.row_of: dict[int, int] = {}
+        self.jid = np.zeros(cap, np.int64)
+        self.pos = np.zeros(cap, np.int64)
+        self.base_id = np.zeros(cap, np.int64)
+        self.is_tail = np.zeros(cap, bool)
+        self.alive = np.zeros(cap, bool)
+        #: next-layer cost columns below are refreshed lazily (the batch
+        #: scheduler arm is their only reader): True = row's lat_sum_n /
+        #: en_sum_n / in_b_n / lat_mean_n / lat_n / en_n lag job.pos
+        self.cost_stale = np.zeros(cap, bool)
+        for name in self._F8:
+            setattr(self, name, np.zeros(cap))
+        self.lat_n = np.zeros((cap, n_accs))
+        self.en_n = np.zeros((cap, n_accs))
+
+    def grow(self) -> None:
+        self.cap *= 2
+        for name in ("jid", "pos", "base_id", "is_tail", "alive",
+                     "cost_stale", *self._F8, "lat_n", "en_n"):
+            old = getattr(self, name)
+            new = np.zeros((self.cap,) + old.shape[1:], old.dtype)
+            new[: self.n] = old[: self.n]
+            setattr(self, name, new)
+
+    def live_rows(self) -> np.ndarray:
+        """Row indices of live jobs, ascending — i.e. jid/dict order."""
+        return np.flatnonzero(self.alive[: self.n])
+
+    def compact(self) -> None:
+        keep = self.live_rows()
+        m = len(keep)
+        for name in ("jid", "pos", "base_id", "is_tail", "cost_stale",
+                     *self._F8, "lat_n", "en_n"):
+            arr = getattr(self, name)
+            arr[:m] = arr[keep]
+        self.alive[:m] = True
+        self.alive[m: self.n] = False
+        self.n = m
+        self.dead = 0
+        self.row_of = {int(j): i for i, j in enumerate(self.jid[:m])}
+
+
 @dataclass
 class Job:
     """One inference request (a frame of one model) — the paper's 'task'."""
@@ -83,6 +160,7 @@ class Job:
     path: np.ndarray            # sampled layer indices
     cum_mean: np.ndarray        # suffix sums of lat_mean over path (ToGo)
     cum_min: np.ndarray         # suffix sums of lat_min over path (min_to_go)
+    path_list: list             # path.tolist() — dispatch-loop fast view
     arrival: float
     deadline: float
     #: pipeline origin: the head frame's arrival time, inherited down the
@@ -125,6 +203,7 @@ class AccState:
     busy_until: float = 0.0
     cur_job: Optional[Job] = None
     prev_base: Optional[str] = None   # base model name of last executed job
+    prev_base_id: int = -1            # its interned id (SoA batch arm key)
     prev_out_bytes: float = 0.0       # its last layer's activation bytes
     busy_time: float = 0.0            # cumulative, for utilization reporting
 
@@ -179,6 +258,16 @@ class SimResult:
 
 
 class Simulator:
+    #: Structure-of-arrays slab-stepping toggle.  When on, the engine
+    #: mirrors every live job into a flat :class:`JobTable` and
+    #: ``step_until`` advances in *time slabs*: between the boundaries an
+    #: external observer can see (the fleet clock's interleave points,
+    #: window/phase/arrival events), block completions bypass the global
+    #: event heap through a slab-local done lane and job state lands in
+    #: flat arrays.  Bit-identical to the scalar per-event oracle by
+    #: construction (tests/test_vectorized_equiv.py flips this flag).
+    soa_slab = True
+
     def __init__(
         self,
         scenario: Scenario,
@@ -243,6 +332,16 @@ class Simulator:
             for s in self.specs
         }
         self.accs = [AccState(i, a) for i, a in enumerate(self.accs_spec)]
+        #: SoA job mirror (None when the scalar oracle path is active)
+        self.soa: Optional[JobTable] = (
+            JobTable(len(self.accs)) if self.soa_slab else None)
+        #: base-name intern table shared with the scheduler batch arm
+        self._base_ids: dict[str, int] = {}
+        #: slab done lane: while a slab is open, _dispatch routes DONE
+        #: events here (sorted (t, seq, acc_idx) triples) instead of the
+        #: global heap; flushed back on slab exit so peek_t() is unchanged
+        self._slab_sink: Optional[list] = None
+        self._slab_dones: list[tuple[float, int, int]] = []
         self.events: list[tuple[float, int, int, object]] = []
         self._seq = itertools.count()
         self.t = 0.0
@@ -252,6 +351,11 @@ class Simulator:
 
         self.global_stats = WindowStats()
         self.window_stats = WindowStats()
+        #: running (frames, violated) totals over global_stats — updated at
+        #: each window merge so fleet DLV telemetry reads O(1) counters
+        #: instead of walking per_model every node advance
+        self.merged_frames = 0
+        self.merged_violated = 0
         self.windows: list[tuple[float, float, float, float]] = []
         self.variant_counts: dict[str, int] = {}
         # stream-level variant pins (SLO graceful degradation): model name ->
@@ -533,6 +637,8 @@ class Simulator:
             j.done = True
             self.ready.pop(j.jid, None)
             self.jobs.pop(j.jid, None)
+            if self.soa is not None:
+                self._soa_kill(j.jid)
             if self._tracer is not None:
                 self._uid_of.pop(j.jid, None)
                 span = self._span_of.pop(j.jid, None)
@@ -570,6 +676,73 @@ class Simulator:
         self._push(t, INJECT, (self._index_of(name), deadline_anchor, origin,
                                parent_uid, xfer_s))
 
+    # ----------------------------------------------------- SoA job mirror
+    def _soa_append(self, job: Job) -> None:
+        soa = self.soa
+        row = soa.n
+        if row == soa.cap:
+            soa.grow()
+        soa.jid[row] = job.jid
+        soa.arrival[row] = job.arrival
+        soa.deadline[row] = job.deadline
+        soa.t_cmpl[row] = job.t_cmpl
+        soa.energy[row] = 0.0
+        soa.base_id[row] = self._base_ids.setdefault(job.base_name,
+                                                     len(self._base_ids))
+        soa.is_tail[row] = job.is_tail
+        soa.alive[row] = True
+        soa.row_of[job.jid] = row
+        soa.n = row + 1
+        self._soa_refresh(job, row)
+
+    def _soa_refresh(self, job: Job, row: int) -> None:
+        """Re-derive the pos/path-dependent columns of ``row`` — called
+        exactly when ``job.pos`` moves (block completion) or the path and
+        table change under it (supernet/SLO variant switch).  The
+        next-layer cost columns are only flagged stale here; the batch
+        scheduler arm (their sole reader) refreshes them on demand via
+        :meth:`_soa_cost_refresh`."""
+        soa = self.soa
+        pos = job.pos
+        tab = job.table
+        soa.pos[row] = pos
+        soa.togo_mean[row] = job.cum_mean[pos]
+        soa.togo_min[row] = job.cum_min[pos]
+        soa.energy[row] = job.energy_used
+        soa.cost_stale[row] = True
+        # the scheduler scores with the *pairwise* remaining-path sum
+        # (mapscore.togo_seconds), not the sequential suffix cumsum above —
+        # compute it here and seed the per-job memo so the scalar arm
+        # never recomputes it
+        togo = float(tab.lat_mean[job.path[pos:]].sum())
+        soa.togo_sched[row] = togo
+        job._togo_at = (pos, id(tab))      # type: ignore[attr-defined]
+        job._togo_v = togo                 # type: ignore[attr-defined]
+
+    def _soa_cost_refresh(self, job: Job, row: int) -> None:
+        """Bring ``row``'s next-layer cost columns up to date with
+        ``job.pos`` (lazy half of :meth:`_soa_refresh`)."""
+        soa = self.soa
+        tab = job.table
+        nxt = int(job.path[job.pos])
+        soa.lat_sum_n[row] = tab.lat_sum[nxt]
+        soa.en_sum_n[row] = tab.en_sum[nxt]
+        soa.in_b_n[row] = tab.in_bytes[nxt]
+        soa.lat_mean_n[row] = tab.lat_mean[nxt]
+        soa.lat_n[row] = tab.lat[:, nxt]
+        soa.en_n[row] = tab.en[:, nxt]
+        soa.cost_stale[row] = False
+
+    def _soa_kill(self, jid: int) -> None:
+        soa = self.soa
+        row = soa.row_of.pop(jid, None)
+        if row is None:
+            return
+        soa.alive[row] = False
+        soa.dead += 1
+        if soa.dead > 16 and soa.dead > soa.n - soa.dead:
+            soa.compact()
+
     # --------------------------------------------------------------- jobs
     def _create_job(self, model_idx: int, t: float,
                     origin: Optional[float] = None,
@@ -590,6 +763,7 @@ class Simulator:
             graph_name=graph.name,
             table=table,
             path=path,
+            path_list=path.tolist(),
             cum_mean=cum_mean,
             cum_min=cum_min,
             arrival=t,
@@ -605,6 +779,8 @@ class Simulator:
             self._stale_heap,
             (job.deadline + self.stale_periods
              * self.specs[model_idx].period_s, job.jid))
+        if self.soa is not None:
+            self._soa_append(job)       # variant override refreshes below
         override = self._variant_override.get(graph.name)
         if override is not None:
             # SLO degradation pin: every frame of this stream starts on the
@@ -656,10 +832,17 @@ class Simulator:
         job.graph_name = variant.name
         job.table = table
         job.path = path
+        job.path_list = path.tolist()
         job.cum_mean = np.concatenate([np.cumsum(lat_mean[::-1])[::-1], [0.0]])
         job.cum_min = np.concatenate([np.cumsum(lat_min[::-1])[::-1], [0.0]])
+        if self.soa is not None:
+            row = self.soa.row_of.get(job.jid)
+            if row is not None:
+                self._soa_refresh(job, row)
 
     def _finish_job(self, job: Job, t: float, dropped: bool) -> None:
+        if self.soa is not None:
+            self._soa_kill(job.jid)
         job.done = True
         job.dropped = dropped
         self.ready.pop(job.jid, None)
@@ -756,12 +939,13 @@ class Simulator:
         job, acc = d.job, self.accs[d.acc_idx]
         assert not acc.busy and not job.running and not job.finished_exec
         n = min(d.n_layers, job.n_layers - job.pos)
-        layers = job.path[job.pos: job.pos + n]
         if n < 8:
             # numpy reduces sequentially below 8 elements (pairwise blocking
             # starts at 8), so this scalar loop is bit-identical to
             # table.lat[acc.idx, layers].sum() — and skips two fancy-index
-            # array allocations per dispatch
+            # array allocations per dispatch (path_list keeps the loop on
+            # plain ints instead of numpy scalars)
+            layers = job.path_list[job.pos: job.pos + n]
             rows = _py_rows(job.table)
             lrow = rows[1][acc.idx]
             erow = rows[2][acc.idx]
@@ -774,6 +958,7 @@ class Simulator:
                 energy += (rows[3][layers[0]] + acc.prev_out_bytes) * E_DRAM
                 dur += self.cs_latency_s
         else:
+            layers = job.path[job.pos: job.pos + n]
             dur = float(job.table.lat[acc.idx, layers].sum())
             energy = float(job.table.en[acc.idx, layers].sum())
             if acc.prev_base is not None and acc.prev_base != job.base_name:
@@ -801,7 +986,14 @@ class Simulator:
         acc.cur_job = job
         acc.busy_until = t + reserve
         acc.busy_time += reserve
-        self._push(t + reserve, DONE, acc.idx)
+        sink = self._slab_sink
+        if sink is None:
+            self._push(t + reserve, DONE, acc.idx)
+        else:
+            # slab done lane: same (t, seq) total order as the heap, but a
+            # sorted insert into a <= n_accs entry list instead of a push
+            # onto the full event heap
+            insort(sink, (t + reserve, next(self._seq), acc.idx))
 
     def _complete(self, acc_idx: int, t: float) -> None:
         acc = self.accs[acc_idx]
@@ -809,18 +1001,25 @@ class Simulator:
         assert job is not None
         n = job._pending_n  # type: ignore[attr-defined]
         done_at = min(job._pending_done_at, t)  # type: ignore[attr-defined]
-        last_layer = int(job.path[job.pos + n - 1])
+        last_layer = job.path_list[job.pos + n - 1]
         job.pos += n
         job.t_cmpl = done_at
         job.running = False
         acc.busy = False
         acc.cur_job = None
         acc.prev_base = job.base_name
-        acc.prev_out_bytes = float(job.table.out_bytes[last_layer])
+        acc.prev_out_bytes = _py_rows(job.table)[4][last_layer]
+        soa = self.soa
+        if soa is not None:
+            acc.prev_base_id = self._base_ids[job.base_name]
         if job.finished_exec:
             self._finish_job(job, done_at, dropped=False)
         else:
             self.ready[job.jid] = job
+            if soa is not None:
+                row = soa.row_of[job.jid]
+                soa.t_cmpl[row] = done_at
+                self._soa_refresh(job, row)
 
     # --------------------------------------------------------------- run
     def idle_accs(self) -> list[AccState]:
@@ -884,13 +1083,80 @@ class Simulator:
             prof.add("node.drain", w0)
         return True
 
-    def step_until(self, t_limit: float) -> None:
+    def step_until(self, t_limit: float) -> int:
         """Process every event with time <= min(t_limit, duration_s).  The
         fleet clock interleaves nodes by advancing each to the next fleet
-        event time before applying it."""
+        event time before applying it.  Returns the number of events
+        processed (0 = observable state unchanged).
+
+        With ``soa_slab`` on, the whole span is one *time slab*: the limit
+        is by construction the next point an external observer (fleet
+        clock, router, trigger forwarding) can read node state, so inside
+        it block completions cycle through the slab done lane without
+        touching the global heap, and job state moves through the flat
+        :class:`JobTable` columns.  The slab drains fully before
+        returning — boundaries are exactly the scalar oracle's."""
         lim = min(t_limit, self.duration_s)
+        if self.soa_slab:
+            return self._slab_until(lim)
+        n = 0
         while self.events and self.events[0][0] <= lim:
             self.step()
+            n += 1
+        return n
+
+    def _slab_until(self, lim: float) -> int:
+        """One time slab: merge the global heap with the slab done lane by
+        (t, seq) — seq is globally unique, so the merged order is exactly
+        the single-heap order of the scalar path — and run the same
+        process/drain cycle per event, metering identically."""
+        events = self.events
+        dones = self._slab_dones
+        prof = self._profiler
+        n = 0
+        try:
+            self._slab_sink = dones
+            while True:
+                if dones:
+                    dt, dseq, dacc = dones[0]
+                    if events and events[0][:2] < (dt, dseq):
+                        if events[0][0] > lim:
+                            break
+                        t, _, kind, arg = heapq.heappop(events)
+                    else:
+                        if dt > lim:
+                            break
+                        del dones[0]
+                        t, kind, arg = dt, DONE, dacc
+                elif events and events[0][0] <= lim:
+                    t, _, kind, arg = heapq.heappop(events)
+                else:
+                    break
+                self.t = t
+                if prof is None:
+                    if kind == DONE:
+                        self._complete(arg, t)  # type: ignore[arg-type]
+                    else:
+                        self._process_event(t, kind, arg)
+                    self._drain_schedule(t)
+                else:
+                    w0 = prof.t0()
+                    if kind == DONE:
+                        self._complete(arg, t)  # type: ignore[arg-type]
+                    else:
+                        self._process_event(t, kind, arg)
+                    prof.add("node." + _EVENT_NAMES[kind], w0)
+                    w0 = prof.t0()
+                    self._drain_schedule(t)
+                    prof.add("node.drain", w0)
+                n += 1
+        finally:
+            self._slab_sink = None
+            if dones:
+                for dt, dseq, dacc in dones:
+                    heapq.heappush(events, (dt, dseq, DONE, dacc))
+                dones.clear()
+        return n
 
     def _process_event(self, t: float, kind: int, arg: object) -> None:
         if kind == ARRIVAL:
@@ -909,6 +1175,9 @@ class Simulator:
                 if anchor is not None:
                     name = self.specs[idx].model.name
                     job.deadline = anchor + self.deadlines[name]
+                    if self.soa is not None:
+                        self.soa.deadline[self.soa.row_of[job.jid]] = \
+                            job.deadline
                     # the anchored deadline is earlier than the create-time
                     # one _create_job armed (anchor <= t), so re-arm the
                     # stale entry or the abort would fire late
@@ -925,17 +1194,25 @@ class Simulator:
             a, b = self._current_params()
             self.windows.append((t, uxc, a, b))
             self.scheduler.on_window(self, self.window_stats, uxc)
+            for st in self.window_stats.per_model.values():
+                self.merged_frames += st.frames
+                self.merged_violated += st.violated
             self.global_stats.merge(self.window_stats)
             self.window_stats = WindowStats()
             self._push(t + self.window_s, WINDOW, None)
 
     def run(self) -> SimResult:
         self.start()
-        while self.step():
-            pass
+        # equivalent to `while self.step(): pass` — both drain every event
+        # with t <= duration_s — but routed through step_until so the SoA
+        # path runs the whole horizon as slabs
+        self.step_until(self.duration_s)
         return self.finalize()
 
     def finalize(self) -> SimResult:
+        for st in self.window_stats.per_model.values():
+            self.merged_frames += st.frames
+            self.merged_violated += st.violated
         self.global_stats.merge(self.window_stats)
         self.window_stats = WindowStats()  # idempotent wrt. a second call
         if self.recorder is not None:

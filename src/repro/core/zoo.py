@@ -9,6 +9,8 @@ Once-for-All Supernet variants) are attached per Section 2.2.
 """
 from __future__ import annotations
 
+from dataclasses import replace as _dc_replace
+
 from .types import Layer, ModelGraph, OpType
 
 
@@ -335,3 +337,62 @@ ZOO_BUILDERS = {
     "gnmt": gnmt,
     "ofa": ofa_supernet,
 }
+
+
+# ---------------------------------------------------------------------------
+# Memoized builds
+# ---------------------------------------------------------------------------
+# Placement-time cost estimation rebuilds the same architecture thousands of
+# times under per-stream instance names.  The cost-table fast cache
+# (costmodel._FAST_TABLE_CACHE) is keyed by the *identity* of the frozen
+# ``layers`` tuple, so every fresh build used to fall through to a structural
+# hash over hundreds of Layer dataclasses.  Cache one graph per
+# (builder, kwargs) and rename via ``dataclasses.replace`` — the layers
+# tuple keeps a single identity fleet-wide, and only the top-level (and
+# ``{name}@vK`` variant) name strings differ between instances.
+
+_BUILD_CACHE: dict = {}
+_RELABEL_CACHE: dict = {}
+_RELABEL_MAX = 65536
+
+
+def _relabel(g: ModelGraph, name: str) -> ModelGraph:
+    """Rename ``g`` (and its ``{old}@vK`` variant prefixes) without touching
+    structure; layer tuples are shared with the donor graph."""
+    old = g.name
+    variants = tuple(
+        _dc_replace(v, name=name + v.name[len(old):])
+        if v.name.startswith(old) else v
+        for v in g.variants)
+    return _dc_replace(g, name=name, variants=variants)
+
+
+def build_cached(builder: str, name: str | None = None,
+                 kwargs: dict | None = None) -> ModelGraph:
+    """``ZOO_BUILDERS[builder](**kwargs, name=name)`` with structure sharing.
+
+    Graphs are immutable, and no builder lets ``name`` influence layer
+    shapes, so two builds differing only in ``name`` may share every layer.
+    Unhashable kwarg values fall back to a direct (uncached) build.
+    """
+    fn = ZOO_BUILDERS[builder]
+    kw = dict(kwargs or {})
+    kw.pop("name", None)
+    try:
+        key = (builder, tuple(sorted(kw.items())))
+    except TypeError:                        # unhashable kwarg value
+        if name is not None:
+            kw["name"] = name
+        return fn(**kw)
+    g = _BUILD_CACHE.get(key)
+    if g is None:
+        g = _BUILD_CACHE[key] = fn(**kw)
+    if name is None or name == g.name:
+        return g
+    rk = (id(g), name)
+    rg = _RELABEL_CACHE.get(rk)
+    if rg is None:
+        if len(_RELABEL_CACHE) >= _RELABEL_MAX:
+            _RELABEL_CACHE.clear()
+        rg = _RELABEL_CACHE[rk] = _relabel(g, name)
+    return rg

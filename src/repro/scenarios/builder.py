@@ -52,14 +52,12 @@ class ModelRef:
     kwargs: dict = field(default_factory=dict)
 
     def build(self) -> ModelGraph:
-        try:
-            fn = zoo.ZOO_BUILDERS[self.builder]
-        except KeyError:
-            raise ScenarioError(f"unknown zoo builder: {self.builder!r}") from None
-        kw = dict(self.kwargs)
-        if self.name is not None:
-            kw["name"] = self.name
-        return fn(**kw)
+        if self.builder not in zoo.ZOO_BUILDERS:
+            raise ScenarioError(f"unknown zoo builder: {self.builder!r}")
+        # Memoized: one structural build per (builder, kwargs), renamed via
+        # dataclasses.replace so the frozen layers tuple keeps one identity
+        # fleet-wide (that identity is the costmodel fast-cache key).
+        return zoo.build_cached(self.builder, self.name, self.kwargs)
 
     def to_config(self) -> dict:
         return {"builder": self.builder, "name": self.name,

@@ -30,6 +30,7 @@ from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
 from repro.cluster import trace as ftrace
 from repro.cluster.router import ScoreDrivenRouter
 from repro.core.scheduler import DreamScheduler
+from repro.core.simulator import Simulator
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -131,6 +132,7 @@ def force_scalar(monkeypatch) -> None:
     monkeypatch.setattr(ScoreDrivenRouter, "vectorized", False)
     monkeypatch.setattr(DreamScheduler, "fast_path", False)
     monkeypatch.setattr(FleetSimulator, "lazy_peek", False)
+    monkeypatch.setattr(Simulator, "soa_slab", False)
 
 
 KINDS = ("whole", "split", "slo", "lifecycle", "tuned")
@@ -152,6 +154,110 @@ def test_vectorized_matches_scalar_across_seeds(seed, monkeypatch):
         force_scalar(m)
         ref = run_fingerprint("lifecycle", seed=seed)
     assert vec == ref
+
+
+# --------------------------------------------------------------- SoA slab
+# PR 9's structure-of-arrays simulation core: the per-node inner loop
+# advances in time slabs over a flat JobTable instead of per-frame Python
+# events.  The scalar per-event engine stays alive as the oracle behind
+# ``Simulator.soa_slab``; these arms isolate that one flag (the other fast
+# paths stay on) so a slab-core diff cannot hide behind the router/clock
+# oracles.
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_soa_slab_matches_scalar_isolated(kind, monkeypatch):
+    vec = run_fingerprint(kind, seed=11)
+    with monkeypatch.context() as m:
+        m.setattr(Simulator, "soa_slab", False)
+        ref = run_fingerprint(kind, seed=11)
+    assert vec == ref
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_soa_batch_arm_forced(kind, monkeypatch):
+    """Small scenarios rarely reach the batch arm's ready-set threshold;
+    pinning it to 1 forces every scheduling decision and frame-drop scan
+    through the SoA matrix path, which must be bit-identical too."""
+    base = run_fingerprint(kind, seed=3)
+    with monkeypatch.context() as m:
+        m.setattr(DreamScheduler, "soa_batch_min", 1)
+        forced = run_fingerprint(kind, seed=3)
+    assert base == forced
+
+
+def _node_fingerprint(r) -> tuple:
+    return (r.uxcost, r.frames, r.drops, r.aborts, r.dlv_rate,
+            r.norm_energy, tuple(r.acc_utilization), tuple(r.windows),
+            tuple(sorted(r.variant_counts.items())), r.pipeline_latency_s)
+
+
+def _drive_slabs(monkeypatch, soa: bool, scenario_name: str,
+                 actions) -> tuple:
+    """Drive one single-node Simulator through explicit step_until slabs,
+    applying ``actions`` (t, fn) at slab boundaries, and fingerprint it."""
+    from repro.core import build_scenario, dream_full
+    with monkeypatch.context() as m:
+        m.setattr(Simulator, "soa_slab", soa)
+        sim = Simulator(build_scenario(scenario_name, 0.8), "4K_1WS2OS",
+                        dream_full(), duration_s=1.0, seed=2)
+        sim.start()
+        for t, fn in actions:
+            sim.step_until(t)
+            fn(sim, t)
+        sim.step_until(sim.duration_s)
+        return _node_fingerprint(sim.finalize())
+
+
+@pytest.mark.parametrize("soa", (True, False))
+def test_slab_boundary_depart(monkeypatch, soa):
+    """A stream departure (leave + purge) lands between two slabs cut at
+    an arbitrary non-event time — the slab core must flush its done lane
+    and observe the purge exactly as the per-event oracle does."""
+    def depart(sim, t):
+        name = sim.specs[0].model.name
+        sim.leave_model(name, t)
+        sim.purge_model(name)
+    fps = [_drive_slabs(monkeypatch, s, "AR_Social", [(0.347, depart)])
+           for s in (soa, False)]
+    assert fps[0] == fps[1]
+
+
+@pytest.mark.parametrize("soa", (True, False))
+def test_slab_boundary_swap_variant(monkeypatch, soa):
+    """An SLO degradation pin (swap_variant) applied mid-run: every job
+    created in later slabs starts on the pinned variant, identically on
+    both engines."""
+    def swap(sim, t):
+        sim.swap_variant("ctx_ofa", 1, t)
+    fps = [_drive_slabs(monkeypatch, s, "VR_Gaming",
+                        [(0.283, swap), (0.75, lambda sim, t:
+                          sim.swap_variant("ctx_ofa", 0, t))])
+           for s in (soa, False)]
+    assert fps[0] == fps[1]
+
+
+def test_zero_length_slab(monkeypatch):
+    """Repeated zero-length slabs (advancing to the current time) process
+    nothing, leave the external event surface (peek_t) unchanged, and
+    leave no residue in the slab done lane."""
+    from repro.core import build_scenario, dream_full
+    with monkeypatch.context() as m:
+        m.setattr(Simulator, "soa_slab", True)
+        sim = Simulator(build_scenario("AR_Social", 0.8), "4K_1WS2OS",
+                        dream_full(), duration_s=1.0, seed=2)
+        sim.start()
+        assert sim.step_until(0.4) > 0
+        peek = sim.peek_t()
+        for _ in range(3):
+            assert sim.step_until(0.4) == 0         # zero-length slab
+            assert sim.peek_t() == peek
+            assert sim._slab_dones == []            # lane fully flushed
+        # every in-flight completion is visible on the heap between slabs
+        busy = sum(a.busy for a in sim.accs)
+        dones = sum(1 for e in sim.events if e[2] == 1)  # DONE kind
+        assert dones == busy
+        sim.step_until(sim.duration_s)
+        assert _node_fingerprint(sim.finalize())
 
 
 class _SelfCheckingRouter(ScoreDrivenRouter):
@@ -205,15 +311,16 @@ if HAVE_HYPOTHESIS:
         flag flips inline — hypothesis reuses one test invocation.)"""
         vec = run_fingerprint(kind, seed)
         orig = (ScoreDrivenRouter.vectorized, DreamScheduler.fast_path,
-                FleetSimulator.lazy_peek)
+                FleetSimulator.lazy_peek, Simulator.soa_slab)
         ScoreDrivenRouter.vectorized = False
         DreamScheduler.fast_path = False
         FleetSimulator.lazy_peek = False
+        Simulator.soa_slab = False
         try:
             ref = run_fingerprint(kind, seed)
         finally:
             (ScoreDrivenRouter.vectorized, DreamScheduler.fast_path,
-             FleetSimulator.lazy_peek) = orig
+             FleetSimulator.lazy_peek, Simulator.soa_slab) = orig
         assert vec == ref
 else:                                                  # pragma: no cover
     @pytest.mark.skip(reason="hypothesis not installed (optional dep)")
