@@ -47,9 +47,11 @@ The headline claims, asserted by ``main()`` and the CI gate:
 """
 from __future__ import annotations
 
-from repro.cluster import (FleetScenario, FleetScenarioBuilder,
-                           FleetSimulator, TransferModel)
+from repro.cluster import (CascadeFuzz, FleetScenario,
+                           FleetScenarioBuilder, FleetSimulator, FuzzSpec,
+                           GenAIFuzz, LifecycleFuzz, SLOFuzz, TransferModel)
 from repro.cluster import trace as ftrace
+from repro.cluster.router import ScoreDrivenRouter
 from repro.scenarios.phases import scale_fps
 
 from .common import save_artifact
@@ -77,8 +79,9 @@ def build_fleet(seed: int, n_nodes: int, n_streams: int,
         b.node(SYSTEMS_MIX[n_nodes % len(SYSTEMS_MIX)],
                at=round(0.4 * duration_s, 6))
         b.node_drain(nids[0], at=round(0.5 * duration_s, 6))
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0,
-                   t1=round(0.5 * duration_s, 6), fps_scale=FPS_SCALE)
+    b.fuzz_streams(FuzzSpec(n_streams=n_streams, seed=seed, t0=0.0,
+                            t1=round(0.5 * duration_s, 6),
+                            fps_scale=FPS_SCALE))
     return b.build()
 
 
@@ -103,11 +106,11 @@ def build_cascade_fleet(seed: int, n_nodes: int, n_streams: int,
     # deterministic arrivals pin the offered workload so the whole-vs-split
     # comparison (and the counter-based cascade draws) see identical load
     # regardless of placement
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0,
-                   t1=round(0.5 * duration_s, 6),
-                   fps_scale=CASCADE_FPS_SCALE,
-                   cascade_prob=1.0, max_depth=3, cascades_only=True,
-                   deterministic_arrivals=True)
+    b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0,
+        t1=round(0.5 * duration_s, 6), fps_scale=CASCADE_FPS_SCALE,
+        deterministic_arrivals=True,
+        cascade=CascadeFuzz(prob=1.0, max_depth=3, only=True)))
     return b.build()
 
 
@@ -197,10 +200,10 @@ def build_drift_fleet(seed: int, n_nodes: int, n_streams: int,
     # arrivals keep coming for most of the run (placement decisions are
     # the tuner's lever) and are deterministic, so both router arms face
     # an identical offered workload regardless of placement
-    sids = b.fuzz_streams(n_streams, seed=seed, t0=0.0,
-                          t1=round(0.85 * duration_s, 6),
-                          fps_scale=DRIFT_FPS_SCALE,
-                          deterministic_arrivals=True)
+    sids = b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0,
+        t1=round(0.85 * duration_s, 6), fps_scale=DRIFT_FPS_SCALE,
+        deterministic_arrivals=True))
     # diurnal half-populations in anti-phase: the first half peaks early
     # and recedes, the second half ramps late — two regime shifts, each
     # re-arming the tuner probe through the fleet phase events
@@ -299,13 +302,13 @@ def build_lifecycle_fleet(seed: int, n_nodes: int, n_streams: int,
         # membership churn on top of lifecycle churn: the drain fires a
         # migration wave into the contended links mid-departure-window
         b.node_drain(nids[0], at=round(0.55 * duration_s, 6))
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0,
-                   t1=round(0.5 * duration_s, 6),
-                   fps_scale=LIFECYCLE_FPS_SCALE,
-                   depart_frac=LIFECYCLE_DEPART_FRAC,
-                   rejoin_frac=LIFECYCLE_REJOIN_FRAC,
-                   t_depart0=round(0.35 * duration_s, 6),
-                   t_depart1=round(0.9 * duration_s, 6))
+    b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0,
+        t1=round(0.5 * duration_s, 6), fps_scale=LIFECYCLE_FPS_SCALE,
+        lifecycle=LifecycleFuzz(depart_frac=LIFECYCLE_DEPART_FRAC,
+                                rejoin_frac=LIFECYCLE_REJOIN_FRAC,
+                                t0=round(0.35 * duration_s, 6),
+                                t1=round(0.9 * duration_s, 6))))
     return b.build()
 
 
@@ -443,21 +446,24 @@ def build_overload_fleet(seed: int, n_nodes: int, n_streams: int,
     b = FleetScenarioBuilder(f"overload_sweep_{seed}")
     for i in range(n_nodes):
         b.node(SYSTEMS_MIX[i % len(SYSTEMS_MIX)])
-    kw = dict(fps_scale=OVERLOAD_FPS_SCALE, tier_mix=OVERLOAD_TIER_MIX,
-              supernet_frac=OVERLOAD_SUPERNET_FRAC,
-              deterministic_arrivals=True)
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0,
-                   t1=round(0.35 * duration_s, 6), **kw)
+    tiered = SLOFuzz(tier_mix=OVERLOAD_TIER_MIX,
+                     supernet_frac=OVERLOAD_SUPERNET_FRAC)
+    b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0,
+        t1=round(0.35 * duration_s, 6), fps_scale=OVERLOAD_FPS_SCALE,
+        deterministic_arrivals=True, slo=tiered))
     if burst:
         # the burst wave: a second full population arrives mid-run and
         # departs entirely before the end — offered load doubles, then
         # releases (the promote-back half of the ladder's hysteresis)
-        b.fuzz_streams(n_streams, seed=seed + 50_021,
-                       t0=round(0.45 * duration_s, 6),
-                       t1=round(0.7 * duration_s, 6),
-                       depart_frac=1.0,
-                       t_depart0=round(0.72 * duration_s, 6),
-                       t_depart1=round(0.9 * duration_s, 6), **kw)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=n_streams, seed=seed + 50_021,
+            t0=round(0.45 * duration_s, 6),
+            t1=round(0.7 * duration_s, 6), fps_scale=OVERLOAD_FPS_SCALE,
+            deterministic_arrivals=True, slo=tiered,
+            lifecycle=LifecycleFuzz(depart_frac=1.0,
+                                    t0=round(0.72 * duration_s, 6),
+                                    t1=round(0.9 * duration_s, 6))))
     return b.build()
 
 
@@ -545,6 +551,143 @@ def run_overload(duration_s: float, seed: int, n_nodes: int = 8,
     }
 
 
+def run_budget(duration_s: float, seed: int, n_nodes: int = 8,
+               n_streams: int = 40, n_seeds: int = 3) -> dict:
+    """SLO-budget-aware routing vs budget-blind routing on the tiered
+    burst population — identical scenarios per seed, no admission
+    controller (isolating the routing change).  The budget-aware router
+    divides placement urgency by each stream's declared pipeline budget
+    (``SLOClass.budget_factor``), so relaxed-budget best-effort streams
+    stop spending the hardware-preference term as if they were
+    guaranteed-tier.  Gated as a *two-sided stability* metric
+    (``budget_over_flat`` in ci_baseline.json): the refactor folds the
+    tier budget into the score without destabilizing fleet UXCost in
+    either direction."""
+    rows = []
+    for s in range(seed, seed + n_seeds):
+        scn = build_overload_fleet(s, n_nodes, n_streams, duration_s,
+                                   burst=True)
+        flat = FleetSimulator(scn, "score", duration_s=duration_s,
+                              seed=s).run()
+        pol = ScoreDrivenRouter()
+        pol.budget_aware = True
+        budget = FleetSimulator(scn, pol, duration_s=duration_s, seed=s,
+                                record=True).run()
+        replayed = FleetSimulator(
+            replay=ftrace.loads(ftrace.dumps(budget.trace))).run()
+        rows.append({
+            "seed": s,
+            "flat": {"uxcost": flat.uxcost, "dlv_rate": flat.dlv_rate,
+                     "frames": flat.frames, "tier_dlv": flat.tier_dlv},
+            "budget": {"uxcost": budget.uxcost,
+                       "dlv_rate": budget.dlv_rate,
+                       "frames": budget.frames,
+                       "tier_dlv": budget.tier_dlv},
+            "budget_over_flat": flat.uxcost / max(budget.uxcost, 1e-12),
+            "replay_exact": (replayed.uxcost == budget.uxcost
+                             and replayed.frames == budget.frames),
+        })
+    flat_total = sum(r["flat"]["uxcost"] for r in rows)
+    budget_total = sum(r["budget"]["uxcost"] for r in rows)
+    return {
+        "n_nodes": n_nodes, "n_streams": n_streams, "n_seeds": n_seeds,
+        "tier_mix": OVERLOAD_TIER_MIX,
+        "rows": rows,
+        "flat_uxcost_total": flat_total,
+        "budget_uxcost_total": budget_total,
+        "budget_over_flat": flat_total / max(budget_total, 1e-12),
+        "replay_exact": all(r["replay_exact"] for r in rows),
+    }
+
+
+#: genai fleet: mixed autoregressive + vision population.  Roughly every
+#: third fuzzed stream head is re-headed onto the chat_llm autoregressive
+#: family (compute-bound prefill + memory-bound decode loop with
+#: stochastic per-job token counts), sharing nodes with fixed-deadline
+#: vision pipelines — the tension token-level preemption and the length
+#: predictor exist for
+GENAI_FRAC = 0.34
+#: hot enough that ToGo mispricing costs real deadline misses, but not
+#: so saturated that every arm drowns identically
+GENAI_FPS_SCALE = 0.5
+#: the ablation gate is pinned — fixed duration/seeds/fleet shape — so
+#: the predictor-vs-blind comparison is one reproducible measurement
+#: rather than a function of whatever sweep arguments CI happens to pass
+GENAI_DURATION_S = 2.0
+
+
+def build_genai_fleet(seed: int, n_nodes: int, n_streams: int,
+                      duration_s: float) -> FleetScenario:
+    b = FleetScenarioBuilder(f"genai_sweep_{seed}")
+    for i in range(n_nodes):
+        b.node(SYSTEMS_MIX[i % len(SYSTEMS_MIX)])
+    # deterministic arrivals pin the offered workload; token-count draws
+    # come from the per-node token RNG stream, identical across arms
+    b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0,
+        t1=round(0.5 * duration_s, 6), fps_scale=GENAI_FPS_SCALE,
+        deterministic_arrivals=True, genai=GenAIFuzz(frac=GENAI_FRAC)))
+    return b.build()
+
+
+def run_genai(duration_s: float = GENAI_DURATION_S, seed: int = 0,
+              n_nodes: int = 3, n_streams: int = 28,
+              n_seeds: int = 3) -> dict:
+    """Length-predictor ablation on mixed chat+vision fleets — identical
+    scenarios and token draws per seed, score policy; the only variable
+    is whether autoregressive jobs are priced by the per-model EWMA
+    length predictor (Sparse-DySta style) or *blind* at their
+    ``max_new_tokens`` cap.  Blind pricing overstates decode ToGo, so
+    urgency and smart-drop decisions fire on phantom load.  The
+    predictor arm is recorded and (a) replayed bit-exactly — token
+    counts and preemption points come from the trace, consuming no RNG —
+    and (b) re-run on the scalar oracle engine, whose trace must be
+    byte-identical to the SoA engine's (token-level preemption takes
+    the same slab/heap machinery as everything else)."""
+    rows = []
+    for s in range(seed, seed + n_seeds):
+        fscn = build_genai_fleet(s, n_nodes, n_streams, duration_s)
+        blind = FleetSimulator(fscn, "score", duration_s=duration_s,
+                               seed=s, genai_predictor=False).run()
+        pred = FleetSimulator(fscn, "score", duration_s=duration_s,
+                              seed=s, record=True).run()
+        scal = FleetSimulator(fscn, "score", duration_s=duration_s,
+                              seed=s, record=True, engine="scalar").run()
+        pred_bytes = ftrace.dumps(pred.trace)
+        replayed = FleetSimulator(
+            replay=ftrace.loads(pred_bytes)).run()
+        rows.append({
+            "seed": s,
+            "blind": {"uxcost": blind.uxcost, "dlv_rate": blind.dlv_rate,
+                      "frames": blind.frames, "drops": blind.drops},
+            "predictor": {"uxcost": pred.uxcost,
+                          "dlv_rate": pred.dlv_rate,
+                          "frames": pred.frames, "drops": pred.drops},
+            "predictor_over_blind": (blind.uxcost
+                                     / max(pred.uxcost, 1e-12)),
+            "engine_equal": pred_bytes == ftrace.dumps(scal.trace),
+            "replay_exact": (replayed.uxcost == pred.uxcost
+                             and replayed.frames == pred.frames
+                             and replayed.drops == pred.drops),
+        })
+    blind_total = sum(r["blind"]["uxcost"] for r in rows)
+    pred_total = sum(r["predictor"]["uxcost"] for r in rows)
+    return {
+        "n_nodes": n_nodes, "n_streams": n_streams, "n_seeds": n_seeds,
+        "fps_scale": GENAI_FPS_SCALE, "genai_frac": GENAI_FRAC,
+        "rows": rows,
+        "blind_uxcost_total": blind_total,
+        "predictor_uxcost_total": pred_total,
+        "predictor_over_blind": blind_total / max(pred_total, 1e-12),
+        "predictor_over_blind_min": min(r["predictor_over_blind"]
+                                        for r in rows),
+        "predictor_beats_blind": all(r["predictor_over_blind"] >= 1.0
+                                     for r in rows),
+        "engine_equal": all(r["engine_equal"] for r in rows),
+        "replay_exact": all(r["replay_exact"] for r in rows),
+    }
+
+
 #: scale arm: the vectorized fast path's proving ground — a fleet more
 #: than an order of magnitude past the default sweep in both dimensions.
 #: Before the batched router/scheduler/event-heap fast paths this
@@ -569,9 +712,9 @@ def build_scale_fleet(seed: int, n_nodes: int, n_streams: int,
     # membership churn at scale: one drain mid-run fires a migration wave
     # of an entire node's streams through the batched rebalance path
     b.node_drain(nids[0], at=round(0.5 * duration_s, 6))
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0,
-                   t1=round(0.6 * duration_s, 6),
-                   fps_scale=SCALE_FPS_SCALE)
+    b.fuzz_streams(FuzzSpec(n_streams=n_streams, seed=seed, t0=0.0,
+                            t1=round(0.6 * duration_s, 6),
+                            fps_scale=SCALE_FPS_SCALE))
     return b.build()
 
 
@@ -707,6 +850,14 @@ def run(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
         # SLO subsystem under a 2x burst: tiered admission + variant
         # degradation vs an SLO-unaware control on identical arrivals
         "overload": run_overload(duration_s, seed),
+        # SLO-budget-aware routing vs budget-blind on the same tiered
+        # population: a two-sided stability gate, not a headline claim
+        "budget": run_budget(duration_s, seed),
+        # autoregressive chat+vision mix: EWMA length predictor vs blind
+        # cap pricing; always at the pinned configuration (see
+        # GENAI_DURATION_S) so the per-seed gate means the same thing in
+        # every invocation
+        "genai": run_genai(),
     }
     save_artifact("fleet_sweep", out)
     return out
@@ -797,6 +948,37 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
           f"{ov['slo_over_unaware']:.3f}  tier0_dlv={ov['tier0_dlv_overload']:.3f}"
           f"  tier0_flat={ov['tier0_flat']}"
           f"  replay_exact={ov['replay_exact']}")
+    bu = out["budget"]
+    print(f"budget sweep: {bu['n_nodes']} nodes x {bu['n_seeds']} seeds, "
+          f"{bu['n_streams']}-stream tiered burst, SLO-budget-aware vs "
+          f"budget-blind routing")
+    for r in bu["rows"]:
+        print(f"  seed {r['seed']}: flat={r['flat']['uxcost']:9.2f} "
+              f"(DLV={r['flat']['dlv_rate']:5.3f})  "
+              f"budget={r['budget']['uxcost']:9.2f} "
+              f"(DLV={r['budget']['dlv_rate']:5.3f})  "
+              f"ratio={r['budget_over_flat']:5.3f} "
+              f"replay={r['replay_exact']}")
+    print(f"  aggregate UXCost(flat)/UXCost(budget) = "
+          f"{bu['budget_over_flat']:.3f}   replay_exact="
+          f"{bu['replay_exact']}")
+    g = out["genai"]
+    print(f"genai sweep: {g['n_nodes']} nodes x {g['n_seeds']} seeds, "
+          f"{g['n_streams']} streams (genai_frac={g['genai_frac']}, "
+          f"fps_scale={g['fps_scale']}), EWMA length predictor vs blind "
+          f"cap pricing")
+    for r in g["rows"]:
+        p = r["predictor"]
+        print(f"  seed {r['seed']}: blind={r['blind']['uxcost']:9.2f} "
+              f"(DLV={r['blind']['dlv_rate']:5.3f})  "
+              f"predictor={p['uxcost']:9.2f} (DLV={p['dlv_rate']:5.3f})  "
+              f"ratio={r['predictor_over_blind']:5.3f} "
+              f"engines={r['engine_equal']} replay={r['replay_exact']}")
+    print(f"  aggregate UXCost(blind)/UXCost(predictor) = "
+          f"{g['predictor_over_blind']:.3f}  "
+          f"min={g['predictor_over_blind_min']:.3f}  "
+          f"engine_equal={g['engine_equal']}  "
+          f"replay_exact={g['replay_exact']}")
     if not out["score_beats_round_robin"]:
         raise SystemExit("score-driven routing did not beat round-robin")
     if not out["replay_exact"]:
@@ -834,6 +1016,19 @@ def main(duration_s: float = 2.5, seed: int = 0, n_nodes: int = 16,
     if not ov["replay_exact"]:
         raise SystemExit("SLO fleet trace replay mismatch — recorded "
                          "swap/reject decisions did not reproduce the run")
+    if not bu["replay_exact"]:
+        raise SystemExit("budget-aware fleet trace replay mismatch — "
+                         "determinism broken")
+    if not g["predictor_beats_blind"]:
+        raise SystemExit("EWMA length predictor did worse than blind cap "
+                         "pricing on at least one genai seed")
+    if not g["engine_equal"]:
+        raise SystemExit("scalar and SoA engines diverged on the genai "
+                         "fleet — token-level preemption broke engine "
+                         "equivalence")
+    if not g["replay_exact"]:
+        raise SystemExit("genai fleet trace replay mismatch — recorded "
+                         "token counts did not reproduce the run")
 
 
 if __name__ == "__main__":

@@ -94,6 +94,10 @@ METRICS = {
                          ("overload", "slo_over_unaware")),
     "tier0_dlv_overload": ("ci_fleet_sweep.json",
                            ("overload", "tier0_dlv_overload")),
+    "budget_over_flat": ("ci_fleet_sweep.json",
+                         ("budget", "budget_over_flat")),
+    "predictor_over_blind": ("ci_fleet_sweep.json",
+                             ("genai", "predictor_over_blind")),
     "streams_per_wall_s": ("ci_fleet_sweep.json", ("streams_per_wall_s",)),
 }
 

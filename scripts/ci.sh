@@ -81,15 +81,22 @@ lint() {
     fi
 }
 
+#: DeprecationWarning promoted to error for warnings attributed to
+#: repro.* modules: an internal caller regressing onto a deprecated call
+#: form (legacy fuzz_streams kwargs, Simulator(soa_slab=...), ...) fails
+#: the lane instead of scrolling by.  Third-party deprecations and test
+#: modules exercising the shims on purpose (pytest.warns) are unaffected.
+PYTEST_W=(-W 'error::DeprecationWarning:repro')
+
 tests() {
     if python -c "import pytest_cov" 2>/dev/null; then
-        python -m pytest -x -q "${COV_PKGS[@]}" \
+        python -m pytest -x -q "${PYTEST_W[@]}" "${COV_PKGS[@]}" \
             --cov-report=term --cov-fail-under="$COV_MIN"
         COV_TOTAL="$(python -m coverage report --format=total 2>/dev/null \
                      || echo '?')%"
     else
         echo "tests: pytest-cov not installed — coverage gate skipped"
-        python -m pytest -x -q
+        python -m pytest -x -q "${PYTEST_W[@]}"
     fi
 }
 
@@ -105,9 +112,10 @@ vector_smoke() {
     # throughput smoke floor.  Redundant with the full `tests` stage by
     # design: vectorization drift fails here with a named stage instead
     # of somewhere inside the suite run.
-    python -m pytest -q -p no:cacheprovider \
+    python -m pytest -q -p no:cacheprovider "${PYTEST_W[@]}" \
         tests/test_vectorized_equiv.py tests/test_golden_traces.py \
-        tests/test_peek_heap.py tests/test_perf_smoke.py
+        tests/test_peek_heap.py tests/test_perf_smoke.py \
+        tests/test_fuzz_spec.py
 }
 
 slo_smoke() {
@@ -224,6 +232,41 @@ print("ci: ok — soa smoke: slab core bit-identical to scalar oracle "
 EOF
 }
 
+genai_smoke() {
+    # fast-lane genai gate: a mixed chat+vision fleet (autoregressive
+    # chat_llm heads with stochastic token counts + fixed-deadline vision
+    # pipelines) must (a) produce byte-identical traces on the SoA and
+    # scalar engines — token-level preemption takes the same slab/heap
+    # machinery as everything else — and (b) replay bit-exactly, with the
+    # recorded per-job token counts consumed as inputs instead of RNG
+    python - <<'EOF'
+import sys
+from benchmarks.fleet_sweep import build_genai_fleet
+from repro.cluster import FleetSimulator
+from repro.cluster import trace as ftrace
+scn = build_genai_fleet(3, 3, 18, 1.0)
+n_chat = sum(1 for e in scn.events if e.kind == "stream"
+             and any(c["model"].get("builder") == "chat_llm"
+                     for c in e.payload["entries"]))
+if n_chat == 0:
+    sys.exit("genai smoke: fuzzed population contains no chat_llm heads")
+soa = FleetSimulator(scn, "score", duration_s=1.0, seed=3,
+                     record=True).run()
+scal = FleetSimulator(scn, "score", duration_s=1.0, seed=3, record=True,
+                      engine="scalar").run()
+soa_bytes = ftrace.dumps(soa.trace)
+if soa_bytes != ftrace.dumps(scal.trace):
+    sys.exit("genai smoke: scalar and SoA engine traces diverged on the "
+             "mixed chat+vision fleet")
+rep = FleetSimulator(replay=ftrace.loads(soa_bytes)).run()
+if (rep.uxcost, rep.frames, rep.drops) != \
+        (soa.uxcost, soa.frames, soa.drops):
+    sys.exit("genai smoke: genai trace replay mismatch")
+print(f"ci: ok — genai smoke: {n_chat} chat streams in the mix, "
+      f"{soa.frames} frames, engines byte-identical, replay exact")
+EOF
+}
+
 pydoc_render() {
     python - <<'EOF'
 import pydoc
@@ -294,6 +337,17 @@ if not ov["tier0_flat"]:
 if ov["swaps"] + ov["rejections"] == 0:
     sys.exit("overload arm exercised neither the degradation ladder nor "
              "the reject gate")
+bu = out["budget"]
+if not bu["replay_exact"]:
+    sys.exit("budget-aware fleet trace replay determinism broken")
+g = out["genai"]
+if not g["predictor_beats_blind"]:
+    sys.exit("EWMA length predictor did worse than blind cap pricing on "
+             "at least one genai seed")
+if not g["engine_equal"]:
+    sys.exit("scalar and SoA engines diverged on the genai fleet")
+if not g["replay_exact"]:
+    sys.exit("genai fleet trace replay determinism broken")
 print(f"ci: ok — {out['n_nodes']}-node fleet (+churn), "
       f"{out['n_streams']} streams, "
       f"UXCost(rr)/UXCost(score)={out['rr_over_score']:.3f}, "
@@ -307,6 +361,10 @@ print(f"ci: ok — {out['n_nodes']}-node fleet (+churn), "
       f"overload ({ov['swaps']} swaps, {ov['rejections']} rejections): "
       f"UXCost(unaware)/UXCost(aware)={ov['slo_over_unaware']:.3f}, "
       f"tier0_dlv={ov['tier0_dlv_overload']:.3f}, tier0_flat; "
+      f"budget routing UXCost(flat)/UXCost(budget)="
+      f"{bu['budget_over_flat']:.3f}; genai "
+      f"UXCost(blind)/UXCost(predictor)={g['predictor_over_blind']:.3f} "
+      f"(min {g['predictor_over_blind_min']:.3f}, engines equal); "
       "replays exact")
 EOF
 }
@@ -350,6 +408,7 @@ stage docs_refs      docs_refs
 stage slo_smoke      slo_smoke
 stage obs_smoke      obs_smoke
 stage soa_smoke      soa_smoke
+stage genai_smoke    genai_smoke
 
 if [ "$CI_FAST" = "1" ]; then
     echo

@@ -20,8 +20,9 @@ in the trace so replay bypasses the controller bit-exactly.
 """
 from repro.core.costmodel import ContendedLinks, TransferModel
 
-from .builder import (FleetEvent, FleetScenario, FleetScenarioBuilder,
-                      split_pipelines)
+from .builder import (CascadeFuzz, FleetEvent, FleetScenario,
+                      FleetScenarioBuilder, FuzzSpec, GenAIFuzz,
+                      LifecycleFuzz, SLOFuzz, split_pipelines)
 from .fleet import (FleetResult, FleetSimulator, StreamView,
                     canonical_stream_model, node_seed, run_fleet)
 from .node import FleetNode, NodeTelemetry, StreamCost
@@ -38,7 +39,8 @@ from .trace import (FLEET_EVENT_KINDS, FLEET_TRACE_VERSION, FleetTrace,
 
 __all__ = [
     "ContendedLinks", "TransferModel",
-    "FleetEvent", "FleetScenario", "FleetScenarioBuilder", "split_pipelines",
+    "CascadeFuzz", "FleetEvent", "FleetScenario", "FleetScenarioBuilder",
+    "FuzzSpec", "GenAIFuzz", "LifecycleFuzz", "SLOFuzz", "split_pipelines",
     "FleetResult", "FleetSimulator", "StreamView", "canonical_stream_model",
     "node_seed", "run_fleet",
     "FleetNode", "NodeTelemetry", "StreamCost",

@@ -26,7 +26,8 @@ Invariants:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -34,6 +35,110 @@ from repro.scenarios.builder import ModelEntry, ScenarioBuilder, ScenarioError
 from repro.scenarios.fuzzer import fuzz_scenario
 
 from .slo import slo_from_config
+
+
+# ---------------------------------------------------------------------------
+# Fuzzed-population specification
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CascadeFuzz:
+    """Cascade shape of a fuzzed population."""
+
+    prob: float = 0.5           # per-child trigger probability
+    max_depth: int = 2          # max cascade chain length
+    only: bool = False          # drop single-stage pipelines entirely
+    max_pipelines: int = 1      # pipelines per fuzzer sample
+
+
+@dataclass(frozen=True)
+class LifecycleFuzz:
+    """Stream departure/rejoin churn of a fuzzed population."""
+
+    depart_frac: float = 0.0    # fraction of streams departing mid-run
+    rejoin_frac: float = 0.0    # fraction of departures that rejoin
+    t0: "float | None" = None   # depart window start (default: arrival t1)
+    t1: "float | None" = None   # depart window end (default: 2 * arrival t1)
+
+
+@dataclass(frozen=True)
+class SLOFuzz:
+    """Service-tier structure of a fuzzed population."""
+
+    #: (tier-0, tier-1, best-effort) draw weights; None = tierless
+    tier_mix: "tuple[float, float, float] | None" = None
+    #: fraction of stream heads re-headed onto the OFA supernet
+    #: (index-strided, no RNG) so the degradation ladder has rungs
+    supernet_frac: float = 0.0
+
+
+@dataclass(frozen=True)
+class GenAIFuzz:
+    """Autoregressive share of a fuzzed population."""
+
+    #: fraction of stream heads re-headed onto the chat_llm generative
+    #: family (index-strided, no RNG; wins over the supernet stride on
+    #: collisions) — token-level preemption and the length predictor then
+    #: have traffic to act on
+    frac: float = 0.0
+
+
+#: generation-length profiles cycled (deterministically, by genai-stream
+#: index) across fuzzed chat heads: short replies, medium chat turns, long
+#: form.  Heterogeneous caps are what separate a blind scheduler (prices
+#: every generation at max_new_tokens) from the EWMA length predictor
+GENAI_PROFILES: "tuple[dict, ...]" = (
+    {"max_new_tokens": 16, "token_mean": 6.0},
+    {"max_new_tokens": 24, "token_mean": 10.0},
+    {"max_new_tokens": 48, "token_mean": 18.0},
+)
+
+
+@dataclass(frozen=True)
+class FuzzSpec:
+    """Full specification of one seeded fuzz_streams population.
+
+    Replaces the historical 16-kwarg call form; sub-specs group the knobs
+    by subsystem.  For a fixed (seed, knobs) combination the population is
+    byte-stable against the legacy form (tests/test_fuzz_spec.py pins the
+    recorded fingerprints)."""
+
+    n_streams: int
+    seed: int
+    t0: float = 0.0             # arrival window start
+    t1: float = 1.0             # arrival window end
+    fps_scale: float = 1.0
+    deterministic_arrivals: bool = False
+    cascade: CascadeFuzz = field(default_factory=CascadeFuzz)
+    lifecycle: LifecycleFuzz = field(default_factory=LifecycleFuzz)
+    slo: SLOFuzz = field(default_factory=SLOFuzz)
+    genai: GenAIFuzz = field(default_factory=GenAIFuzz)
+
+
+def _legacy_fuzz_spec(n_streams: int, seed: int, t0: float = 0.0,
+                      t1: float = 1.0, max_pipelines: int = 1,
+                      fps_scale: float = 1.0, cascade_prob: float = 0.5,
+                      max_depth: int = 2, cascades_only: bool = False,
+                      deterministic_arrivals: bool = False,
+                      depart_frac: float = 0.0, rejoin_frac: float = 0.0,
+                      t_depart0: "float | None" = None,
+                      t_depart1: "float | None" = None,
+                      tier_mix: "tuple[float, float, float] | None" = None,
+                      supernet_frac: float = 0.0,
+                      genai_frac: float = 0.0) -> FuzzSpec:
+    """Map the historical flat kwargs onto a :class:`FuzzSpec`."""
+    return FuzzSpec(
+        n_streams=int(n_streams), seed=int(seed), t0=t0, t1=t1,
+        fps_scale=fps_scale, deterministic_arrivals=deterministic_arrivals,
+        cascade=CascadeFuzz(prob=cascade_prob, max_depth=max_depth,
+                            only=cascades_only, max_pipelines=max_pipelines),
+        lifecycle=LifecycleFuzz(depart_frac=depart_frac,
+                                rejoin_frac=rejoin_frac,
+                                t0=t_depart0, t1=t_depart1),
+        slo=SLOFuzz(tier_mix=None if tier_mix is None else tuple(tier_mix),
+                    supernet_frac=supernet_frac),
+        genai=GenAIFuzz(frac=genai_frac),
+    )
 
 
 @dataclass(frozen=True)
@@ -241,30 +346,25 @@ class FleetScenarioBuilder:
         """Shard a whole single-node scenario into per-pipeline streams."""
         return [self.add_stream(p, at=at) for p in split_pipelines(builder)]
 
-    def fuzz_streams(self, n_streams: int, seed: int, t0: float = 0.0,
-                     t1: float = 1.0, max_pipelines: int = 1,
-                     fps_scale: float = 1.0, cascade_prob: float = 0.5,
-                     max_depth: int = 2, cascades_only: bool = False,
-                     deterministic_arrivals: bool = False,
-                     depart_frac: float = 0.0, rejoin_frac: float = 0.0,
-                     t_depart0: "float | None" = None,
-                     t_depart1: "float | None" = None,
-                     tier_mix: "tuple[float, float, float] | None" = None,
-                     supernet_frac: float = 0.0) -> list[int]:
+    def fuzz_streams(self, spec: "FuzzSpec | int",
+                     seed: "int | None" = None, **kw) -> list[int]:
         """Seeded stream population: fuzzer-sampled pipelines with arrival
-        times uniform over [t0, t1).  Deterministic at build time, so the
-        resulting FleetScenario needs no runtime randomness.
+        times uniform over [spec.t0, spec.t1).  Deterministic at build
+        time, so the resulting FleetScenario needs no runtime randomness.
+
+        Pass a :class:`FuzzSpec`.  The historical flat call form —
+        ``fuzz_streams(n_streams, seed, cascade_prob=..., tier_mix=...,
+        ...)`` — still works, maps byte-stably onto the same populations,
+        and emits a :class:`DeprecationWarning`.
 
         ``fps_scale`` rescales every stream's FPS targets: the fuzzer pools
         are sized for one pipeline per multi-accelerator node, while a fleet
         serves *many* light streams per node — ~0.25 puts a 12-streams-per-
         node fleet near 50% offered utilization.
 
-        ``cascade_prob`` / ``max_depth`` thread to the fuzzer (cascade
-        sharding specs: 1.0 / 3 yields a cascade-heavy population whose
-        pipelines the stage-split router can shard across nodes);
-        ``cascades_only`` additionally drops single-stage pipelines, so
-        every admitted stream has at least one cross-placeable edge.
+        ``spec.cascade`` shapes the pipelines (``prob``/``max_depth``
+        thread to the fuzzer; ``only`` drops single-stage pipelines, so
+        every admitted stream has at least one cross-placeable edge).
 
         ``deterministic_arrivals`` replaces every sampled arrival process
         with an explicitly-phased periodic one (phase hashed from the
@@ -274,59 +374,98 @@ class FleetScenarioBuilder:
         across placement policies, which is what a fair routing comparison
         (e.g. whole-pipeline vs stage-split) needs.
 
-        ``depart_frac`` makes the population *lifecycle-churned*: that
-        fraction of streams departs mid-run, each at a time uniform over
-        [``t_depart0``, ``t_depart1``) (defaulting to [t1, 2*t1) — after
-        the arrival window), and ``rejoin_frac`` of the departed streams
-        rejoins later, uniform over (depart time, ``t_depart1``).
-        Lifecycle draws come from a dedicated RNG stream, so populations
-        with ``depart_frac=0`` reproduce their historical arrivals
-        bit-for-bit.
+        ``spec.lifecycle`` makes the population churned: ``depart_frac``
+        of the streams departs mid-run, each at a time uniform over
+        [``t0``, ``t1``) of the lifecycle window (defaulting to
+        [t1, 2*t1) of the arrival window), and ``rejoin_frac`` of the
+        departed streams rejoins later.  Lifecycle draws come from a
+        dedicated RNG stream, so populations with ``depart_frac=0``
+        reproduce their historical arrivals bit-for-bit.
 
-        ``tier_mix`` declares an SLO-tiered population: per-stream tiers
-        (guaranteed / standard / best-effort) drawn with the given weights
-        from a dedicated RNG stream, so tierless populations (``None``)
+        ``spec.slo.tier_mix`` declares an SLO-tiered population: per-stream
+        tiers (guaranteed / standard / best-effort) drawn with the given
+        weights from a dedicated RNG stream, so tierless populations
         reproduce their historical draws bit-for-bit.  ``supernet_frac``
         swaps that fraction of stream heads (index-strided, no RNG) onto
         the OFA supernet so the SLO degradation ladder has variant rungs
-        to act on."""
-        if cascades_only and not cascade_prob > 0.0:
-            raise ScenarioError("cascades_only with cascade_prob=0 can "
+        to act on; ``spec.genai.frac`` does the same onto the chat_llm
+        autoregressive family (and wins on stride collisions)."""
+        if isinstance(spec, FuzzSpec):
+            if seed is not None or kw:
+                raise ScenarioError(
+                    "fuzz_streams(FuzzSpec) takes no further arguments")
+            return self._fuzz_streams_impl(spec)
+        warnings.warn(
+            "FleetScenarioBuilder.fuzz_streams(n_streams, seed, **kwargs) "
+            "is deprecated; pass a repro.cluster.FuzzSpec instead",
+            DeprecationWarning, stacklevel=2)
+        if seed is None:
+            raise ScenarioError("legacy fuzz_streams needs (n_streams, seed)")
+        return self._fuzz_streams_impl(_legacy_fuzz_spec(spec, seed, **kw))
+
+    def _fuzz_streams_impl(self, spec: "FuzzSpec") -> list[int]:
+        cas, life, slo, genai = (spec.cascade, spec.lifecycle, spec.slo,
+                                 spec.genai)
+        n_streams, seed, t0, t1 = spec.n_streams, spec.seed, spec.t0, spec.t1
+        if cas.only and not cas.prob > 0.0:
+            raise ScenarioError("cascade.only with cascade.prob=0 can "
                                 "never admit a stream")
-        if not 0.0 <= depart_frac <= 1.0 or not 0.0 <= rejoin_frac <= 1.0:
-            raise ScenarioError("depart_frac / rejoin_frac must be in "
-                                f"[0, 1], got {depart_frac}/{rejoin_frac}")
-        if not 0.0 <= supernet_frac <= 1.0:
+        if not 0.0 <= life.depart_frac <= 1.0 \
+                or not 0.0 <= life.rejoin_frac <= 1.0:
             raise ScenarioError(
-                f"supernet_frac must be in [0, 1], got {supernet_frac}")
-        if tier_mix is not None:
-            if len(tier_mix) != 3 or any(w < 0 for w in tier_mix) \
-                    or not sum(tier_mix) > 0:
+                "depart_frac / rejoin_frac must be in [0, 1], got "
+                f"{life.depart_frac}/{life.rejoin_frac}")
+        if not 0.0 <= slo.supernet_frac <= 1.0:
+            raise ScenarioError(
+                f"supernet_frac must be in [0, 1], got {slo.supernet_frac}")
+        if not 0.0 <= genai.frac <= 1.0:
+            raise ScenarioError(
+                f"genai.frac must be in [0, 1], got {genai.frac}")
+        if slo.tier_mix is not None:
+            if len(slo.tier_mix) != 3 or any(w < 0 for w in slo.tier_mix) \
+                    or not sum(slo.tier_mix) > 0:
                 raise ScenarioError(
                     "tier_mix must be three non-negative weights "
-                    f"(tier-0, tier-1, best-effort), got {tier_mix!r}")
-        stride = int(round(1.0 / supernet_frac)) if supernet_frac > 0 else 0
+                    f"(tier-0, tier-1, best-effort), got {slo.tier_mix!r}")
+        stride = (int(round(1.0 / slo.supernet_frac))
+                  if slo.supernet_frac > 0 else 0)
+        gstride = int(round(1.0 / genai.frac)) if genai.frac > 0 else 0
         rng = np.random.default_rng([seed, 0xF1EE7])
         sids: list[int] = []
         arrivals: list[float] = []
         k = 0
         while len(sids) < n_streams:
-            b = fuzz_scenario(seed * 100_003 + k, max_pipelines=max_pipelines,
-                              cascade_prob=cascade_prob, max_depth=max_depth)
+            b = fuzz_scenario(seed * 100_003 + k,
+                              max_pipelines=cas.max_pipelines,
+                              cascade_prob=cas.prob, max_depth=cas.max_depth)
             k += 1
             for pipe in split_pipelines(b):
                 if len(sids) >= n_streams:
                     break
-                if cascades_only and len(pipe) < 2:
+                if cas.only and len(pipe) < 2:
                     continue
                 for cfg in pipe:
-                    if fps_scale != 1.0:
-                        cfg["fps"] = float(cfg["fps"]) * fps_scale
-                    if deterministic_arrivals:
+                    if spec.fps_scale != 1.0:
+                        cfg["fps"] = float(cfg["fps"]) * spec.fps_scale
+                    if spec.deterministic_arrivals:
                         phase = ((len(sids) * 7919) % 97) / 97.0
                         cfg["arrival"] = {"kind": "periodic",
                                           "phase_frac": round(phase, 6)}
-                if stride and len(sids) % stride == 0:
+                if gstride and len(sids) % gstride == 0:
+                    # re-head this stream onto the chat_llm autoregressive
+                    # family (keeping the sampled instance name and FPS) —
+                    # no RNG, so genai-free populations are byte-identical;
+                    # wins over the supernet stride on collisions (chat_llm
+                    # carries its own degradation-ladder variants).  Profiles
+                    # cycle deterministically so the population mixes short/
+                    # medium/long generations: a blind scheduler prices every
+                    # one at its cap, a length predictor tells them apart
+                    prof = GENAI_PROFILES[(len(sids) // gstride)
+                                          % len(GENAI_PROFILES)]
+                    pipe[0]["model"] = {"builder": "chat_llm",
+                                        "name": pipe[0]["model"]["name"],
+                                        "kwargs": dict(prof)}
+                elif stride and len(sids) % stride == 0:
                     # re-head this stream onto the OFA supernet (keeping the
                     # sampled instance name and FPS) so the degradation
                     # ladder has variant rungs in the population
@@ -336,26 +475,26 @@ class FleetScenarioBuilder:
                 t = round(float(rng.uniform(t0, t1)), 6)
                 sids.append(self.add_stream(pipe, at=t))
                 arrivals.append(t)
-        if tier_mix is not None:
+        if slo.tier_mix is not None:
             # dedicated stream: tier draws must not perturb the arrival/
             # pipeline draws above for tierless populations
             trng = np.random.default_rng([seed, 0x510C1A55])
-            total = float(sum(tier_mix))
-            c0 = tier_mix[0] / total
-            c1 = c0 + tier_mix[1] / total
+            total = float(sum(slo.tier_mix))
+            c0 = slo.tier_mix[0] / total
+            c1 = c0 + slo.tier_mix[1] / total
             payloads = {e.payload["sid"]: e.payload for e in self._events
                         if e.kind == "stream" and e.payload["sid"] in sids}
             for sid in sids:
                 u = float(trng.random())
                 tier = 0 if u < c0 else (1 if u < c1 else 2)
                 payloads[sid]["slo"] = slo_from_config(tier).to_config()
-        if depart_frac > 0.0:
+        if life.depart_frac > 0.0:
             # dedicated stream: lifecycle draws must not perturb the
             # arrival/pipeline draws above for depart_frac=0 populations
             lrng = np.random.default_rng([seed, 0xDE9A27])
-            d0 = t1 if t_depart0 is None else float(t_depart0)
-            d1 = 2.0 * t1 if t_depart1 is None else float(t_depart1)
-            n_depart = int(round(depart_frac * len(sids)))
+            d0 = t1 if life.t0 is None else float(life.t0)
+            d1 = 2.0 * t1 if life.t1 is None else float(life.t1)
+            n_depart = int(round(life.depart_frac * len(sids)))
             leavers = sorted(lrng.choice(len(sids), size=n_depart,
                                          replace=False).tolist())
             for i in leavers:
@@ -363,7 +502,7 @@ class FleetScenarioBuilder:
                 # the window edge must not put a depart before its stream
                 td = max(round(float(lrng.uniform(d0, d1)), 6), arrivals[i])
                 self.depart(sids[i], at=td)
-                if lrng.random() < rejoin_frac and td < d1:
+                if lrng.random() < life.rejoin_frac and td < d1:
                     self.rejoin(sids[i],
                                 at=round(float(lrng.uniform(td, d1)), 6))
         return sids

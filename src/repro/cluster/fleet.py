@@ -120,8 +120,10 @@ Invariants:
 from __future__ import annotations
 
 import copy
+import dataclasses
 import heapq
 import re
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -129,6 +131,7 @@ import numpy as np
 
 from repro.core.costmodel import (ContendedLinks, TransferModel,
                                   activation_bytes, model_state_bytes)
+from repro.core.engine import EngineConfig
 from repro.core.scheduler import dream_full
 from repro.core.simulator import SchedulerBase
 from repro.core.uxcost import (WindowStats, overall_dlv_rate,
@@ -212,6 +215,11 @@ class StreamView:
         # read-only and may stay shared with the scenario.
         self.entry_cfgs = [dict(c) for c in entry_cfgs]
         self.entries = [ModelEntry.from_config(c) for c in self.entry_cfgs]
+        #: SLO pipeline budget in head periods (the stream tier's
+        #: ``SLOClass.budget_factor``), installed by the fleet at arrival.
+        #: Budget-aware routers divide routing urgency by it; the 1.0
+        #: default keeps budget-blind scoring bit-identical
+        self.budget_factor = 1.0
         self._graphs: Optional[list] = None
         self._cost_by_system: dict[object, StreamCost] = {}
         self._stage_graphs: Optional[list] = None
@@ -440,7 +448,10 @@ class FleetSimulator:
         tune_every_s: Optional[float] = None,
         slo: "bool | dict | AdmissionController | None" = None,
         slo_every_s: Optional[float] = None,
+        genai_predictor: bool = True,
+        engine: "EngineConfig | str | None" = None,
         obs: "bool | dict | Obs | None" = None,
+        lazy_peek: "bool | None" = None,
     ):
         if (scenario is None) == (replay is None):
             raise ValueError("pass exactly one of scenario or replay")
@@ -459,6 +470,7 @@ class FleetSimulator:
             split_stages = bool(meta.get("split", False))
             slo = None              # recorded swap/reject events carry them
             slo_every_s = None
+            genai_predictor = bool(meta.get("genai_predictor", True))
             self._events = [(e["t"], e["type"], e) for e in replay.events]
         else:
             self.name = scenario.name
@@ -494,6 +506,23 @@ class FleetSimulator:
         self.rebalance_every_s = rebalance_every_s
         self.rebalance_hysteresis = rebalance_hysteresis
         self.tune_every_s = tune_every_s
+        #: per-node generation-length predictor toggle (False = blind
+        #: ablation: autoregressive jobs priced at their max_new_tokens cap)
+        self.genai_predictor = genai_predictor
+        if lazy_peek is not None:
+            # legacy flag shim: pre-EngineConfig callers toggled the fleet
+            # clock arm directly; fold it into the config
+            warnings.warn(
+                "FleetSimulator(lazy_peek=...) is deprecated; pass "
+                "engine=EngineConfig(..., lazy_peek=...) instead",
+                DeprecationWarning, stacklevel=2)
+            cfg = EngineConfig.make(engine) or EngineConfig()
+            engine = dataclasses.replace(cfg, lazy_peek=lazy_peek)
+        #: engine arm selection (None = class-attribute behavior); applied
+        #: fleet-wide here and per node at FleetNode construction
+        self.engine = EngineConfig.make(engine)
+        if self.engine is not None:
+            self.engine.apply_fleet(self)
         #: SLO admission controller (live runs only — replay applies the
         #: recorded swap/reject decisions and never runs the controller);
         #: ``slo_every_s`` paces the degradation-ladder ticks (None = gate
@@ -661,6 +690,9 @@ class FleetSimulator:
                 meta["slo"] = self.slo.to_config()
                 if self.slo_every_s is not None:
                     meta["slo_every_s"] = self.slo_every_s
+            if not self.genai_predictor:
+                # non-default only: legacy traces keep identical headers
+                meta["genai_predictor"] = False
             self.recorder = FleetTraceRecorder(meta)
 
     # ---------------------------------------------------------- plumbing
@@ -1122,7 +1154,9 @@ class FleetSimulator:
         self.nodes[nid] = FleetNode(
             nid, system, self.scheduler_factory(ns),
             duration_s=self.duration_s, seed=ns,
-            window_s=self.window_s, at_t=t, obs=self.obs)
+            window_s=self.window_s, at_t=t,
+            genai_predictor=self.genai_predictor, engine=self.engine,
+            obs=self.obs)
         self.nodes[nid].tel_dirty_hook = self._tel_dirty.add
         self._cands_cache.clear()
         if self.recorder is not None:
@@ -1425,6 +1459,8 @@ class FleetSimulator:
         slo_cfg = ev.get("slo")
         if slo_cfg is not None:
             self.stream_slo[sid] = slo_from_config(slo_cfg)
+            self.streams[sid].budget_factor = \
+                self.stream_slo[sid].budget_factor
         if self._tracer is not None:
             self._tracer.event("stream", t, stream=sid,
                                stages=self.streams[sid].n_stages)

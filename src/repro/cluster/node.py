@@ -30,7 +30,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.costmodel import build_cost_table
+from repro.core.costmodel import (build_cost_table, genai_expected_tokens,
+                                  genai_iso_s)
 from repro.core.simulator import SchedulerBase, SimResult, Simulator
 from repro.core.types import Accelerator, ModelGraph, Scenario, SYSTEMS
 
@@ -68,7 +69,7 @@ class FleetNode:
     def __init__(self, node_id: int, system: str | tuple[Accelerator, ...],
                  scheduler: SchedulerBase, *, duration_s: float,
                  seed: int, window_s: float = 0.5, at_t: float = 0.0,
-                 obs=None):
+                 genai_predictor: bool = True, engine=None, obs=None):
         self.node_id = node_id
         self.system = system if isinstance(system, str) else "custom"
         self.accs_spec = SYSTEMS[system] if isinstance(system, str) else system
@@ -78,6 +79,8 @@ class FleetNode:
                              self.accs_spec, scheduler,
                              duration_s=duration_s, seed=seed,
                              window_s=window_s,
+                             genai_predictor=genai_predictor,
+                             engine=engine,
                              obs=obs, obs_node=node_id)
         self.sim.start(at_t=at_t)
         self.join_t = at_t
@@ -227,7 +230,19 @@ class FleetNode:
         hit = self._iso_cache.get(id(graph))
         if hit is not None and hit[0] is graph:
             return hit[1]
-        iso = build_cost_table(graph, self.accs_spec).iso_best_s
+        table = build_cost_table(graph, self.accs_spec)
+        if graph.genai is not None:
+            # autoregressive streams are priced at the *expected* generation
+            # length: the router and SLO ladder see the predictor's view,
+            # not one decode pass and not the worst-case cap.  The blind
+            # ablation prices every surface at the cap, so admission and
+            # the degradation ladder act on phantom decode load
+            n = (genai_expected_tokens(graph.genai)
+                 if self.sim.genai_predictor
+                 else float(graph.genai.max_new_tokens))
+            iso = float(genai_iso_s(table, graph.genai, n).min())
+        else:
+            iso = table.iso_best_s
         if len(self._iso_cache) >= 4096:
             self._iso_cache.clear()
         self._iso_cache[id(graph)] = (graph, iso)

@@ -62,10 +62,11 @@ class _BatchInputs:
     gather is dict lookups, not recomputation."""
 
     __slots__ = ("ids", "iso", "offered", "urgency", "offered_util",
-                 "n_accs", "backlog", "dlv")
+                 "n_accs", "backlog", "dlv", "bf")
 
     def __init__(self, stream, nodes: Sequence[FleetNode],
                  stage: Optional[int] = None):
+        self.bf = getattr(stream, "budget_factor", 1.0)
         cols = getattr(nodes, "tel_columns", None)
         if cols is not None:
             # fleet-maintained SoA columns: telemetry rows are already
@@ -210,6 +211,16 @@ class ScoreDrivenRouter(RouterPolicy):
     #: ``(score, node_id)`` tie-break because candidates arrive sorted by
     #: node id), so flipping the flag never changes a placement.
     vectorized = True
+    #: SLO-budget-aware preference weighting.  When on, the urgency that
+    #: multiplies the hardware-match penalty is divided by the stream's
+    #: declared pipeline-latency budget (in head periods, from its SLO
+    #: tier): a best-effort stream with a 4-period budget tolerates a
+    #: mediocre hardware match four times as well as a guaranteed-tier
+    #: one, so the preference term stops overruling load balance on its
+    #: behalf.  Off by default — dividing by the neutral 1.0 factor is
+    #: bit-exact, so every recorded trace predating the flag replays
+    #: unchanged.
+    budget_aware = False
 
     def __init__(self) -> None:
         (self.w_load, self.w_backlog, self.w_pref, self.w_ux,
@@ -233,15 +244,25 @@ class ScoreDrivenRouter(RouterPolicy):
         (self.w_load, self.w_backlog, self.w_pref, self.w_ux,
          self.w_xfer) = w
 
+    def _bf(self, stream) -> float:
+        """The stream's effective budget divisor: its SLO pipeline budget
+        (head periods) when budget-aware routing is on, else the neutral
+        1.0 (division by which is an IEEE no-op)."""
+        if not self.budget_aware:
+            return 1.0
+        return getattr(stream, "budget_factor", 1.0)
+
     def score(self, stream, node: FleetNode,
               best_iso: float) -> float:
         """Lower is better.  ``best_iso`` is the stream's best isolated
         latency across all candidate nodes (preference normalizer)."""
-        return self._score(stream.cost_on(node), node, best_iso)
+        return self._score(stream.cost_on(node), node, best_iso,
+                           bf=self._bf(stream))
 
     def score_terms(self, cost: StreamCost, node: FleetNode,
-                    best_iso: float,
-                    tel=None) -> tuple[float, float, float, float, float]:
+                    best_iso: float, tel=None,
+                    bf: float = 1.0) -> tuple[float, float, float, float,
+                                              float]:
         """The weight-independent factors of the node score, in full
         ``WEIGHT_NAMES`` order: the score is their dot product with the
         live weights, which is what lets the tuner re-score a recorded
@@ -255,13 +276,13 @@ class ScoreDrivenRouter(RouterPolicy):
             tel = node.telemetry()
         load_after = tel.offered_util + cost.offered_s / tel.n_accs
         pref_penalty = (cost.iso_s / max(best_iso, 1e-12)) - 1.0
-        urgency = min(cost.urgency, URGENCY_CAP)
+        urgency = min(cost.urgency / bf, URGENCY_CAP)
         return (load_after, tel.backlog_s / tel.n_accs,
                 pref_penalty * urgency, min(tel.window_dlv, 1.0), 0.0)
 
     def _score(self, cost: StreamCost, node: FleetNode,
-               best_iso: float) -> float:
-        t = self.score_terms(cost, node, best_iso)
+               best_iso: float, bf: float = 1.0) -> float:
+        t = self.score_terms(cost, node, best_iso, bf=bf)
         return (self.w_load * t[0] + self.w_backlog * t[1]
                 + self.w_pref * t[2] + self.w_ux * t[3])
 
@@ -278,7 +299,8 @@ class ScoreDrivenRouter(RouterPolicy):
         t_load = b.offered_util + marginal
         t_backlog = b.backlog / b.n_accs
         pref_penalty = b.iso / max(best_iso, 1e-12) - 1.0
-        t_pref = pref_penalty * np.minimum(b.urgency, URGENCY_CAP)
+        bf = b.bf if self.budget_aware else 1.0
+        t_pref = pref_penalty * np.minimum(b.urgency / bf, URGENCY_CAP)
         t_ux = np.minimum(b.dlv, 1.0)
         t_xfer = np.zeros(len(b.ids))
         return t_load, t_backlog, t_pref, t_ux, t_xfer, marginal
@@ -342,7 +364,8 @@ class ScoreDrivenRouter(RouterPolicy):
                     parent_nid: Optional[int], transfer) -> float:
         """Score of placing stage ``k`` on ``node`` given the stage's parent
         already landed on ``parent_nid`` (None for heads)."""
-        s = self._score(stream.stage_cost_on(node, k), node, best_iso)
+        s = self._score(stream.stage_cost_on(node, k), node, best_iso,
+                        bf=self._bf(stream))
         if parent_nid is not None and node.node_id != parent_nid:
             s += self.transfer_penalty(stream, k, transfer)
         return s
@@ -508,6 +531,7 @@ class TunedScoreRouter(ScoreDrivenRouter):
     def _place_scalar(self, stream, nodes: Sequence[FleetNode]) -> int:
         """Scalar reference of the recording placement (test oracle)."""
         best_iso = min(stream.cost_on(n).iso_s for n in nodes)
+        bf = self._bf(stream)
         ids: list[int] = []
         rows: list[tuple[float, ...]] = []
         marginal: list[float] = []
@@ -515,7 +539,7 @@ class TunedScoreRouter(ScoreDrivenRouter):
         for n in nodes:
             cost = stream.cost_on(n)
             tel = n.telemetry()
-            t = self.score_terms(cost, n, best_iso, tel=tel)
+            t = self.score_terms(cost, n, best_iso, tel=tel, bf=bf)
             s = (self.w_load * t[0] + self.w_backlog * t[1]
                  + self.w_pref * t[2] + self.w_ux * t[3])
             key = (s, n.node_id)
@@ -572,6 +596,7 @@ class TunedScoreRouter(ScoreDrivenRouter):
                              transfer) -> list[int]:
         """Scalar reference of the recording stage placement (oracle)."""
         out: list[int] = [self._place_scalar(stream, nodes)]
+        bf = self._bf(stream)
         for k in range(1, stream.n_stages):
             best_iso = min(stream.stage_cost_on(n, k).iso_s for n in nodes)
             p = stream.parent_of(k)
@@ -583,7 +608,7 @@ class TunedScoreRouter(ScoreDrivenRouter):
             for n in nodes:
                 cost = stream.stage_cost_on(n, k)
                 tel = n.telemetry()
-                t = self.score_terms(cost, n, best_iso, tel=tel)
+                t = self.score_terms(cost, n, best_iso, tel=tel, bf=bf)
                 # identical arithmetic to stage_score: 4-term dot product
                 # plus the historical transfer_penalty expression
                 s = (self.w_load * t[0] + self.w_backlog * t[1]

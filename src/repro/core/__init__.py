@@ -4,6 +4,7 @@ from .types import (Accelerator, Dataflow, Layer, ModelGraph, ModelSpec, OpType,
 from .costmodel import (ContendedLinks, CostTable, TransferModel,
                         activation_bytes, build_cost_table, build_tables,
                         layer_energy_j, layer_latency_s, model_state_bytes)
+from .engine import ENGINE_PRESETS, EngineConfig
 from .mapscore import MapScoreParams, mapscore, togo_seconds, min_togo_seconds
 from .uxcost import (WindowStats, uxcost, rate_dlv, norm_energy,
                      overall_pipeline_latency)
@@ -21,6 +22,7 @@ __all__ = [
     "ContendedLinks", "CostTable", "TransferModel", "activation_bytes",
     "build_cost_table",
     "build_tables", "layer_energy_j", "layer_latency_s", "model_state_bytes",
+    "ENGINE_PRESETS", "EngineConfig",
     "MapScoreParams", "mapscore", "togo_seconds",
     "min_togo_seconds", "WindowStats", "uxcost", "rate_dlv", "norm_energy",
     "overall_pipeline_latency",

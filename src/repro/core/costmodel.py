@@ -500,14 +500,37 @@ DEADLINE_SLACK_MULT = 1.15  # k x isolated worst-accelerator latency
 DEADLINE_MIN_FRAC = 0.05    # floor: fraction of the frame period
 
 
+def genai_expected_tokens(meta) -> float:
+    """Expected generation length under a variant cap: the mean of the
+    token draw clamped into ``[1, max_new_tokens]``."""
+    return min(max(float(meta.token_mean), 1.0), float(meta.max_new_tokens))
+
+
+def genai_iso_s(table: CostTable, meta, n_tokens: float) -> np.ndarray:
+    """Per-accelerator isolated latency of an autoregressive job emitting
+    ``n_tokens``: the prefill segment once plus ``n_tokens`` repetitions
+    of the decode segment.  The plain per-layer sum (``table.lat.sum``)
+    counts the decode step exactly once and badly underestimates a
+    generation."""
+    pl = meta.prefill_len
+    return (table.lat[:, :pl].sum(axis=1)
+            + float(n_tokens) * table.lat[:, pl:].sum(axis=1))
+
+
 def effective_deadline(period_s: float, table: CostTable,
-                       explicit: float | None = None) -> float:
+                       explicit: float | None = None,
+                       graph: ModelGraph | None = None) -> float:
     """Per-frame deadline for a model on a given system (seconds)."""
     if explicit is not None:
         return explicit
     # hoisted to table build time; the ``or`` re-derives it for tables
     # constructed outside _build_cost_table (none in-tree, but cheap)
     iso_worst = table.iso_worst_s or float(table.lat.sum(axis=1).max())
+    if graph is not None and graph.genai is not None:
+        # autoregressive graphs: the worst generation runs the decode
+        # segment max_new_tokens times, not once
+        iso_worst = float(genai_iso_s(table, graph.genai,
+                                      graph.genai.max_new_tokens).max())
     return min(period_s, max(DEADLINE_SLACK_MULT * iso_worst,
                              DEADLINE_MIN_FRAC * period_s))
 

@@ -68,6 +68,7 @@ def mapscore(
     prev_out_bytes: np.ndarray,
     same_model: np.ndarray,
     params: MapScoreParams,
+    togo_override: float | None = None,
 ) -> np.ndarray:
     """MapScore of one task on *all* accelerators (vector of length n_accs).
 
@@ -75,11 +76,15 @@ def mapscore(
                         (0 if none); drives the context-switch energy.
     same_model[a]     — True if accelerator a last ran this very model (no
                         context switch needed).
+    togo_override     — predicted remaining seconds replacing the true-path
+                        ToGo (autoregressive jobs: the scheduler sees the
+                        length *predictor*, not the sampled token count).
     """
     lat_next = table.lat[:, next_layer]          # (A,)
     en_next = table.en[:, next_layer]            # (A,)
 
-    togo = togo_seconds(table, remaining)
+    togo = (togo_seconds(table, remaining) if togo_override is None
+            else togo_override)
     slack = deadline - t_curr
     if slack <= _EPS_SLACK:
         urgency = 0.0                            # hopeless frame: deprioritize

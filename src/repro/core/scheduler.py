@@ -247,17 +247,33 @@ class DreamScheduler(SchedulerBase):
         job.variant_locked = True
         graph = sim.graphs[job.graph_name]
         sim.variant_counts.setdefault(job.graph_name, 0)
-        if not graph.variants:
+        if not graph.variants or job.decode_len:
+            # autoregressive jobs never auto-degrade here: a chat variant
+            # rung caps max_new_tokens, i.e. silently truncates the
+            # response — a quality cut only the SLO ladder (which charges
+            # degradation into UXCost) is entitled to take
             sim.variant_counts[job.graph_name] += 1
             return
         slack = job.slack(t)
-        if job.togo() <= slack:                 # original meets the deadline
+        # autoregressive jobs are judged on the predicted profile (the
+        # sampled token count is the engine's secret), classic jobs on the
+        # true-path ToGo — exactly what the dispatch scorer sees
+        togo0 = (job.sched_list[0] if job.sched_list is not None
+                 else job.togo())
+        if togo0 <= slack:                      # original meets the deadline
             sim.variant_counts[job.graph_name] += 1
             return
         chosen = None
         for v in graph.variants:                # ordered heavy -> light
             vt = sim.tables[v.name]
-            if float(vt.lat_mean.sum()) <= slack:
+            if v.genai is not None:
+                # ladder rungs differ by max_new_tokens, not layer cost:
+                # estimate a full generation at the variant's cap
+                est = float(vt.lat_mean[
+                    np.asarray(v.worst_path(), dtype=np.int64)].sum())
+            else:
+                est = float(vt.lat_mean.sum())
+            if est <= slack:
                 chosen = v
                 break
         if chosen is None:
@@ -321,7 +337,10 @@ class DreamScheduler(SchedulerBase):
             if getattr(job, "_togo_at", None) == ck:
                 togo = job._togo_v                 # type: ignore[attr-defined]
             else:
-                togo = togo_seconds(job.table, job.path[pos:])
+                # autoregressive jobs score against the length predictor's
+                # precomputed profile, never the sampled token count
+                togo = (job.sched_list[pos] if job.sched_list is not None
+                        else togo_seconds(job.table, job.path[pos:]))
                 job._togo_at = ck                  # type: ignore[attr-defined]
                 job._togo_v = togo                 # type: ignore[attr-defined]
             slack = job.deadline - t
@@ -427,6 +446,8 @@ class DreamScheduler(SchedulerBase):
             scores = mapscore(
                 job.table, nxt, job.path[job.pos:], t, job.t_cmpl,
                 job.deadline, prev_out, same, self.params,
+                togo_override=(job.sched_list[job.pos]
+                               if job.sched_list is not None else None),
             )[idle_idx]
             k = int(np.argmax(scores))
             if scores[k] > best_score:
@@ -452,9 +473,17 @@ class DreamScheduler(SchedulerBase):
         ft = _fast_table(job.table)
         row = ft.lat[acc_idx]
         lat_min = ft.lat_min
+        limit = len(path) - pos
+        if job.decode_len:
+            # token-level preemption: a dispatch block never crosses a
+            # token boundary, so between generated tokens the scheduler
+            # can reassess — preempt, smart-drop, or SLO-truncate
+            pl = job.prefill_len
+            limit = min(limit, (pl - pos) if pos < pl
+                        else job.decode_len - (pos - pl) % job.decode_len)
         n = 1
         cum = row[path[pos]]
-        for i in range(1, len(path) - pos):
+        for i in range(1, limit):
             li = path[pos + i]
             if row[li] > PREF_TOL * lat_min[li] or cum >= BLOCK_LATENCY_S:
                 break
@@ -469,8 +498,14 @@ class DreamScheduler(SchedulerBase):
         path = job.path[job.pos:]
         lat = job.table.lat[:, path]              # (A, remaining)
         pref = lat[acc_idx] <= PREF_TOL * lat.min(axis=0)
+        limit = len(path)
+        if job.decode_len:
+            # token-boundary cap — mirrors :meth:`_block_len` exactly
+            pl, pos = job.prefill_len, job.pos
+            limit = min(limit, (pl - pos) if pos < pl
+                        else job.decode_len - (pos - pl) % job.decode_len)
         n, cum = 1, float(lat[acc_idx, 0])
-        for i in range(1, len(path)):
+        for i in range(1, limit):
             if not pref[i] or cum >= BLOCK_LATENCY_S:
                 break
             cum += float(lat[acc_idx, i])

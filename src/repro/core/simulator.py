@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import warnings
 from bisect import insort
 from collections import deque
 from dataclasses import dataclass, replace
@@ -37,6 +38,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from .costmodel import CostTable, E_DRAM, build_tables, effective_deadline
+from .engine import EngineConfig
 from .types import Accelerator, ModelGraph, ModelSpec, Scenario, SYSTEMS
 from .uxcost import (WindowStats, uxcost, overall_dlv_rate,
                      overall_norm_energy, overall_pipeline_latency)
@@ -49,6 +51,16 @@ _EVENT_NAMES = ("arrival", "done", "window", "phase", "inject")
 #: arrival-process rng stream id, kept distinct from the path/cascade stream
 #: so trace replay (which consumes no arrival randomness) stays bit-exact.
 _ARRIVAL_STREAM = 0xA221
+
+#: token-count rng stream id (autoregressive generation lengths), distinct
+#: from both the path/cascade stream and the arrival stream: legacy
+#: (genai-free) populations never touch it, and replay feeds recorded draws
+#: back without consuming it — both directions stay bit-exact.
+_TOKEN_STREAM = 0x70C3
+
+#: EWMA smoothing factor for the per-model generation-length predictor
+#: (Sparse-DySta-style: completed generations feed the estimate).
+TOKEN_EWMA_ALPHA = 0.5
 
 #: Python-list mirrors of a CostTable's per-accelerator rows, keyed by
 #: ``id(table.lat)`` with the array pinned so the id cannot be recycled.
@@ -70,6 +82,35 @@ def _py_rows(table: CostTable) -> tuple:
              table.in_bytes.tolist(), table.out_bytes.tolist())
     _ROW_CACHE[key] = entry
     return entry
+
+
+def _genai_sched_cum(table: CostTable, path: np.ndarray, prefill_len: int,
+                     decode_len: int, pred_tokens: float) -> np.ndarray:
+    """Scheduler-visible remaining-time profile of an autoregressive job.
+
+    ``out[pos]`` is the *predicted* mean remaining latency at path position
+    ``pos``: the rest of the current phase (prefill tail, or the current
+    decode step's tail) plus ``pred_tokens`` worth of further decode steps —
+    the length predictor's estimate, not the sampled truth.  All three
+    scheduler arms (scalar fast path, numpy reference, SoA batch) read this
+    one precomputed array, so they agree bit-for-bit by construction.
+    """
+    lm = table.lat_mean
+    pl, dl = prefill_len, decode_len
+    decode_idx = path[pl: pl + dl]
+    step_s = float(lm[decode_idx].sum())
+    step_cum = [float(lm[decode_idx[w:]].sum()) for w in range(dl)]
+    out = np.zeros(len(path) + 1)
+    for pos in range(len(path)):
+        if pos < pl:
+            out[pos] = (float(lm[path[pos: pl]].sum())
+                        + pred_tokens * step_s)
+        else:
+            w = (pos - pl) % dl
+            done = (pos - pl) // dl
+            out[pos] = (step_cum[w]
+                        + max(pred_tokens - done - 1.0, 0.0) * step_s)
+    return out
 
 
 class JobTable:
@@ -176,6 +217,16 @@ class Job:
     worst_energy: float = 0.0
     is_tail: bool = True        # no dependents (frame-drop condition 3)
     variant_locked: bool = False
+    # ---- autoregressive (genai) jobs only; zero/None on classic frames.
+    # ``sched_cum`` replaces the true-path ToGo in every scheduler arm: the
+    # scheduler scores against the length *predictor*'s estimate, never the
+    # sampled token count (which the engine alone knows).
+    tokens_total: int = 0       # sampled generation length (tokens)
+    prefill_len: int = 0        # path positions [0, prefill_len) = prompt
+    decode_len: int = 0         # layers per decode step (token boundary)
+    pred_tokens: float = 0.0    # predictor estimate, frozen at creation
+    sched_cum: Optional[np.ndarray] = None  # predicted ToGo by position
+    sched_list: Optional[list] = None       # .tolist() fast view
 
     @property
     def n_layers(self) -> int:
@@ -204,6 +255,7 @@ class AccState:
     cur_job: Optional[Job] = None
     prev_base: Optional[str] = None   # base model name of last executed job
     prev_base_id: int = -1            # its interned id (SoA batch arm key)
+    prev_jid: int = -1                # its jid (token-preemption detection)
     prev_out_bytes: float = 0.0       # its last layer's activation bytes
     busy_time: float = 0.0            # cumulative, for utilization reporting
 
@@ -281,19 +333,41 @@ class Simulator:
         phase_script=None,
         record: bool = False,
         replay=None,
+        genai_predictor: bool = True,
+        engine: "EngineConfig | str | None" = None,
         obs=None,
         obs_node=None,
+        soa_slab: "bool | None" = None,
     ):
         self.scenario = scenario
         self.system_name = system if isinstance(system, str) else "custom"
         self.accs_spec = SYSTEMS[system] if isinstance(system, str) else system
         self.scheduler = scheduler
+        if soa_slab is not None:
+            # legacy flag shim: pre-EngineConfig callers toggled the slab
+            # arm directly; fold it into the config so one mechanism rules
+            warnings.warn(
+                "Simulator(soa_slab=...) is deprecated; pass "
+                "engine=EngineConfig(..., soa_slab=...) instead",
+                DeprecationWarning, stacklevel=2)
+            cfg = EngineConfig.make(engine) or EngineConfig()
+            engine = replace(cfg, soa_slab=soa_slab)
+        self.engine = EngineConfig.make(engine)
+        if self.engine is not None:
+            # instance-level pins; engine=None keeps class-attr behavior
+            self.engine.apply_simulator(self)
         self.duration_s = duration_s
         self.window_s = window_s
         self.stale_periods = stale_periods
         self.cs_latency_s = cs_latency_s
         self.rng = np.random.default_rng(seed)
         self.arrival_rng = np.random.default_rng([seed, _ARRIVAL_STREAM])
+        self.token_rng = np.random.default_rng([seed, _TOKEN_STREAM])
+        #: length predictor toggle — False runs the blind ablation (every
+        #: autoregressive job priced at its variant's max_new_tokens cap)
+        self.genai_predictor = genai_predictor
+        #: per-model EWMA of completed generation lengths
+        self._tok_ewma: dict[str, float] = {}
 
         #: live pipeline specs — phase scripts mutate these, not the
         #: (immutable) scenario the simulator was constructed from
@@ -328,7 +402,8 @@ class Simulator:
         self.deadlines: dict[str, float] = {
             s.model.name: effective_deadline(s.period_s,
                                              self.tables[s.model.name],
-                                             s.deadline_s)
+                                             s.deadline_s,
+                                             graph=s.model)
             for s in self.specs
         }
         self.accs = [AccState(i, a) for i, a in enumerate(self.accs_spec)]
@@ -377,6 +452,7 @@ class Simulator:
         self.phase_script = phase_script
         self.replay = replay
         self._replay_queues: dict[str, deque] = {}
+        self._replay_tokens: dict[str, deque] = {}
         if replay is not None:
             rs = replay.meta.get("scenario")
             if rs is not None and rs != scenario.name:
@@ -386,15 +462,26 @@ class Simulator:
                 name: deque(ts)
                 for name, ts in replay.arrivals_by_model().items()
             }
+            self._replay_tokens = {
+                name: deque(ns)
+                for name, ns in replay.tokens_by_model().items()
+            }
+            # the predictor setting is part of the recorded run's identity
+            self.genai_predictor = bool(
+                replay.meta.get("genai_predictor", True))
         self.recorder = None
         self.trace = None
         if record:
             from repro.scenarios.trace import TraceRecorder
-            self.recorder = TraceRecorder({
+            meta = {
                 "scenario": scenario.name, "system": self.system_name,
                 "seed": seed, "duration_s": duration_s,
                 "window_s": window_s,
-            })
+            }
+            if not self.genai_predictor:
+                # non-default only, so legacy traces keep identical headers
+                meta["genai_predictor"] = False
+            self.recorder = TraceRecorder(meta)
         #: cross-simulator cascade surface (used by the fleet layer when a
         #: pipeline is split across nodes): completions of models named here
         #: are queued on ``pending_completions`` for an external driver to
@@ -559,7 +646,8 @@ class Simulator:
         # the in-flight arrival event still uses the old period; the stream
         # converges to the new rate from the next inter-arrival onward
         self.deadlines[name] = effective_deadline(
-            spec.period_s, self.tables[name], spec.deadline_s)
+            spec.period_s, self.tables[name], spec.deadline_s,
+            graph=spec.model)
         # the stale-abort threshold of queued head jobs moves with the
         # period — re-arm their lazy-heap entries so a shrunk grace window
         # still fires on time (old entries expire harmlessly)
@@ -592,7 +680,8 @@ class Simulator:
         for v in spec.model.variants:
             self.graphs[v.name] = v
         self.deadlines[name] = effective_deadline(
-            spec.period_s, self.tables[name], spec.deadline_s)
+            spec.period_s, self.tables[name], spec.deadline_s,
+            graph=spec.model)
         self.drop_history[name] = []
         idx = len(self.specs)
         self.specs.append(spec)
@@ -713,8 +802,11 @@ class Simulator:
         # the scheduler scores with the *pairwise* remaining-path sum
         # (mapscore.togo_seconds), not the sequential suffix cumsum above —
         # compute it here and seed the per-job memo so the scalar arm
-        # never recomputes it
-        togo = float(tab.lat_mean[job.path[pos:]].sum())
+        # never recomputes it.  Autoregressive jobs instead read the
+        # precomputed predicted profile (the scheduler must not see the
+        # sampled token count).
+        togo = (job.sched_list[pos] if job.sched_list is not None
+                else float(tab.lat_mean[job.path[pos:]].sum()))
         soa.togo_sched[row] = togo
         job._togo_at = (pos, id(tab))      # type: ignore[attr-defined]
         job._togo_v = togo                 # type: ignore[attr-defined]
@@ -744,6 +836,34 @@ class Simulator:
             soa.compact()
 
     # --------------------------------------------------------------- jobs
+    def _draw_tokens(self, name: str, meta, t: float) -> int:
+        """Sample (or replay) one generation length.  Draws live on the
+        dedicated token stream, so genai-free populations and the
+        path/cascade stream are untouched; recorded draws replay without
+        consuming the stream (per-model FIFO in creation order)."""
+        q = self._replay_tokens.get(name)
+        if q:
+            n = int(q.popleft())
+        else:
+            n = int(min(self.token_rng.geometric(
+                1.0 / max(float(meta.token_mean), 1.0)),
+                meta.max_new_tokens))
+        if self.recorder is not None:
+            self.recorder.tokens(t, name, n)
+        return n
+
+    def _predict_tokens(self, name: str, meta) -> float:
+        """Length predictor: EWMA of this model's completed generation
+        lengths, clamped to [1, cap].  Blind mode — and a cold predictor —
+        prices every job at the cap (the static worst case)."""
+        cap = float(meta.max_new_tokens)
+        if not self.genai_predictor:
+            return cap
+        prev = self._tok_ewma.get(name)
+        if prev is None:
+            return cap
+        return min(max(prev, 1.0), cap)
+
     def _create_job(self, model_idx: int, t: float,
                     origin: Optional[float] = None,
                     parent_uid: Optional[str] = None,
@@ -751,7 +871,12 @@ class Simulator:
         spec = self.specs[model_idx]
         graph = spec.model
         table = self.tables[graph.name]
-        path = np.asarray(graph.sample_path(self.rng), dtype=np.int64)
+        g = graph.genai
+        if g is not None:
+            n_tok = self._draw_tokens(graph.name, g, t)
+            path = np.asarray(graph.genai_path(n_tok), dtype=np.int64)
+        else:
+            path = np.asarray(graph.sample_path(self.rng), dtype=np.int64)
         lat_mean = table.lat_mean[path]
         lat_min = table.lat_min[path]
         cum_mean = np.concatenate([np.cumsum(lat_mean[::-1])[::-1], [0.0]])
@@ -773,6 +898,15 @@ class Simulator:
             worst_energy=float(table.en_max[path].sum()),
             is_tail=self._is_chain_tail(model_idx),
         )
+        if g is not None:
+            job.tokens_total = n_tok
+            job.prefill_len = g.prefill_len
+            job.decode_len = len(graph.layers) - g.prefill_len
+            job.pred_tokens = self._predict_tokens(graph.name, g)
+            job.sched_cum = _genai_sched_cum(
+                table, path, job.prefill_len, job.decode_len,
+                job.pred_tokens)
+            job.sched_list = job.sched_cum.tolist()
         self.jobs[job.jid] = job
         self.ready[job.jid] = job
         heapq.heappush(
@@ -811,22 +945,79 @@ class Simulator:
         every job created from now on; jobs already queued or running are
         untouched (frames in flight keep their quality).  Stats keys and
         the ``worst_energy`` normalizer stay on the base graph, exactly as
-        per-job supernet switching does.  Returns the now-active graph."""
-        del t  # takes effect immediately; kept for call-site symmetry
+        per-job supernet switching does.  Autoregressive models degrade
+        *mid-generation* as well: the new level's ``max_new_tokens`` cap is
+        applied to this model's queued (not running) jobs at their next
+        token boundary — a long generation under pressure finishes early
+        with what it has.  Returns the now-active graph."""
         graph = self.specs[self._index_of(name)].model
         if level <= 0 or not graph.variants:
             self._variant_override.pop(name, None)
-            return graph
-        v = graph.variants[min(int(level), len(graph.variants)) - 1]
-        self._variant_override[name] = v
-        return v
+            active = graph
+        else:
+            active = graph.variants[min(int(level), len(graph.variants)) - 1]
+            self._variant_override[name] = active
+        if graph.genai is not None and active.genai is not None:
+            self._genai_truncate_queued(name, active.genai.max_new_tokens, t)
+        return active
+
+    def _genai_truncate_queued(self, name: str, cap: int, t: float) -> None:
+        """Mid-generation degradation actuator: clamp the generation length
+        of ``name``'s queued (not running) jobs to ``cap``, never below the
+        tokens already (partially) emitted.  A job whose position already
+        reaches the clamped path end completes immediately with what it
+        has; running blocks are untouched (an accelerator cannot abandon a
+        launched layer).  Promotions (cap >= sampled length) are no-ops, so
+        classic populations and every pre-genai trace are unaffected."""
+        idx = self._index_of(name)
+        finished: list[Job] = []
+        for job in self.jobs.values():
+            if (job.model_idx != idx or job.running or job.done
+                    or job.tokens_total <= 0):
+                continue
+            pl, dl = job.prefill_len, job.decode_len
+            done_tok = 0 if job.pos <= pl else -((pl - job.pos) // dl)
+            new_t = min(job.tokens_total, max(done_tok, int(cap)))
+            if new_t >= job.tokens_total:
+                continue
+            table = job.table
+            path = job.path[: pl + new_t * dl]
+            lat_mean = table.lat_mean[path]
+            lat_min = table.lat_min[path]
+            job.path = path
+            job.path_list = path.tolist()
+            job.cum_mean = np.concatenate(
+                [np.cumsum(lat_mean[::-1])[::-1], [0.0]])
+            job.cum_min = np.concatenate(
+                [np.cumsum(lat_min[::-1])[::-1], [0.0]])
+            job.tokens_total = new_t
+            job.pred_tokens = min(job.pred_tokens, float(new_t))
+            job.sched_cum = _genai_sched_cum(table, path, pl, dl,
+                                             job.pred_tokens)
+            job.sched_list = job.sched_cum.tolist()
+            if job.pos >= len(path):
+                finished.append(job)
+                continue
+            if self.soa is not None:
+                row = self.soa.row_of.get(job.jid)
+                if row is not None:
+                    self._soa_refresh(job, row)
+        for job in finished:
+            self._finish_job(job, t, dropped=False)
 
     def switch_variant(self, job: Job, variant: ModelGraph) -> None:
         """Supernet switching: swap the (not-yet-started) job to a lighter
-        weight-sharing variant. worst_energy keeps the original's normalizer."""
+        weight-sharing variant. worst_energy keeps the original's normalizer.
+        Autoregressive jobs keep their sampled token count, truncated to the
+        variant's ``max_new_tokens`` cap (the degradation-ladder knob)."""
         assert job.pos == 0 and not job.running
         table = self.tables[variant.name]
-        path = np.asarray(variant.worst_path(), dtype=np.int64)
+        g = variant.genai
+        if g is not None and job.tokens_total > 0:
+            n_tok = min(job.tokens_total, g.max_new_tokens)
+            path = np.asarray(variant.genai_path(n_tok), dtype=np.int64)
+        else:
+            path = np.asarray(variant.worst_path(), dtype=np.int64)
         lat_mean = table.lat_mean[path]
         lat_min = table.lat_min[path]
         job.graph_name = variant.name
@@ -835,6 +1026,24 @@ class Simulator:
         job.path_list = path.tolist()
         job.cum_mean = np.concatenate([np.cumsum(lat_mean[::-1])[::-1], [0.0]])
         job.cum_min = np.concatenate([np.cumsum(lat_min[::-1])[::-1], [0.0]])
+        if g is not None and job.tokens_total > 0:
+            job.tokens_total = n_tok
+            job.prefill_len = g.prefill_len
+            job.decode_len = len(variant.layers) - g.prefill_len
+            job.pred_tokens = min(job.pred_tokens, float(g.max_new_tokens))
+            job.sched_cum = _genai_sched_cum(
+                table, path, job.prefill_len, job.decode_len,
+                job.pred_tokens)
+            job.sched_list = job.sched_cum.tolist()
+        elif job.tokens_total > 0:
+            # the variant dropped the genai spec: the job becomes a classic
+            # worst-path frame — clear the autoregressive view
+            job.tokens_total = 0
+            job.prefill_len = 0
+            job.decode_len = 0
+            job.pred_tokens = 0.0
+            job.sched_cum = None
+            job.sched_list = None
         if self.soa is not None:
             row = self.soa.row_of.get(job.jid)
             if row is not None:
@@ -879,6 +1088,15 @@ class Simulator:
                 self._m_energy.inc(job.energy_used, node=self._node_lbl)
             self._m_latency.observe(t - job.arrival, node=self._node_lbl)
         if not dropped:
+            if job.tokens_total > 0:
+                # length-predictor update: completed generations feed the
+                # per-model EWMA (drops carry no length signal)
+                prev = self._tok_ewma.get(job.base_name)
+                tok = float(job.tokens_total)
+                self._tok_ewma[job.base_name] = (
+                    tok if prev is None
+                    else (1.0 - TOKEN_EWMA_ALPHA) * prev
+                    + TOKEN_EWMA_ALPHA * tok)
             # a completed tail (no dependents, local or remote) closes its
             # pipeline: record head-arrival -> tail-completion latency
             if job.is_tail:
@@ -938,6 +1156,15 @@ class Simulator:
     def _dispatch(self, d: Dispatch, t: float) -> None:
         job, acc = d.job, self.accs[d.acc_idx]
         assert not acc.busy and not job.running and not job.finished_exec
+        if (self.recorder is not None and acc.prev_jid >= 0
+                and acc.prev_jid != job.jid):
+            pj = self.jobs.get(acc.prev_jid)
+            if (pj is not None and not pj.done and not pj.running
+                    and pj.tokens_total > 0 and pj.pos > pj.prefill_len):
+                # token-level preemption: the decode loop this accelerator
+                # was advancing yields mid-generation to another job —
+                # informational record (replay derives nothing from it)
+                self.recorder.preempt(t, pj.base_name, acc.idx)
         n = min(d.n_layers, job.n_layers - job.pos)
         if n < 8:
             # numpy reduces sequentially below 8 elements (pairwise blocking
@@ -1008,6 +1235,7 @@ class Simulator:
         acc.busy = False
         acc.cur_job = None
         acc.prev_base = job.base_name
+        acc.prev_jid = job.jid
         acc.prev_out_bytes = _py_rows(job.table)[4][last_layer]
         soa = self.soa
         if soa is not None:

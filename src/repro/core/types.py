@@ -74,6 +74,24 @@ class Layer:
 
 
 @dataclass(frozen=True)
+class GenAIMeta:
+    """Autoregressive-generation spec attached to a :class:`ModelGraph`.
+
+    Layers ``[0, prefill_len)`` run once per job (the prompt / prefill
+    phase); layers ``[prefill_len, n_layers)`` form ONE decode step and
+    repeat once per generated token.  Per-job token counts are stochastic
+    (geometric with mean ``token_mean``, capped at ``max_new_tokens``),
+    drawn by the simulator on a dedicated RNG stream.  ``max_new_tokens``
+    doubles as the degradation-ladder knob: lighter variants carry a
+    smaller cap.
+    """
+
+    prefill_len: int
+    max_new_tokens: int
+    token_mean: float
+
+
+@dataclass(frozen=True)
 class ModelGraph:
     """A model as an ordered layer list plus its dynamic-behaviour spec.
 
@@ -84,6 +102,8 @@ class ModelGraph:
         BranchyNet-style); inference stops after ``layer_idx`` w.p. prob.
       * ``variants``: lighter weight-sharing Supernet variants (Once-for-All);
         variant 0 is the original (heaviest). Used by Supernet switching.
+      * ``genai``: autoregressive prefill/decode spec — the execution path
+        repeats the decode segment once per generated token.
     """
 
     name: str
@@ -92,6 +112,7 @@ class ModelGraph:
     skip_prob: float = 0.0
     exit_points: tuple[tuple[int, float], ...] = ()
     variants: tuple["ModelGraph", ...] = ()
+    genai: Optional[GenAIMeta] = None
 
     @property
     def macs(self) -> int:
@@ -118,8 +139,22 @@ class ModelGraph:
                     return path
         return path
 
+    def genai_path(self, n_tokens: int) -> list[int]:
+        """Concrete execution path for an autoregressive job emitting
+        ``n_tokens``: the prefill segment once, then the decode segment
+        repeated per token (layer indices repeat on purpose — every
+        consumer gathers per-index, so repetition is well-defined)."""
+        g = self.genai
+        pl = g.prefill_len
+        decode = list(range(pl, len(self.layers)))
+        return list(range(pl)) + decode * max(int(n_tokens), 1)
+
     def worst_path(self) -> list[int]:
-        """Longest path (no skips, no early exit) — static-scheduler view."""
+        """Longest path (no skips, no early exit) — static-scheduler view.
+        For autoregressive graphs: prefill + ``max_new_tokens`` decode
+        repetitions, the longest generation the cap admits."""
+        if self.genai is not None:
+            return self.genai_path(self.genai.max_new_tokens)
         return list(range(len(self.layers)))
 
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from dataclasses import replace as _dc_replace
 
-from .types import Layer, ModelGraph, OpType
+from .types import GenAIMeta, Layer, ModelGraph, OpType
 
 
 def conv(name: str, K: int, C: int, R: int, Y: int, X: int, S: int | None = None) -> Layer:
@@ -290,6 +290,44 @@ def gnmt(name: str = "gnmt_translate", chunk: int = 12, hidden: int = 1024,
     return ModelGraph(name=name, layers=tuple(L))
 
 
+def chat_llm(name: str = "chat_llm", d_model: int = 512,
+             prompt_tokens: int = 96, n_blocks: int = 4,
+             max_new_tokens: int = 24, token_mean: float = 10.0,
+             vocab: int = 8000) -> ModelGraph:
+    """Compact on-device chat LLM in autoregressive (prefill/decode) form.
+
+    The prefill phase runs the transformer blocks as GEMMs over the whole
+    ``prompt_tokens``-long prompt (compute-bound under the roofline); each
+    decode step re-runs the same blocks as single-token GEMVs plus a
+    logits projection (weight streaming dominates — memory-bound), and
+    repeats once per generated token.  Per-job token counts are geometric
+    with mean ``token_mean`` capped at ``max_new_tokens``; the two capped
+    variants give the SLO degradation ladder its ``max_new_tokens`` rungs.
+    """
+    L: list[Layer] = []
+    for i in range(n_blocks):
+        # attention in/out + MLP up/down, folded to two fat GEMMs per block
+        L.append(fc(f"prefill.b{i}.attn", 2 * d_model, d_model,
+                    M=prompt_tokens))
+        L.append(fc(f"prefill.b{i}.mlp", d_model, 2 * d_model,
+                    M=prompt_tokens))
+    prefill_len = len(L)
+    for i in range(n_blocks):
+        L.append(fc(f"decode.b{i}.attn", 2 * d_model, d_model))
+        L.append(fc(f"decode.b{i}.mlp", d_model, 2 * d_model))
+    L.append(fc("decode.logits", vocab // 8, d_model))
+    meta = GenAIMeta(prefill_len=prefill_len, max_new_tokens=max_new_tokens,
+                     token_mean=token_mean)
+    base = ModelGraph(name=name, layers=tuple(L), genai=meta)
+    variants = tuple(
+        _dc_replace(base, name=f"{name}@v{k}",
+                    genai=_dc_replace(meta, max_new_tokens=cap))
+        for k, cap in enumerate(
+            (max(max_new_tokens // 2, 1), max(max_new_tokens // 4, 1)),
+            start=1))
+    return _dc_replace(base, variants=variants)
+
+
 # ---------------------------------------------------------------------------
 # Once-for-All Supernet (4 weight-sharing variants, §4.5)
 # ---------------------------------------------------------------------------
@@ -336,6 +374,7 @@ ZOO_BUILDERS = {
     "kws_res8": kws_res8,
     "gnmt": gnmt,
     "ofa": ofa_supernet,
+    "chat_llm": chat_llm,
 }
 
 

@@ -150,6 +150,21 @@ class ScenarioBuilder:
             deadline_factor=deadline_factor, arrival=arrival))
         return self
 
+    def add_genai_stream(self, fps: float, *, name: Optional[str] = None,
+                         kwargs: Optional[dict] = None,
+                         depends_on: Optional[str] = None,
+                         trigger_prob: float = 0.5,
+                         deadline_factor: Optional[float] = None,
+                         arrival: Union[ArrivalProcess, dict, None] = None,
+                         ) -> "ScenarioBuilder":
+        """Append an autoregressive chat_llm stage (prefill + stochastic
+        per-job decode loop).  Thin sugar over ``model("chat_llm", ...)``;
+        ``kwargs`` forwards chat_llm builder parameters (d_model,
+        prompt_tokens, max_new_tokens, token_mean, ...)."""
+        return self.model("chat_llm", fps, name=name, kwargs=kwargs,
+                          depends_on=depends_on, trigger_prob=trigger_prob,
+                          deadline_factor=deadline_factor, arrival=arrival)
+
     # ------------------------------------------------------------ validate
     def validate(self) -> list[str]:
         """All model names for a valid scenario (raises ScenarioError)."""

@@ -115,3 +115,42 @@ def _ar_social(cascade_prob: float = 0.5) -> ScenarioBuilder:
 
 TABLE3 = ("VR_Gaming", "AR_Call", "Drone_Outdoor", "Drone_Indoor",
           "AR_Social")
+
+
+# ---------------------------------------------------------------------------
+# Generative-AI scenarios (autoregressive chat_llm job family)
+# ---------------------------------------------------------------------------
+
+
+@register("Chat_Assistant")
+def _chat_assistant(cascade_prob: float = 0.5) -> ScenarioBuilder:
+    """Mixed interactive assistant: an autoregressive chat head sharing
+    the device with a vision pipeline — the paper's dynamic-workload
+    stress case for token-level preemption (the fixed-deadline vision
+    stream must be able to preempt the chat decode loop mid-generation).
+    """
+    return (ScenarioBuilder("Chat_Assistant")
+            .add_genai_stream(fps=4, name="chat_llm",
+                              kwargs={"max_new_tokens": 24,
+                                      "token_mean": 10.0})
+            .model("ssd_mnv2", fps=30, name="cam_det_ssd",
+                   kwargs={"res": 640})
+            .model("handpose", fps=30, name="pose_handpose",
+                   kwargs={"res": 320}, depends_on="cam_det_ssd",
+                   trigger_prob=cascade_prob)
+            .model("kws_res8", fps=15, name="kws_res8"))
+
+
+@register("Voice_Agent")
+def _voice_agent(cascade_prob: float = 0.5) -> ScenarioBuilder:
+    """Speech-triggered agent: keyword spotting cascades into an
+    autoregressive response generator, next to a periodic context model.
+    Exercises genai jobs *as cascade tails* (triggered arrivals)."""
+    return (ScenarioBuilder("Voice_Agent")
+            .model("kws_res8", fps=15, name="kws_res8")
+            .add_genai_stream(fps=15, name="reply_llm",
+                              kwargs={"max_new_tokens": 16,
+                                      "token_mean": 6.0},
+                              depends_on="kws_res8",
+                              trigger_prob=cascade_prob)
+            .model("fbnet_c", fps=30, name="ctx_fbnet_c"))

@@ -15,6 +15,15 @@ produce identical bytes):
     {"type": "meta", "version": 1, "scenario": ..., "seed": ..., ...}
     {"type": "arrival", "t": 0.0123, "model": "kws_res8"}
     {"type": "phase", "t": 2.0, "action": {"kind": "scale_fps", ...}}
+    {"type": "tokens", "t": 0.0123, "model": "chat_llm", "n": 7}
+    {"type": "preempt", "t": 0.5, "model": "chat_llm", "acc": 1}
+
+``tokens`` records an autoregressive job's sampled generation length (a
+draw on the simulator's dedicated token stream); replay feeds the draws
+back per-model in creation order, so the token stream — like the arrival
+stream — is never consumed during replay.  ``preempt`` marks a mid-decode
+job yielding its accelerator to another job at a token boundary; it is
+informational (replay derives nothing from it).
 """
 from __future__ import annotations
 
@@ -45,6 +54,14 @@ class Trace:
             out.setdefault(m, []).append(t)
         return out
 
+    def tokens_by_model(self) -> dict[str, list[int]]:
+        """Recorded generation lengths per model, in creation order."""
+        out: dict[str, list[int]] = {}
+        for e in self.events:
+            if e["type"] == "tokens":
+                out.setdefault(e["model"], []).append(int(e["n"]))
+        return out
+
 
 class TraceRecorder:
     """Collects events in engine-processing order during a live run."""
@@ -61,6 +78,14 @@ class TraceRecorder:
         self.events.append({"type": "phase", "t": float(t),
                             "action": action_cfg})
 
+    def tokens(self, t: float, model: str, n: int) -> None:
+        self.events.append({"type": "tokens", "t": float(t),
+                            "model": model, "n": int(n)})
+
+    def preempt(self, t: float, model: str, acc: int) -> None:
+        self.events.append({"type": "preempt", "t": float(t),
+                            "model": model, "acc": int(acc)})
+
     def trace(self) -> Trace:
         return Trace(meta=dict(self.meta), events=list(self.events))
 
@@ -71,7 +96,9 @@ def dumps(trace: Trace) -> str:
     return "\n".join(lines) + "\n"
 
 
-def loads(text: str, *, event_kinds: tuple[str, ...] = ("arrival", "phase"),
+def loads(text: str, *,
+          event_kinds: tuple[str, ...] = ("arrival", "phase",
+                                          "tokens", "preempt"),
           version: int = TRACE_VERSION) -> Trace:
     """Parse a JSONL trace.  ``event_kinds`` is the set of accepted event
     types — the default is the simulator trace; layered formats (the fleet

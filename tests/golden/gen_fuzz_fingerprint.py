@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Record the fuzz_streams RNG fingerprint.
+
+``FleetScenarioBuilder.fuzz_streams`` promises byte-stable populations
+for a fixed (seed, kwargs) combination.  This script serializes the
+fuzzed fleet events for a grid of legacy call forms and commits a
+sha256 per combination; ``tests/test_fuzz_spec.py`` asserts both the
+legacy shim and the ``FuzzSpec`` form still reproduce these hashes.
+
+Regenerate (ONLY after an intentional, reviewed fuzzer change):
+
+    PYTHONPATH=src python tests/golden/gen_fuzz_fingerprint.py
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                os.pardir, os.pardir, "src"))
+
+GOLDEN_DIR = os.path.dirname(os.path.abspath(__file__))
+
+#: name -> legacy fuzz_streams kwargs (n_streams/seed positional)
+COMBOS = {
+    "plain": dict(n_streams=12, seed=3),
+    "scaled_window": dict(n_streams=10, seed=7, t0=0.1, t1=0.8,
+                          fps_scale=0.4),
+    "cascades": dict(n_streams=8, seed=11, cascade_prob=1.0, max_depth=3,
+                     cascades_only=True, max_pipelines=2,
+                     deterministic_arrivals=True),
+    "lifecycle": dict(n_streams=14, seed=5, depart_frac=0.5,
+                      rejoin_frac=0.4, t_depart0=0.4, t_depart1=0.9),
+    "tiered_supernet": dict(n_streams=16, seed=9, fps_scale=0.55,
+                            tier_mix=(1.0, 2.0, 2.0), supernet_frac=0.5,
+                            deterministic_arrivals=True),
+}
+
+
+def scenario_blob(kwargs: dict) -> bytes:
+    from repro.cluster import FleetScenarioBuilder
+    kw = dict(kwargs)
+    b = FleetScenarioBuilder("fuzz_fingerprint")
+    b.node("4K_1WS2OS")
+    b.fuzz_streams(kw.pop("n_streams"), kw.pop("seed"), **kw)
+    scn = b.build()
+    events = [(e.t, e.kind, e.payload) for e in scn.events]
+    return json.dumps(events, sort_keys=True, default=str).encode()
+
+
+def main() -> None:
+    out = {}
+    for name, kwargs in COMBOS.items():
+        blob = scenario_blob(kwargs)
+        out[name] = {
+            "kwargs": {k: (list(v) if isinstance(v, tuple) else v)
+                       for k, v in kwargs.items()},
+            "sha256": hashlib.sha256(blob).hexdigest(),
+            "bytes": len(blob),
+        }
+        print(f"fuzz_fingerprint: {name:16s} {len(blob):7d} bytes  "
+              f"{out[name]['sha256'][:16]}")
+    path = os.path.join(GOLDEN_DIR, "fuzz_fingerprint.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"fuzz_fingerprint: manifest -> {path}")
+
+
+if __name__ == "__main__":
+    main()

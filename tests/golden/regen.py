@@ -41,6 +41,7 @@ CORPUS = {
     "lifecycle_churn": ("lifecycle_uncontended", 14),
     "contended_links": ("lifecycle", 15),
     "tuned_score": ("tuned", 16),
+    "genai_mixed": ("genai", 17),
 }
 
 

@@ -4,8 +4,9 @@ stage-split cascade placement and migration/transfer cost accounting."""
 import numpy as np
 import pytest
 
-from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
-                           NodeTelemetry, RoundRobinRouter, TransferModel,
+from repro.cluster import (CascadeFuzz, FleetScenarioBuilder,
+                           FleetSimulator, FuzzSpec, NodeTelemetry,
+                           RoundRobinRouter, TransferModel,
                            canonical_stream_model, make_policy,
                            run_fleet, split_pipelines)
 from repro.cluster import trace as ftrace
@@ -29,8 +30,8 @@ def small_fleet(seed=2, n_streams=24, churn=False, dur=1.5):
         b.node("8K_1WS2OS", at=0.4 * dur)
         b.node_drain(nids[2], at=0.5 * dur)
         b.node_leave(nids[1], at=0.7 * dur)
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=0.5 * dur,
-                   fps_scale=0.25)
+    b.fuzz_streams(FuzzSpec(n_streams=n_streams, seed=seed,
+                            t0=0.0, t1=0.5 * dur, fps_scale=0.25))
     return b.build()
 
 
@@ -98,7 +99,7 @@ def test_fleet_builder_validates():
     late.node("4K_2WS")
     nid = late.node("8K_2OS", at=1.0)
     late.node_leave(nid, at=0.5)              # leave precedes the join
-    late.fuzz_streams(2, seed=0)
+    late.fuzz_streams(FuzzSpec(n_streams=2, seed=0))
     with pytest.raises(ScenarioError):
         late.build()
 
@@ -216,9 +217,10 @@ def cascade_fleet(seed=3, n_streams=10, dur=1.5, churn=False):
     if churn:
         b.node("8K_1WS2OS", at=0.4 * dur)
         b.node_drain(nids[0], at=0.5 * dur)
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=0.5 * dur,
-                   fps_scale=0.25, cascade_prob=1.0, max_depth=3,
-                   cascades_only=True)
+    b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0, t1=0.5 * dur,
+        fps_scale=0.25, cascade=CascadeFuzz(prob=1.0, max_depth=3,
+                                            only=True)))
     return b.build()
 
 

@@ -1,0 +1,208 @@
+"""API-consolidation shims: FuzzSpec and EngineConfig.
+
+PR 10 collapsed the historical 16-kwarg ``fuzz_streams`` call form into
+a structured ``FuzzSpec`` (cascade / lifecycle / SLO / genai sub-specs)
+and the five engine toggles into ``EngineConfig`` presets.  The legacy
+call forms keep working through DeprecationWarning shims; this module
+pins both directions of the contract:
+
+  * byte-stability — the legacy shim AND the FuzzSpec form both
+    reproduce the fingerprints recorded before the redesign
+    (tests/golden/fuzz_fingerprint.json), so nobody's seeded
+    populations moved;
+  * warning discipline — exactly one DeprecationWarning per legacy
+    call, zero warnings through the new forms (CI runs the repro test
+    lanes with DeprecationWarning promoted to error, so an internal
+    caller regressing onto the old form fails loudly).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import warnings
+
+import pytest
+
+from repro.core import EngineConfig, ENGINE_PRESETS, dream_full
+from repro.core import build_scenario as build_core_scenario
+from repro.core.simulator import Simulator
+from repro.cluster import (CascadeFuzz, FleetScenarioBuilder,
+                           FleetSimulator, FuzzSpec, GenAIFuzz,
+                           LifecycleFuzz, SLOFuzz)
+from repro.cluster import trace as ftrace
+from repro.scenarios.builder import ScenarioError
+
+FINGERPRINT_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                                "fuzz_fingerprint.json")
+with open(FINGERPRINT_PATH) as _f:
+    FINGERPRINTS = json.load(_f)
+
+#: the recorded legacy call forms, verbatim from the fingerprint script
+LEGACY = {
+    "plain": dict(n_streams=12, seed=3),
+    "scaled_window": dict(n_streams=10, seed=7, t0=0.1, t1=0.8,
+                          fps_scale=0.4),
+    "cascades": dict(n_streams=8, seed=11, cascade_prob=1.0, max_depth=3,
+                     cascades_only=True, max_pipelines=2,
+                     deterministic_arrivals=True),
+    "lifecycle": dict(n_streams=14, seed=5, depart_frac=0.5,
+                      rejoin_frac=0.4, t_depart0=0.4, t_depart1=0.9),
+    "tiered_supernet": dict(n_streams=16, seed=9, fps_scale=0.55,
+                            tier_mix=(1.0, 2.0, 2.0), supernet_frac=0.5,
+                            deterministic_arrivals=True),
+}
+
+#: hand-written FuzzSpec equivalents — deliberately NOT derived through
+#: the shim's own mapping code, so a mapping bug cannot hide
+SPECS = {
+    "plain": FuzzSpec(n_streams=12, seed=3),
+    "scaled_window": FuzzSpec(n_streams=10, seed=7, t0=0.1, t1=0.8,
+                              fps_scale=0.4),
+    "cascades": FuzzSpec(n_streams=8, seed=11, deterministic_arrivals=True,
+                         cascade=CascadeFuzz(prob=1.0, max_depth=3,
+                                             only=True, max_pipelines=2)),
+    "lifecycle": FuzzSpec(n_streams=14, seed=5,
+                          lifecycle=LifecycleFuzz(depart_frac=0.5,
+                                                  rejoin_frac=0.4,
+                                                  t0=0.4, t1=0.9)),
+    "tiered_supernet": FuzzSpec(n_streams=16, seed=9, fps_scale=0.55,
+                                deterministic_arrivals=True,
+                                slo=SLOFuzz(tier_mix=(1.0, 2.0, 2.0),
+                                            supernet_frac=0.5)),
+}
+
+
+def _population_sha(call) -> str:
+    """sha256 of the serialized fuzzed events, exactly as recorded by
+    tests/golden/gen_fuzz_fingerprint.py."""
+    b = FleetScenarioBuilder("fuzz_fingerprint")
+    b.node("4K_1WS2OS")
+    call(b)
+    scn = b.build()
+    events = [(e.t, e.kind, e.payload) for e in scn.events]
+    blob = json.dumps(events, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+@pytest.mark.parametrize("name", sorted(LEGACY))
+def test_legacy_form_matches_recorded_fingerprint(name):
+    kw = dict(LEGACY[name])
+    with pytest.warns(DeprecationWarning):
+        sha = _population_sha(
+            lambda b: b.fuzz_streams(kw.pop("n_streams"), kw.pop("seed"),
+                                     **kw))
+    assert sha == FINGERPRINTS[name]["sha256"]
+
+
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_spec_form_matches_recorded_fingerprint(name):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        sha = _population_sha(lambda b: b.fuzz_streams(SPECS[name]))
+    assert sha == FINGERPRINTS[name]["sha256"]
+
+
+def test_legacy_form_emits_exactly_one_deprecation_warning():
+    b = FleetScenarioBuilder("warn_count")
+    b.node("4K_1WS2OS")
+    with pytest.warns(DeprecationWarning) as rec:
+        b.fuzz_streams(6, 3)
+    assert len([w for w in rec
+                if w.category is DeprecationWarning]) == 1
+
+
+def test_spec_form_rejects_legacy_leftovers():
+    b = FleetScenarioBuilder("mixed_call")
+    b.node("4K_1WS2OS")
+    with pytest.raises(ScenarioError):
+        b.fuzz_streams(FuzzSpec(n_streams=6, seed=3), seed=3)
+    with pytest.raises(ScenarioError):
+        b.fuzz_streams(FuzzSpec(n_streams=6, seed=3), fps_scale=0.5)
+
+
+def test_legacy_form_requires_seed():
+    b = FleetScenarioBuilder("no_seed")
+    b.node("4K_1WS2OS")
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ScenarioError):
+            b.fuzz_streams(6)
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig: presets resolve the five toggles; deprecated per-toggle
+# constructor kwargs still work (once-warned) and stay bit-identical.
+# ---------------------------------------------------------------------------
+
+def _small_fleet():
+    b = FleetScenarioBuilder("engine_shim")
+    b.node("4K_2WS")
+    b.node("8K_2OS")
+    # genai share included so the autoregressive decode loop is part of
+    # what the presets must reproduce bit-identically
+    b.fuzz_streams(FuzzSpec(n_streams=8, seed=3, fps_scale=0.5,
+                            deterministic_arrivals=True,
+                            genai=GenAIFuzz(frac=0.34)))
+    return b.build()
+
+
+def _fleet_trace(**kw) -> str:
+    fs = FleetSimulator(_small_fleet(), "score", duration_s=1.0, seed=3,
+                        record=True, **kw)
+    return ftrace.dumps(fs.run().trace)
+
+
+def test_engine_presets_are_bit_identical():
+    default = _fleet_trace()
+    assert _fleet_trace(engine="soa") == default
+    assert _fleet_trace(engine="scalar") == default
+    assert _fleet_trace(engine=EngineConfig(engine="scalar")) == default
+
+
+def test_engine_preset_names_are_validated():
+    with pytest.raises(ValueError):
+        EngineConfig(engine="turbo")
+    assert set(ENGINE_PRESETS) == {"soa", "scalar"}
+
+
+def test_engine_resolve_applies_overrides():
+    cfg = EngineConfig(engine="scalar", soa_slab=True)
+    resolved = cfg.resolve()
+    assert resolved["soa_slab"] is True          # override wins
+    assert resolved["fast_path"] is False        # preset fills the rest
+
+
+def test_fleet_lazy_peek_shim_warns_once_and_matches():
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = _fleet_trace(lazy_peek=False)
+    assert len([w for w in rec
+                if w.category is DeprecationWarning]) == 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        new = _fleet_trace(engine=EngineConfig(lazy_peek=False))
+    assert legacy == new
+
+
+def _sim_result(**kw):
+    scn = build_core_scenario("AR_Social", 0.9)
+    sim = Simulator(scn, "4K_1WS2OS", dream_full(), duration_s=1.0, **kw)
+    r = sim.run()
+    return (r.uxcost, r.frames, r.drops, r.dlv_rate)
+
+
+def test_simulator_soa_slab_shim_warns_once_and_matches():
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = _sim_result(soa_slab=False)
+    assert len([w for w in rec
+                if w.category is DeprecationWarning]) == 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        new = _sim_result(engine=EngineConfig(soa_slab=False))
+    assert legacy == new
+
+
+def test_simulator_engine_presets_identical():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert _sim_result(engine="soa") == _sim_result()
+        assert _sim_result(engine="scalar") == _sim_result()

@@ -4,8 +4,9 @@ import math
 
 import pytest
 
-from repro.cluster import (ContendedLinks, FleetScenarioBuilder,
-                           FleetSimulator, TransferModel)
+from repro.cluster import (CascadeFuzz, ContendedLinks,
+                           FleetScenarioBuilder, FleetSimulator, FuzzSpec,
+                           LifecycleFuzz, TransferModel)
 from repro.cluster import trace as ftrace
 from repro.core.uxcost import (ModelWindowStats, WindowStats,
                                overall_pipeline_latency)
@@ -22,10 +23,12 @@ def lifecycle_fleet(seed=2, n_nodes=4, n_streams=16, dur=1.5, churn=False,
     if churn:
         b.node("8K_1WS2OS", at=0.4 * dur)
         b.node_drain(nids[1], at=0.5 * dur)
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=0.4 * dur,
-                   fps_scale=0.3, depart_frac=depart_frac,
-                   rejoin_frac=rejoin_frac, t_depart0=0.45 * dur,
-                   t_depart1=0.9 * dur)
+    b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0, t1=0.4 * dur,
+        fps_scale=0.3,
+        lifecycle=LifecycleFuzz(depart_frac=depart_frac,
+                                rejoin_frac=rejoin_frac,
+                                t0=0.45 * dur, t1=0.9 * dur)))
     return b.build()
 
 
@@ -91,8 +94,10 @@ def test_fuzz_lifecycle_draws_are_rng_compatible():
     def events(depart_frac):
         b = FleetScenarioBuilder("fz")
         b.node("4K_1WS2OS")
-        b.fuzz_streams(12, seed=7, t0=0.0, t1=0.5, fps_scale=0.3,
-                       depart_frac=depart_frac, rejoin_frac=0.5)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=12, seed=7, t0=0.0, t1=0.5, fps_scale=0.3,
+            lifecycle=LifecycleFuzz(depart_frac=depart_frac,
+                                    rejoin_frac=0.5)))
         return b.build().events
 
     plain = [e.to_config() for e in events(0.0)]
@@ -177,9 +182,10 @@ def test_split_depart_releases_every_stage(monkeypatch):
     b = FleetScenarioBuilder("split_depart")
     for i in range(4):
         b.node(SMALL_SYSTEMS[i])
-    sids = b.fuzz_streams(10, seed=3, t0=0.0, t1=0.5, fps_scale=0.25,
-                          cascade_prob=1.0, max_depth=3, cascades_only=True,
-                          depart_frac=1.0, t_depart0=0.6, t_depart1=1.2)
+    sids = b.fuzz_streams(FuzzSpec(
+        n_streams=10, seed=3, t0=0.0, t1=0.5, fps_scale=0.25,
+        cascade=CascadeFuzz(prob=1.0, max_depth=3, only=True),
+        lifecycle=LifecycleFuzz(depart_frac=1.0, t0=0.6, t1=1.2)))
     fs = FleetSimulator(b.build(), "score", duration_s=1.5, seed=3,
                         transfer=TransferModel(), split_stages=True)
     r = fs.run()
@@ -474,8 +480,9 @@ def test_pipeline_latency_includes_wire_time():
     b = FleetScenarioBuilder("wire")
     for s in ("4K_2WS", "8K_2OS", "4K_2OS", "8K_2WS"):
         b.node(s)
-    b.fuzz_streams(8, seed=3, t0=0.0, t1=0.5, fps_scale=0.25,
-                   cascade_prob=1.0, max_depth=3, cascades_only=True)
+    b.fuzz_streams(FuzzSpec(
+        n_streams=8, seed=3, t0=0.0, t1=0.5, fps_scale=0.25,
+        cascade=CascadeFuzz(prob=1.0, max_depth=3, only=True)))
     scn = b.build()
     live = FleetSimulator(scn, "score", duration_s=1.5, seed=3,
                           transfer=TransferModel(), split_stages=True,

@@ -21,7 +21,8 @@ from __future__ import annotations
 
 import pytest
 
-from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
+from repro.cluster import (CascadeFuzz, FleetScenarioBuilder,
+                           FleetSimulator, FuzzSpec, LifecycleFuzz,
                            TransferModel)
 
 SYSTEMS_MIX = ("4K_2WS", "8K_2OS", "4K_1WS2OS", "8K_1OS2WS")
@@ -102,13 +103,15 @@ def _churn_scenario(seed: int, split: bool = False):
     b.node_drain(nids[0], at=0.45)
     b.node_leave(nids[1], at=0.6)
     if split:
-        b.fuzz_streams(8, seed=seed, t0=0.0, t1=0.5, fps_scale=1.0,
-                       cascade_prob=1.0, max_depth=3, cascades_only=True,
-                       deterministic_arrivals=True)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=8, seed=seed, t0=0.0, t1=0.5, fps_scale=1.0,
+            deterministic_arrivals=True,
+            cascade=CascadeFuzz(prob=1.0, max_depth=3, only=True)))
     else:
-        b.fuzz_streams(16, seed=seed, t0=0.0, t1=0.5, fps_scale=0.25,
-                       depart_frac=0.4, rejoin_frac=0.5,
-                       t_depart0=0.35, t_depart1=0.9)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=16, seed=seed, t0=0.0, t1=0.5, fps_scale=0.25,
+            lifecycle=LifecycleFuzz(depart_frac=0.4, rejoin_frac=0.5,
+                                    t0=0.35, t1=0.9)))
     return b.build()
 
 

@@ -24,7 +24,7 @@ import time
 import pytest
 
 from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
-                           TransferModel)
+                           FuzzSpec, LifecycleFuzz, TransferModel)
 
 #: committed floor, simulated stream-seconds per wall-second (best-of-3)
 FLOOR_STREAMS_PER_WALL_S = 70.0
@@ -40,9 +40,10 @@ def _build_scenario():
     b = FleetScenarioBuilder("perf_smoke")
     nids = [b.node(SYSTEMS_MIX[i % len(SYSTEMS_MIX)]) for i in range(8)]
     b.node_drain(nids[0], at=0.5)
-    b.fuzz_streams(96, seed=7, t0=0.0, t1=0.6, fps_scale=0.25,
-                   depart_frac=0.3, rejoin_frac=0.3,
-                   t_depart0=0.4, t_depart1=0.9)
+    b.fuzz_streams(FuzzSpec(
+        n_streams=96, seed=7, t0=0.0, t1=0.6, fps_scale=0.25,
+        lifecycle=LifecycleFuzz(depart_frac=0.3, rejoin_frac=0.3,
+                                t0=0.4, t1=0.9)))
     return b.build()
 
 

@@ -4,8 +4,9 @@ byte-stability, and rejection accounting as a first-class UXCost outcome."""
 import pytest
 
 from repro.cluster import (AdmissionController, DEFAULT_SLO,
-                           FleetScenarioBuilder, FleetSimulator, LoadEstimator,
-                           SLOClass, SLOError, StreamState, TelemetryWindow,
+                           FleetScenarioBuilder, FleetSimulator, FuzzSpec,
+                           LifecycleFuzz, LoadEstimator, SLOClass, SLOError,
+                           SLOFuzz, StreamState, TelemetryWindow,
                            TIER_BEST_EFFORT, TIER_GUARANTEED, TIER_STANDARD,
                            TIER_DEFAULTS, slo_from_config)
 from repro.cluster import trace as ftrace
@@ -30,17 +31,19 @@ def tiered_fleet(seed=3, n_nodes=4, n_streams=24, dur=1.0, tiers=True,
     b = FleetScenarioBuilder("slo_fleet")
     for i in range(n_nodes):
         b.node(SMALL_SYSTEMS[i % len(SMALL_SYSTEMS)])
-    kw = dict(fps_scale=0.55, deterministic_arrivals=True,
-              supernet_frac=supernet_frac)
-    if tiers:
-        kw["tier_mix"] = (1.0, 2.0, 2.0)
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=round(0.35 * dur, 6),
-                   **kw)
+    slo_fuzz = SLOFuzz(tier_mix=(1.0, 2.0, 2.0) if tiers else None,
+                       supernet_frac=supernet_frac)
+    b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0, t1=round(0.35 * dur, 6),
+        fps_scale=0.55, deterministic_arrivals=True, slo=slo_fuzz))
     if burst:
-        b.fuzz_streams(n_streams // 2, seed=seed + 50_021,
-                       t0=round(0.45 * dur, 6), t1=round(0.7 * dur, 6),
-                       depart_frac=1.0, t_depart0=round(0.72 * dur, 6),
-                       t_depart1=round(0.9 * dur, 6), **kw)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=n_streams // 2, seed=seed + 50_021,
+            t0=round(0.45 * dur, 6), t1=round(0.7 * dur, 6),
+            fps_scale=0.55, deterministic_arrivals=True, slo=slo_fuzz,
+            lifecycle=LifecycleFuzz(depart_frac=1.0,
+                                    t0=round(0.72 * dur, 6),
+                                    t1=round(0.9 * dur, 6))))
     return b.build()
 
 
@@ -270,13 +273,17 @@ def test_builder_rejects_bad_slo_declarations():
     with pytest.raises(SLOError):
         b.add_stream(_entries(), slo=True)
     with pytest.raises(ScenarioError):
-        b.fuzz_streams(4, seed=0, tier_mix=(1.0, 2.0))
+        b.fuzz_streams(FuzzSpec(n_streams=4, seed=0,
+                                slo=SLOFuzz(tier_mix=(1.0, 2.0))))
     with pytest.raises(ScenarioError):
-        b.fuzz_streams(4, seed=0, tier_mix=(-1.0, 1.0, 1.0))
+        b.fuzz_streams(FuzzSpec(n_streams=4, seed=0,
+                                slo=SLOFuzz(tier_mix=(-1.0, 1.0, 1.0))))
     with pytest.raises(ScenarioError):
-        b.fuzz_streams(4, seed=0, tier_mix=(0.0, 0.0, 0.0))
+        b.fuzz_streams(FuzzSpec(n_streams=4, seed=0,
+                                slo=SLOFuzz(tier_mix=(0.0, 0.0, 0.0))))
     with pytest.raises(ScenarioError):
-        b.fuzz_streams(4, seed=0, supernet_frac=1.5)
+        b.fuzz_streams(FuzzSpec(n_streams=4, seed=0,
+                                slo=SLOFuzz(supernet_frac=1.5)))
 
 
 def _stream_events(scn):
@@ -290,8 +297,9 @@ def test_tier_draws_do_not_perturb_population():
     def build(tiers):
         b = FleetScenarioBuilder("iso")
         b.node("4K_1WS2OS")
-        b.fuzz_streams(12, seed=5, t0=0.0, t1=0.5,
-                       tier_mix=(1.0, 2.0, 2.0) if tiers else None)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=12, seed=5, t0=0.0, t1=0.5,
+            slo=SLOFuzz(tier_mix=(1.0, 2.0, 2.0) if tiers else None)))
         return b.build()
 
     plain, tiered = build(False), build(True)
@@ -309,7 +317,8 @@ def test_tier_draws_do_not_perturb_population():
 def test_supernet_frac_reheads_strided_streams():
     b = FleetScenarioBuilder("heads")
     b.node("4K_1WS2OS")
-    b.fuzz_streams(8, seed=5, t0=0.0, t1=0.5, supernet_frac=0.5)
+    b.fuzz_streams(FuzzSpec(n_streams=8, seed=5, t0=0.0, t1=0.5,
+                            slo=SLOFuzz(supernet_frac=0.5)))
     by_sid = sorted(_stream_events(b.build()), key=lambda e: e.payload["sid"])
     heads = [e.payload["entries"][0]["model"]["builder"] for e in by_sid]
     assert heads[::2] == ["ofa"] * 4                # every 2nd stream

@@ -3,9 +3,9 @@ fleet phase events, re-arming, hindsight scoring, replay bypass."""
 import numpy as np
 import pytest
 
-from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
-                          FleetTelemetry, STATIC_WEIGHTS, TelemetryWindow,
-                          TunedScoreRouter)
+from repro.cluster import (CascadeFuzz, FleetScenarioBuilder,
+                          FleetSimulator, FleetTelemetry, FuzzSpec,
+                          STATIC_WEIGHTS, TelemetryWindow, TunedScoreRouter)
 from repro.cluster import trace as ftrace
 from repro.core.adaptivity import CoordinateProbe, ProbeSearch
 from repro.scenarios import ScenarioError
@@ -21,8 +21,9 @@ def drift_fleet(seed=2, n_nodes=4, n_streams=24, dur=1.5, churn=False,
     if churn:
         b.node("8K_1WS2OS", at=0.4 * dur)
         b.node_drain(nids[1], at=0.5 * dur)
-    sids = b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=0.7 * dur,
-                          fps_scale=0.4, deterministic_arrivals=True)
+    sids = b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0, t1=0.7 * dur,
+        fps_scale=0.4, deterministic_arrivals=True))
     if phase:
         # half the population surges: the nodes hosting it degrade mid-run
         b.phase(scale_fps(3.0), at=round(0.45 * dur, 6),
@@ -175,7 +176,7 @@ def test_signal_free_window_holds_weights():
 def test_fleet_phase_validation():
     b = FleetScenarioBuilder("bad_phase")
     b.node("4K_2WS")
-    sid = b.fuzz_streams(1, seed=0)[0]
+    sid = b.fuzz_streams(FuzzSpec(n_streams=1, seed=0))[0]
     with pytest.raises(ScenarioError):       # model-addressed kinds stay
         b.phase(set_fps("det", 30.0), at=0.5)       # node-local
     with pytest.raises(ScenarioError):
@@ -226,9 +227,10 @@ def cascade_split_fleet(seed=3, n_streams=8, dur=0.8):
     b = FleetScenarioBuilder("tuner_cascade")
     for i in range(4):
         b.node(SYSTEMS[i % len(SYSTEMS)])
-    b.fuzz_streams(n_streams, seed=seed, t0=0.0, t1=0.5 * dur,
-                   fps_scale=0.25, cascade_prob=1.0, max_depth=3,
-                   cascades_only=True, deterministic_arrivals=True)
+    b.fuzz_streams(FuzzSpec(
+        n_streams=n_streams, seed=seed, t0=0.0, t1=0.5 * dur,
+        fps_scale=0.25, deterministic_arrivals=True,
+        cascade=CascadeFuzz(prob=1.0, max_depth=3, only=True)))
     return b.build()
 
 

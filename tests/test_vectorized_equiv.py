@@ -25,8 +25,9 @@ from __future__ import annotations
 
 import pytest
 
-from repro.cluster import (FleetScenarioBuilder, FleetSimulator,
-                           TransferModel)
+from repro.cluster import (CascadeFuzz, FleetScenarioBuilder,
+                           FleetSimulator, FuzzSpec, GenAIFuzz,
+                           LifecycleFuzz, SLOFuzz, TransferModel)
 from repro.cluster import trace as ftrace
 from repro.cluster.router import ScoreDrivenRouter
 from repro.core.scheduler import DreamScheduler
@@ -55,45 +56,60 @@ def build_scenario(kind: str, seed: int, duration_s: float = 1.0):
     kw: dict = {"duration_s": duration_s, "seed": seed, "record": True}
     if kind == "whole":
         b.node_drain(nids[0], at=round(0.5 * duration_s, 6))
-        b.fuzz_streams(20, seed=seed, t0=0.0,
-                       t1=round(0.5 * duration_s, 6), fps_scale=0.25)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=20, seed=seed, t0=0.0,
+            t1=round(0.5 * duration_s, 6), fps_scale=0.25))
         kw["policy"] = "score"
     elif kind == "split":
-        b.fuzz_streams(8, seed=seed, t0=0.0,
-                       t1=round(0.5 * duration_s, 6), fps_scale=1.0,
-                       cascade_prob=1.0, max_depth=3, cascades_only=True,
-                       deterministic_arrivals=True)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=8, seed=seed, t0=0.0,
+            t1=round(0.5 * duration_s, 6), fps_scale=1.0,
+            deterministic_arrivals=True,
+            cascade=CascadeFuzz(prob=1.0, max_depth=3, only=True)))
         kw.update(policy="score", split_stages=True,
                   transfer=TransferModel())
     elif kind == "slo":
-        b.fuzz_streams(24, seed=seed, t0=0.0,
-                       t1=round(0.35 * duration_s, 6), fps_scale=0.55,
-                       tier_mix=(1.0, 2.0, 2.0), supernet_frac=0.5,
-                       deterministic_arrivals=True)
-        b.fuzz_streams(24, seed=seed + 50_021,
-                       t0=round(0.45 * duration_s, 6),
-                       t1=round(0.7 * duration_s, 6), fps_scale=0.55,
-                       tier_mix=(1.0, 2.0, 2.0), supernet_frac=0.5,
-                       deterministic_arrivals=True, depart_frac=1.0,
-                       t_depart0=round(0.72 * duration_s, 6),
-                       t_depart1=round(0.9 * duration_s, 6))
+        tiered = SLOFuzz(tier_mix=(1.0, 2.0, 2.0), supernet_frac=0.5)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=24, seed=seed, t0=0.0,
+            t1=round(0.35 * duration_s, 6), fps_scale=0.55,
+            deterministic_arrivals=True, slo=tiered))
+        b.fuzz_streams(FuzzSpec(
+            n_streams=24, seed=seed + 50_021,
+            t0=round(0.45 * duration_s, 6),
+            t1=round(0.7 * duration_s, 6), fps_scale=0.55,
+            deterministic_arrivals=True, slo=tiered,
+            lifecycle=LifecycleFuzz(depart_frac=1.0,
+                                    t0=round(0.72 * duration_s, 6),
+                                    t1=round(0.9 * duration_s, 6))))
         kw.update(policy="score", slo=SLO, slo_every_s=0.1)
     elif kind == "lifecycle":
         b.node_drain(nids[0], at=round(0.55 * duration_s, 6))
-        b.fuzz_streams(20, seed=seed, t0=0.0,
-                       t1=round(0.5 * duration_s, 6), fps_scale=0.25,
-                       depart_frac=0.5, rejoin_frac=0.4,
-                       t_depart0=round(0.35 * duration_s, 6),
-                       t_depart1=round(0.9 * duration_s, 6))
+        b.fuzz_streams(FuzzSpec(
+            n_streams=20, seed=seed, t0=0.0,
+            t1=round(0.5 * duration_s, 6), fps_scale=0.25,
+            lifecycle=LifecycleFuzz(depart_frac=0.5, rejoin_frac=0.4,
+                                    t0=round(0.35 * duration_s, 6),
+                                    t1=round(0.9 * duration_s, 6))))
         kw.update(policy="score",
                   transfer=TransferModel(link_bandwidth_bytes_s=1.25e9),
                   rebalance_every_s=0.3)
     elif kind == "tuned":
-        b.fuzz_streams(20, seed=seed, t0=0.0,
-                       t1=round(0.6 * duration_s, 6), fps_scale=0.4,
-                       deterministic_arrivals=True)
+        b.fuzz_streams(FuzzSpec(
+            n_streams=20, seed=seed, t0=0.0,
+            t1=round(0.6 * duration_s, 6), fps_scale=0.4,
+            deterministic_arrivals=True))
         kw.update(policy="tuned_score", tune_every_s=0.15,
                   rebalance_every_s=0.3)
+    elif kind == "genai":
+        # mixed chat+vision population: stochastic token counts, decode
+        # yield points, EWMA length prediction — the autoregressive
+        # machinery must survive both engines bit-identically
+        b.fuzz_streams(FuzzSpec(
+            n_streams=18, seed=seed, t0=0.0,
+            t1=round(0.5 * duration_s, 6), fps_scale=0.5,
+            deterministic_arrivals=True, genai=GenAIFuzz(frac=0.34)))
+        kw["policy"] = "score"
     else:
         raise ValueError(kind)
     return b.build(), kw
@@ -135,7 +151,7 @@ def force_scalar(monkeypatch) -> None:
     monkeypatch.setattr(Simulator, "soa_slab", False)
 
 
-KINDS = ("whole", "split", "slo", "lifecycle", "tuned")
+KINDS = ("whole", "split", "slo", "lifecycle", "tuned", "genai")
 
 
 @pytest.mark.parametrize("kind", KINDS)
@@ -154,6 +170,22 @@ def test_vectorized_matches_scalar_across_seeds(seed, monkeypatch):
         force_scalar(m)
         ref = run_fingerprint("lifecycle", seed=seed)
     assert vec == ref
+
+
+def test_budget_aware_routing_matches_scalar_oracle(monkeypatch):
+    """SLO-budget-aware routing (urgency divided by the stream's tier
+    budget) must hold the same batched-vs-scalar bit-identity as the
+    budget-blind score — and must actually route differently on a tiered
+    population, or the flag is dead code."""
+    flat = run_fingerprint("slo", seed=5)
+    with monkeypatch.context() as m:
+        m.setattr(ScoreDrivenRouter, "budget_aware", True)
+        vec = run_fingerprint("slo", seed=5)
+        with monkeypatch.context() as m2:
+            force_scalar(m2)
+            ref = run_fingerprint("slo", seed=5)
+    assert vec == ref
+    assert vec["trace_bytes"] != flat["trace_bytes"]
 
 
 # --------------------------------------------------------------- SoA slab
